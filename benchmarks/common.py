@@ -1,0 +1,99 @@
+"""Shared benchmark plumbing: use-case data, model zoo, table printing."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.mapping import (map_kmeans, map_naive_bayes, map_svm,
+                                map_tree_ensemble)
+from repro.data.janestreet_like import SWITCH_FEATURES
+from repro.ml.kmeans import fit_kmeans, predict_kmeans
+from repro.ml.metrics import accuracy, precision_recall_f1
+from repro.ml.naive_bayes import fit_gaussian_nb, predict_nb
+from repro.ml.svm import fit_linear_svm, predict_svm
+from repro.ml.trees import (fit_decision_tree, fit_random_forest,
+                            fit_xgboost, predict_margin_xgboost,
+                            predict_tree_ensemble)
+
+MODELS = ("SVM", "Bayes", "KMeans", "DT", "RF", "XGB")
+
+
+def load_usecase(name: str, n=20000, seed=0, switch_features=True):
+    """-> (xtr, ytr, xte, yte) with the paper's 5 switch features."""
+    if name == "anomaly":
+        from repro.data.unsw_like import make_unsw_like, train_test_split
+        x, y = make_unsw_like(n, seed=seed, n_features=5)
+        return train_test_split(x, y)
+    from repro.data.janestreet_like import make_janestreet_like, \
+        train_test_split
+    x, y = make_janestreet_like(n, seed=seed)
+    if switch_features:
+        x = x[:, SWITCH_FEATURES]
+    return train_test_split(x, y)
+
+
+def fit_and_map(model: str, xtr, ytr, *, n_bins=64, action_bits=16,
+                n_trees=10, max_depth=5, seed=0):
+    """Train one switch-size model and map it. -> (direct_fn, artifact)."""
+    f = xtr.shape[1]
+    if model == "SVM":
+        m = fit_linear_svm(xtr, ytr, n_classes=2, seed=seed)
+        return (lambda x: predict_svm(m, x),
+                map_svm(m, xtr, n_bins=n_bins, action_bits=action_bits), m)
+    if model == "Bayes":
+        m = fit_gaussian_nb(xtr, ytr, n_classes=2)
+        return (lambda x: predict_nb(m, x),
+                map_naive_bayes(m, xtr, n_bins=n_bins,
+                                action_bits=action_bits), m)
+    if model == "KMeans":
+        m = fit_kmeans(xtr, k=2, seed=seed)
+        # align cluster->class by majority vote on train
+        assign = np.asarray(predict_kmeans(m, xtr))
+        maj = [int(np.round(np.mean(np.asarray(ytr)[assign == c]))
+                   if np.any(assign == c) else c) for c in range(2)]
+        flip = maj[0] == 1
+
+        def direct(x):
+            p = predict_kmeans(m, x)
+            return 1 - p if flip else p
+
+        art = map_kmeans(m, xtr, n_bins=n_bins, action_bits=action_bits)
+        art.flip = flip
+        return (direct, art, m)
+    if model == "DT":
+        m = fit_decision_tree(xtr, ytr, n_classes=2, max_depth=max_depth)
+        return (lambda x: predict_tree_ensemble(m, x),
+                map_tree_ensemble(m, f, action_bits=action_bits), m)
+    if model == "RF":
+        m = fit_random_forest(xtr, ytr, n_classes=2, n_trees=n_trees,
+                              max_depth=max_depth, seed=seed)
+        return (lambda x: predict_tree_ensemble(m, x),
+                map_tree_ensemble(m, f, action_bits=action_bits), m)
+    if model == "XGB":
+        m = fit_xgboost(xtr, ytr, n_trees=n_trees, max_depth=max_depth)
+        return (lambda x: predict_tree_ensemble(m, x),
+                map_tree_ensemble(m, f, action_bits=action_bits), m)
+    raise ValueError(model)
+
+
+def table_pred_maybe_flip(art, x):
+    from repro.core.inference import table_predict
+    pred, conf = table_predict(art, x)
+    if getattr(art, "flip", False):
+        pred = 1 - pred
+    return pred, conf
+
+
+def print_table(title, headers, rows):
+    print(f"\n## {title}")
+    widths = [max(len(str(h)), max((len(str(r[i])) for r in rows),
+                                   default=0)) for i, h in enumerate(headers)]
+    line = " | ".join(str(h).ljust(w) for h, w in zip(headers, widths))
+    print(line)
+    print("-+-".join("-" * w for w in widths))
+    for r in rows:
+        print(" | ".join(str(c).ljust(w) for c, w in zip(r, widths)))

@@ -1,0 +1,78 @@
+"""Figs 10-11 analog: hybrid confidence-threshold sweeps.
+
+(a) fraction of traffic handled at the switch vs tau;
+(b) hybrid misclassification vs tau;
+(c) switch-handled error vs backend error on the same (low-confidence)
+    rows — the paper's "low-confidence rows are hard for the backend too".
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import load_usecase, print_table
+from repro.core.inference import table_predict
+from repro.core.mapping import map_tree_ensemble
+from repro.ml.metrics import accuracy
+from repro.ml.trees import (fit_random_forest, fit_xgboost,
+                            predict_margin_xgboost, predict_tree_ensemble)
+
+
+def run(n=20000, seed=0):
+    out = {}
+    for use_case in ("anomaly", "finance"):
+        if use_case == "anomaly":
+            from repro.data.unsw_like import make_unsw_like, train_test_split
+            x, y = make_unsw_like(n, seed=seed, n_features=10)
+            xtr, ytr, xte, yte = train_test_split(x, y)
+            cols = list(range(5))
+            sw = fit_random_forest(xtr[:, cols], ytr, n_classes=2,
+                                   n_trees=10, max_depth=5, seed=seed)
+            backend = fit_random_forest(xtr, ytr, n_classes=2, n_trees=40,
+                                        max_depth=8, seed=seed + 1,
+                                        max_features=10)
+            be_pred = predict_tree_ensemble(backend, xte)
+        else:
+            from repro.data.janestreet_like import (SWITCH_FEATURES,
+                                                    make_janestreet_like,
+                                                    train_test_split)
+            x, y = make_janestreet_like(n, seed=seed)
+            xtr, ytr, xte, yte = train_test_split(x, y)
+            cols = SWITCH_FEATURES
+            sw = fit_xgboost(xtr[:, cols], ytr, n_trees=10, max_depth=5)
+            backend = fit_xgboost(xtr, ytr, n_trees=60, max_depth=8)
+            be_pred = (predict_margin_xgboost(backend, xte) > 0).astype(
+                jnp.int32)
+
+        art = map_tree_ensemble(sw, len(cols))
+        sw_pred, conf = table_predict(art, xte[:, cols])
+        be_err = 1.0 - accuracy(yte, be_pred)
+        rows = []
+        for tau in (0.5, 0.55, 0.6, 0.65, 0.7, 0.8, 0.9):
+            handled = np.asarray(conf >= tau)
+            pred = np.where(handled, np.asarray(sw_pred),
+                            np.asarray(be_pred))
+            hy_err = 1.0 - accuracy(yte, pred)
+            frac = float(handled.mean())
+            # error of the switch on its handled rows vs backend on same rows
+            if handled.any():
+                sw_err_h = float((np.asarray(sw_pred) != np.asarray(yte))
+                                 [handled].mean())
+                be_err_h = float((np.asarray(be_pred) != np.asarray(yte))
+                                 [handled].mean())
+            else:
+                sw_err_h = be_err_h = float("nan")
+            rows.append([tau, f"{frac:.3f}", f"{hy_err:.4f}",
+                         f"{sw_err_h:.4f}", f"{be_err_h:.4f}"])
+        print_table(
+            f"Fig 10/11 — {use_case}: hybrid sweep "
+            f"(backend-only err {be_err:.4f})",
+            ["tau", "frac_switch", "hybrid_err", "switch_err@handled",
+             "backend_err@handled"], rows)
+        out[use_case] = rows
+    return out
+
+
+if __name__ == "__main__":
+    run()

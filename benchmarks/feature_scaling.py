@@ -1,0 +1,83 @@
+"""Figs 4-5 analog: memory scaling with feature count; max model size
+that fits a fixed budget (the switch-pipeline analog = VMEM budget).
+
+Fig 4: artifact memory vs number of features (DT, both use cases) and
+trees-that-fit vs features (RF) under the VMEM budget.
+Fig 5: max features per model under the budget.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import fit_and_map, load_usecase, print_table
+from repro.core.mapping import map_tree_ensemble
+from repro.core.resources import artifact_resources
+from repro.kernels.ops import VMEM_BUDGET_BYTES
+from repro.ml.trees import fit_random_forest
+
+
+def run(n=12000, seed=0):
+    # -- Fig 4a/b: DT memory vs features ------------------------------------
+    rows = []
+    for use_case in ("anomaly", "finance"):
+        if use_case == "anomaly":
+            from repro.data.unsw_like import make_unsw_like, train_test_split
+            x, y = make_unsw_like(n, seed=seed, n_features=10)
+        else:
+            from repro.data.janestreet_like import (make_janestreet_like,
+                                                    train_test_split)
+            x, y = make_janestreet_like(n, seed=seed)
+        xtr, ytr, xte, yte = train_test_split(x, y)
+        for f in (2, 4, 6, 8, 10):
+            _, art, _ = fit_and_map("DT", xtr[:, :f], ytr, max_depth=5)
+            res = artifact_resources(art)
+            rows.append([use_case, f, res.entries, f"{res.kib:.1f}"])
+    print_table("Fig 4 — DT memory vs #features",
+                ["use_case", "features", "entries", "KiB"], rows)
+
+    # -- Fig 4c: trees that fit vs features (RF, anomaly) --------------------
+    from repro.data.unsw_like import make_unsw_like, train_test_split
+    x, y = make_unsw_like(n, seed=seed, n_features=10)
+    xtr, ytr, _, _ = train_test_split(x, y)
+    fit_rows = []
+    for f in (2, 4, 6, 8):
+        max_fit = 0
+        for trees in (2, 5, 10, 20, 40, 80):
+            try:
+                rf = fit_random_forest(xtr[:, :f], ytr, n_classes=2,
+                                       n_trees=trees, max_depth=4, seed=seed)
+                art = map_tree_ensemble(rf, f)
+            except ValueError:        # decision-table blowup guard
+                break
+            bits = artifact_resources(art).bits
+            if bits / 8 <= VMEM_BUDGET_BYTES:
+                max_fit = trees
+        fit_rows.append([f, max_fit])
+    print_table("Fig 4c — max RF trees fitting the VMEM budget "
+                f"({VMEM_BUDGET_BYTES >> 20} MiB)",
+                ["features", "max_trees(d=4)"], fit_rows)
+
+    # -- Fig 5: max features per model under the budget ----------------------
+    from repro.data.janestreet_like import make_janestreet_like
+    from repro.data.janestreet_like import train_test_split as js_split
+    x, y = make_janestreet_like(n, seed=seed)
+    xtr, ytr, _, _ = js_split(x, y)
+    f5 = []
+    for model in ("SVM", "Bayes", "KMeans", "DT"):
+        best = 0
+        for f in (5, 10, 20, 40, 80, 130):
+            try:
+                _, art, _ = fit_and_map(model, xtr[:, :f], ytr, max_depth=4)
+            except ValueError:
+                break
+            if artifact_resources(art).bits / 8 <= VMEM_BUDGET_BYTES:
+                best = f
+        f5.append([model, best])
+    print_table("Fig 5 — max features under the budget (finance)",
+                ["model", "max_features"], f5)
+    return rows, fit_rows, f5
+
+
+if __name__ == "__main__":
+    run()

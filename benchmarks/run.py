@@ -1,0 +1,55 @@
+"""Run every paper-table benchmark: ``python -m benchmarks.run``.
+
+One module per paper table/figure (see DESIGN.md §7). Pass --quick for
+reduced sample sizes (CI), --only <name> for a single benchmark.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+BENCHES = [
+    ("resource_anomaly", "Table 1"),
+    ("resource_finance", "Table 2"),
+    ("scalability", "Table 3"),
+    ("feature_scaling", "Figs 4-5"),
+    ("baseline_comparison", "Figs 6-7"),
+    ("throughput_latency", "Fig 8"),
+    ("calc_error", "Fig 9"),
+    ("confidence_sweep", "Figs 10-11"),
+    ("update_time", "§7.9"),
+]
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args(argv)
+
+    n = 6000 if args.quick else 20000
+    t_all = time.time()
+    failures = []
+    for mod_name, paper_ref in BENCHES:
+        if args.only and args.only != mod_name:
+            continue
+        print(f"\n{'=' * 70}\n{paper_ref}  ->  benchmarks.{mod_name}"
+              f"\n{'=' * 70}")
+        t0 = time.time()
+        try:
+            mod = __import__(f"benchmarks.{mod_name}", fromlist=["run"])
+            mod.run(n=n)
+            print(f"[{mod_name}: {time.time() - t0:.1f}s]")
+        except Exception:   # keep the suite going; report at the end
+            import traceback
+            traceback.print_exc()
+            failures.append(mod_name)
+    print(f"\ntotal: {time.time() - t_all:.1f}s; "
+          f"{len(failures)} failures {failures or ''}")
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,98 @@
+"""Table 3 analog: small/medium/large switch ensembles vs the full
+backend, switch-only and hybrid (tau = 0.7) ML performance.
+
+Anomaly: Random Forest (paper: RF most suitable — low variance).
+Finance: XGBoost (paper: boosting controls bias for the minority class).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import load_usecase, print_table
+from repro.core.hybrid import hybrid_predict
+from repro.core.inference import table_predict
+from repro.core.mapping import map_tree_ensemble
+from repro.ml.metrics import accuracy, precision_recall_f1
+from repro.ml.trees import (fit_random_forest, fit_xgboost,
+                            predict_margin_xgboost, predict_tree_ensemble)
+
+SIZES = {"Small": dict(features=4, n_trees=6, max_depth=4),
+         "Medium": dict(features=5, n_trees=10, max_depth=5),
+         "Large": dict(features=6, n_trees=14, max_depth=6)}
+
+
+def _metrics(y, pred):
+    acc = accuracy(y, pred)
+    p, r, f1 = precision_recall_f1(y, pred)
+    return acc, p, r, f1
+
+
+def run(n=20000, seed=0, threshold=0.7):
+    out = {}
+    for use_case, kind in (("anomaly", "rf"), ("finance", "xgb")):
+        if use_case == "anomaly":
+            from repro.data.unsw_like import make_unsw_like, train_test_split
+            x, y = make_unsw_like(n, seed=seed, n_features=10)
+            xtr, ytr, xte, yte = train_test_split(x, y)
+            if kind == "rf":
+                backend_model = fit_random_forest(
+                    xtr, ytr, n_classes=2, n_trees=40, max_depth=8,
+                    seed=seed + 1, max_features=10)
+                backend_fn = lambda xx: predict_tree_ensemble(
+                    backend_model, xx)
+        else:
+            from repro.data.janestreet_like import (make_janestreet_like,
+                                                    train_test_split)
+            x, y = make_janestreet_like(n, seed=seed)
+            xtr, ytr, xte, yte = train_test_split(x, y)
+            backend_model = fit_xgboost(xtr, ytr, n_trees=60, max_depth=8)
+            backend_fn = lambda xx: (predict_margin_xgboost(
+                backend_model, xx) > 0).astype(jnp.int32)
+
+        bacc, bp, br, bf1 = _metrics(yte, backend_fn(xte))
+        rows = []
+        for size, hp in SIZES.items():
+            f = hp["features"]
+            if use_case == "finance":
+                from repro.data.janestreet_like import SWITCH_FEATURES
+                cols = (SWITCH_FEATURES + [7])[:f]
+            else:
+                cols = list(range(f))
+            xs_tr, xs_te = xtr[:, cols], xte[:, cols]
+            if kind == "rf":
+                sw = fit_random_forest(xs_tr, ytr, n_classes=2,
+                                       n_trees=hp["n_trees"],
+                                       max_depth=hp["max_depth"], seed=seed)
+            else:
+                # coarse bins + gamma pruning keep decision tables feasible
+                # (paper §4.2 / §7.8: prune & bin to fit the pipeline)
+                sw = fit_xgboost(xs_tr, ytr, n_trees=hp["n_trees"],
+                                 max_depth=hp["max_depth"], n_bins=16,
+                                 gamma=0.2)
+            art = map_tree_ensemble(sw, f, max_decision_entries=8_000_000)
+            pred, conf = table_predict(art, xs_te)
+            acc, p, r, f1 = _metrics(yte, pred)
+
+            hy = hybrid_predict(
+                art, lambda _rows, c=cols: backend_fn(xte), xs_te, threshold)
+            hacc, _, _, hf1 = _metrics(yte, hy.pred)
+            rows.append([size, f, hp["n_trees"], hp["max_depth"],
+                         f"{acc:.4f}", f"{p:.4f}", f"{r:.4f}", f"{f1:.4f}",
+                         f"{hacc:.4f}", f"{hf1:.4f}",
+                         f"{float(hy.fraction_handled):.3f}"])
+        rows.append(["Backend", xtr.shape[1],
+                     200 if kind == "rf" else 100, "-",
+                     f"{bacc:.4f}", f"{bp:.4f}", f"{br:.4f}", f"{bf1:.4f}",
+                     "-", "-", "-"])
+        print_table(
+            f"Table 3 — {use_case} ({kind.upper()}), confidence {threshold}",
+            ["size", "feat", "trees", "depth", "acc", "prec", "recall",
+             "F1", "hybrid_acc", "hybrid_F1", "frac_switch"], rows)
+        out[use_case] = rows
+    return out
+
+
+if __name__ == "__main__":
+    run()

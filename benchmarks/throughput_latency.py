@@ -1,0 +1,59 @@
+"""Fig 8 analog: switch-pipeline vs direct-model classification throughput.
+
+The paper's Fig 8 compares Tofino line-rate against a CPU baseline. Here
+both paths run on the same device, so the meaningful quantities are
+  * classifications/s of the fused table pipeline (jit, XLA path),
+  * classifications/s of direct model evaluation,
+  * the batch-size scaling curve (the "line rate" analog: the table
+    pipeline's cost is O(F) lookups/row regardless of model size — the
+    paper's scaling property — while direct ensembles walk every tree).
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import fit_and_map, load_usecase, print_table
+from repro.core.inference import table_predict
+from repro.kernels.ops import fused_classify
+
+
+def _bench(fn, *args, iters=20):
+    fn(*args)[0].block_until_ready()          # compile + warm
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.tree.leaves(out)[0].block_until_ready()
+    return (time.perf_counter() - t0) / iters
+
+
+def run(n=20000, seed=0):
+    xtr, ytr, xte, yte = load_usecase("finance", n=n, seed=seed)
+    rows = []
+    for model in ("RF", "XGB", "SVM"):
+        direct, art, m = fit_and_map(model, xtr, ytr, n_trees=10,
+                                     max_depth=5, seed=seed)
+        jit_table = jax.jit(lambda a, x: table_predict(a, x))
+        jit_direct = jax.jit(lambda x: direct(x)) if model != "KMeans" \
+            else None
+        for batch in (1024, 8192):
+            xb = jnp.asarray(xte[:batch]) if batch <= len(xte) else \
+                jnp.tile(jnp.asarray(xte), (batch // len(xte) + 1, 1))[:batch]
+            dt_t = _bench(jit_table, art, xb)
+            dt_d = _bench(lambda x: (jit_direct(x),), xb)
+            rows.append([model, batch,
+                         f"{batch / dt_t / 1e6:.2f}M/s",
+                         f"{batch / dt_d / 1e6:.2f}M/s",
+                         f"{dt_t * 1e6 / batch:.3f}us",
+                         f"{dt_d * 1e6 / batch:.3f}us"])
+    print_table("Fig 8 — throughput/latency: table pipeline vs direct model",
+                ["model", "batch", "table_rate", "direct_rate",
+                 "table_us/row", "direct_us/row"], rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

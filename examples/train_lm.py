@@ -1,0 +1,65 @@
+"""End-to-end driver: train a ~100M-parameter LM for a few hundred steps
+with the full production loop — deterministic sharded data, grad
+accumulation, AdamW + cosine, async checkpointing, watchdog, restart.
+
+    PYTHONPATH=src python examples/train_lm.py --steps 300
+    (CPU-sized default: --steps 30 finishes in minutes; the loop and every
+    subsystem are identical at any scale — the dry-run lowers this exact
+    step function on the 512-chip mesh.)
+"""
+
+import argparse
+import dataclasses
+
+from repro.models.config import ArchConfig
+from repro.models import model as M
+from repro.training.loop import TrainConfig, train
+from repro.training.optim import AdamWConfig
+
+# ~100M decoder (qwen3-flavored: GQA + qk-norm), CPU-trainable
+GPT_100M = ArchConfig(
+    name="gpt-100m",
+    family="dense",
+    n_layers=12,
+    d_model=640,
+    n_heads=10,
+    n_kv_heads=2,
+    d_ff=2560,
+    vocab_size=32000,
+    d_head=64,
+    qk_norm=True,
+)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=30)
+    ap.add_argument("--seq-len", type=int, default=256)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--microbatches", type=int, default=2)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_gpt100m")
+    args = ap.parse_args()
+
+    shapes = M.model_param_shapes(GPT_100M)
+    print(f"model: {GPT_100M.name}  params "
+          f"{M.count_params(shapes) / 1e6:.1f}M")
+
+    tcfg = TrainConfig(
+        steps=args.steps,
+        seq_len=args.seq_len,
+        global_batch=args.global_batch,
+        microbatches=args.microbatches,
+        opt=AdamWConfig(lr_peak=6e-4, warmup_steps=max(args.steps // 10, 5),
+                        total_steps=args.steps),
+        ckpt_dir=args.ckpt_dir,
+        ckpt_every=max(args.steps // 3, 10),
+        log_every=5,
+    )
+    params, hist = train(GPT_100M, tcfg, seed=0)
+    print(f"\nloss {hist[0]['loss_total']:.4f} -> "
+          f"{hist[-1]['loss_total']:.4f} over {len(hist)} steps")
+    print(f"checkpoints in {args.ckpt_dir} (restart by re-running)")
+
+
+if __name__ == "__main__":
+    main()

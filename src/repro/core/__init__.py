@@ -1,0 +1,18 @@
+"""IIsy core: model -> table mapping, table inference, hybrid deployment."""
+
+from repro.core.artifact import TableArtifact
+from repro.core.mapping import (
+    map_tree_ensemble,
+    map_svm,
+    map_naive_bayes,
+    map_kmeans,
+)
+from repro.core.inference import (
+    table_predict,
+    table_predict_per_tree,
+    tree_vote_predict,
+    feature_bins,
+)
+from repro.core.hybrid import hybrid_predict, hybrid_serve, dispatch, combine
+from repro.core.quantize import FixedPoint, quantize_fixed, dequantize, relative_error
+from repro.core.resources import artifact_resources, ResourceReport

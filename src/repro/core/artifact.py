@@ -1,0 +1,69 @@
+"""TableArtifact — the deployable output of IIsy's mapping tool.
+
+The artifact is what the control plane would load into switch tables. Every
+array is a *runtime input* to the jitted inference step (never a baked
+constant), so retraining swaps tables without recompiling — the paper's
+"model updates by table updates only" property (§4.4).
+
+Two families share the container:
+
+Tree ensembles (dt / rf / xgb / iforest):
+  edges   (F, U)      union of the ensemble's thresholds per feature (+inf pad)
+  ftable  (F, U+1, T) per-union-bin, per-tree code (tree-local bin rank)
+  strides (T, F)      mixed-radix strides turning codes into a decision key
+  dtable_class (T, S) leaf class id per key              (vote aggregation)
+  dtable_value (T, S) quantized leaf payload per key     (weight / path len)
+
+Classical (svm / nb / kmeans):
+  edges   (F, U)      quantile bin edges (+inf pad)
+  vtable  (F, U+1, M) quantized per-bin partial terms
+                      M = hyperplanes | classes | clusters
+  consts  (M,)        intercept sums / log priors / zeros
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.quantize import FixedPoint
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class TableArtifact:
+    # shared
+    edges: jax.Array
+    agg: str = dataclasses.field(metadata=dict(static=True))
+    # 'vote' | 'wsum_sigmoid' | 'iforest' | 'svm_ovo' | 'nb_log' | 'kmeans'
+    n_classes: int = dataclasses.field(metadata=dict(static=True))
+
+    # tree family
+    ftable: Optional[jax.Array] = None
+    strides: Optional[jax.Array] = None
+    dtable_class: Optional[jax.Array] = None
+    dtable_value: Optional[FixedPoint] = None
+
+    # classical family
+    vtable: Optional[FixedPoint] = None
+    consts: Optional[jax.Array] = None
+
+    # svm extras
+    pairs: Optional[jax.Array] = None          # (m, 2) class pairs
+
+    # scalars used by aggregation
+    base_score: float = dataclasses.field(metadata=dict(static=True), default=0.0)
+    learning_rate: float = dataclasses.field(metadata=dict(static=True), default=1.0)
+    iforest_subsample: float = dataclasses.field(metadata=dict(static=True), default=256.0)
+
+    @property
+    def n_features(self) -> int:
+        return self.edges.shape[0]
+
+    @property
+    def n_trees(self) -> int:
+        return 0 if self.ftable is None else self.ftable.shape[2]

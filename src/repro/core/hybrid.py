@@ -1,0 +1,78 @@
+"""Hybrid deployment (§2.2.1, §7.7): small switch model + large backend.
+
+``hybrid_predict`` is the analysis-friendly dense form used by the paper's
+sweeps (Figs 10-11). ``dispatch``/``combine`` are the serving form: the
+low-confidence subset is *compacted* (MoE-dispatch style) so the expensive
+backend only sees the forwarded queries — the load-reduction benefit in
+collective/compute terms.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.artifact import TableArtifact
+from repro.core.inference import table_predict
+
+
+@dataclasses.dataclass
+class HybridResult:
+    pred: jax.Array          # (N,) final classes
+    switch_pred: jax.Array   # (N,) switch-tier classes
+    confidence: jax.Array    # (N,)
+    handled: jax.Array       # (N,) bool: True = answered at the switch
+    fraction_handled: jax.Array
+
+
+def hybrid_predict(art: TableArtifact, backend_fn: Callable, x,
+                   threshold: float) -> HybridResult:
+    """Dense hybrid: backend evaluated everywhere, selected where needed."""
+    sw_pred, conf = table_predict(art, x)
+    handled = conf >= threshold
+    be_pred = backend_fn(x)
+    pred = jnp.where(handled, sw_pred, be_pred)
+    return HybridResult(pred=pred, switch_pred=sw_pred, confidence=conf,
+                        handled=handled,
+                        fraction_handled=jnp.mean(handled.astype(jnp.float32)))
+
+
+def dispatch(x: jax.Array, forward_mask: jax.Array, capacity: int):
+    """Compact the forwarded rows into a fixed-capacity buffer.
+
+    Returns (buf (capacity, F), idx (capacity,), valid (capacity,)).
+    Rows beyond capacity are dropped from forwarding (the switch would answer
+    them itself under congestion — paper §7.1.2's trade-off); callers keep the
+    switch prediction for them.
+    """
+    n = x.shape[0]
+    order = jnp.argsort(~forward_mask, stable=True)        # forwarded first
+    idx = order[:capacity]
+    valid = forward_mask[idx]
+    buf = x[idx]
+    return buf, idx, valid
+
+
+def combine(switch_pred: jax.Array, backend_pred_subset: jax.Array,
+            idx: jax.Array, valid: jax.Array) -> jax.Array:
+    """Scatter backend answers for forwarded rows back over switch answers."""
+    upd = jnp.where(valid, backend_pred_subset, switch_pred[idx])
+    return switch_pred.at[idx].set(upd)
+
+
+def hybrid_serve(art: TableArtifact, backend_fn: Callable, x,
+                 threshold: float, capacity: int):
+    """Serving-form hybrid with bounded backend batch.
+
+    backend_fn receives exactly ``capacity`` rows (padded with whatever rows
+    were not forwarded) — a static shape, so the backend step stays jittable.
+    """
+    sw_pred, conf = table_predict(art, x)
+    fwd = conf < threshold
+    buf, idx, valid = dispatch(x, fwd, capacity)
+    be_pred = backend_fn(buf)
+    pred = combine(sw_pred, be_pred, idx, valid)
+    return pred, jnp.mean(fwd.astype(jnp.float32))

@@ -1,0 +1,119 @@
+"""Pure-jnp table inference — the reference "switch data plane".
+
+This module is the oracle semantics: kernels/ensemble_lookup reimplements the
+same pipeline as a fused Pallas kernel. Both return ``(pred, confidence)``.
+
+Stages (mirrors the match-action pipeline):
+  1. per-feature range match           -> union bin        (parser + feature tables)
+  2. per-tree code gather + mixed radix -> decision key
+  3. per-tree decision-table gather     -> leaf payload
+  4. aggregation                        -> class + confidence
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.artifact import TableArtifact
+from repro.core.quantize import dequantize
+
+
+def feature_bins(edges: jax.Array, x: jax.Array) -> jax.Array:
+    """(N, F) union-bin ids; edges padded with +inf never match."""
+    return jnp.sum(x[:, :, None] > edges[None, :, :], axis=2).astype(jnp.int32)
+
+
+def _c_factor(n):
+    n = jnp.maximum(n, 2.0)
+    return 2.0 * (jnp.log(n - 1.0) + 0.5772156649) - 2.0 * (n - 1.0) / n
+
+
+def table_predict(art: TableArtifact, x: jax.Array):
+    """Classify a batch. Returns (pred (N,), confidence (N,))."""
+    x = jnp.asarray(x, jnp.float32)
+    bins = feature_bins(art.edges, x)                       # (N, F)
+    f_idx = jnp.arange(art.n_features)[None, :]
+
+    if art.ftable is not None:                              # tree family
+        codes = art.ftable[f_idx, bins]                     # (N, F, T)
+        keys = jnp.einsum("nft,tf->nt", codes.astype(jnp.int32),
+                          art.strides).astype(jnp.int32)    # (N, T)
+        t_idx = jnp.arange(art.n_trees)[None, :]
+        if art.agg == "vote":
+            cls = art.dtable_class[t_idx, keys]             # (N, T)
+            votes = jax.nn.one_hot(cls, art.n_classes,
+                                   dtype=jnp.float32).sum(axis=1)
+            pred = jnp.argmax(votes, axis=1)
+            conf = jnp.max(votes, axis=1) / art.n_trees
+            return pred, conf
+        vals_q = art.dtable_value.q[t_idx, keys]            # (N, T) int32
+        # integer-domain sum (what the switch ALU does), one dequant at the end
+        total = vals_q.sum(axis=1).astype(jnp.float32) / art.dtable_value.scale
+        if art.agg == "wsum_sigmoid":
+            margin = art.base_score + art.learning_rate * total
+            p1 = jax.nn.sigmoid(margin)
+            pred = (p1 > 0.5).astype(jnp.int32)
+            conf = jnp.maximum(p1, 1.0 - p1)
+            return pred, conf
+        if art.agg == "iforest":
+            e_path = total / art.n_trees
+            score = 2.0 ** (-e_path / _c_factor(jnp.float32(art.iforest_subsample)))
+            pred = (score > 0.5).astype(jnp.int32)
+            conf = jnp.maximum(score, 1.0 - score)
+            return pred, conf
+        raise ValueError(art.agg)
+
+    # classical family
+    vals_q = art.vtable.q[f_idx, bins]                      # (N, F, M)
+    total = vals_q.sum(axis=1).astype(jnp.float32) / art.vtable.scale
+    if art.agg == "svm_ovo":
+        planes = total + art.consts[None, :]                # (N, m)
+        win_i = planes > 0
+        n = planes.shape[0]
+        votes = jnp.zeros((n, art.n_classes), jnp.float32)
+        votes = votes.at[:, art.pairs[:, 0]].add(win_i.astype(jnp.float32))
+        votes = votes.at[:, art.pairs[:, 1]].add((~win_i).astype(jnp.float32))
+        pred = jnp.argmax(votes, axis=1)
+        if planes.shape[1] == 1:                            # binary: margin conf
+            conf = jax.nn.sigmoid(2.0 * jnp.abs(planes[:, 0]))
+        else:
+            conf = jnp.max(votes, axis=1) / planes.shape[1]
+        return pred, conf
+    if art.agg == "nb_log":
+        joint = total + art.consts[None, :]                 # (N, C) log joint
+        pred = jnp.argmax(joint, axis=1)
+        conf = jnp.max(jax.nn.softmax(joint, axis=1), axis=1)
+        return pred, conf
+    if art.agg == "kmeans":
+        d2 = total                                          # (N, K)
+        pred = jnp.argmin(d2, axis=1)
+        # margin confidence: how decisively the nearest beats the runner-up
+        top2 = jax.lax.top_k(-d2, 2)[0]
+        conf = 1.0 - jnp.exp(top2[:, 1] - top2[:, 0])       # in [0, 1)
+        return pred, conf
+    raise ValueError(art.agg)
+
+
+def table_predict_per_tree(art: TableArtifact, x: jax.Array) -> jax.Array:
+    """Per-tree classes (N, T) — used by equivalence tests."""
+    x = jnp.asarray(x, jnp.float32)
+    bins = feature_bins(art.edges, x)
+    f_idx = jnp.arange(art.n_features)[None, :]
+    codes = art.ftable[f_idx, bins]
+    keys = jnp.einsum("nft,tf->nt", codes.astype(jnp.int32),
+                      art.strides).astype(jnp.int32)
+    t_idx = jnp.arange(art.n_trees)[None, :]
+    return art.dtable_class[t_idx, keys]
+
+
+def tree_vote_predict(ens, x):
+    """Direct (non-table) per-tree majority vote — the apples-to-apples
+    baseline for the table pipeline (paper's per-tree 'classification
+    results of all trees')."""
+    from repro.ml.trees import tree_leaf_indices
+    leaf_idx = tree_leaf_indices(ens, x)                    # (T, N)
+    counts = jnp.take_along_axis(ens.leaf, leaf_idx[:, :, None], axis=1)
+    cls = jnp.argmax(counts, axis=2)                        # (T, N)
+    votes = jax.nn.one_hot(cls.T, ens.n_classes, dtype=jnp.float32).sum(axis=1)
+    return jnp.argmax(votes, axis=1), jnp.max(votes, axis=1) / ens.n_trees

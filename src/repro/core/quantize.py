@@ -1,0 +1,46 @@
+"""Fixed-point quantization — the paper's "action data bits" knob (§7.7, Fig 9).
+
+Table payloads on a switch are carried in metadata of a configured bit width.
+We model this as symmetric fixed point: ``q = round(v * scale)`` stored in
+``bits``-wide signed integers, with one shared scale per table so summation
+across tables stays exact in the integer domain (what a switch ALU does).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class FixedPoint:
+    q: jax.Array           # int32 payload (values fit in `bits` signed bits)
+    scale: jax.Array       # scalar float32
+    bits: int = dataclasses.field(metadata=dict(static=True), default=16)
+
+
+def quantize_fixed(v, bits: int) -> FixedPoint:
+    """Quantize array ``v`` to signed fixed point with ``bits`` total bits."""
+    v = np.asarray(v, np.float32)
+    max_abs = float(np.max(np.abs(v))) if v.size else 1.0
+    max_abs = max(max_abs, 1e-12)
+    qmax = float(2 ** (bits - 1) - 1)
+    scale = qmax / max_abs
+    q = np.clip(np.round(v * scale), -qmax - 1, qmax).astype(np.int32)
+    return FixedPoint(q=jnp.asarray(q), scale=jnp.float32(scale), bits=bits)
+
+
+def dequantize(fp: FixedPoint) -> jax.Array:
+    return fp.q.astype(jnp.float32) / fp.scale
+
+
+def relative_error(fp: FixedPoint, v) -> float:
+    """Mean relative calc error of the quantized representation (Fig 9)."""
+    v = jnp.asarray(v, jnp.float32)
+    d = dequantize(fp)
+    denom = jnp.maximum(jnp.abs(v), 1e-9)
+    return float(jnp.mean(jnp.abs(d - v) / denom))

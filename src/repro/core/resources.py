@@ -1,0 +1,74 @@
+"""Switch-resource accounting for a TableArtifact (Tables 1-2 analog).
+
+We report the quantities the paper reports, computed from the artifact:
+  tables   — number of lookup tables (feature tables + decision tables + agg)
+  entries  — total table entries
+  bits     — total payload storage
+  stages   — pipeline-stage analog: dependent lookup rounds. IIsy's mapping
+             is constant-stage: features (parallel) -> decisions (parallel)
+             -> aggregation, i.e. 3, independent of tree count/depth (§4.1).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import numpy as np
+
+from repro.core.artifact import TableArtifact
+
+
+@dataclasses.dataclass
+class ResourceReport:
+    tables: int
+    entries: int
+    bits: int
+    stages: int
+
+    @property
+    def kib(self) -> float:
+        return self.bits / 8 / 1024
+
+    def row(self) -> str:
+        return (f"tables={self.tables} entries={self.entries} "
+                f"mem={self.kib:.1f}KiB stages={self.stages}")
+
+
+def _code_bits(radix: np.ndarray) -> np.ndarray:
+    return np.ceil(np.log2(np.maximum(radix, 2))).astype(np.int64)
+
+
+def artifact_resources(art: TableArtifact) -> ResourceReport:
+    edges = np.asarray(art.edges)
+    f_dim = edges.shape[0]
+    valid_edges = np.isfinite(edges).sum(axis=1)            # (F,)
+
+    if art.ftable is not None:
+        n_trees = np.asarray(art.strides).shape[0]
+        # per-tree radices recoverable from the feature-table code maxima
+        ftab = np.asarray(art.ftable)                       # (F, U+1, T)
+        radix = ftab.max(axis=1) + 1                        # (F, T)
+        sizes = radix.astype(np.int64).prod(axis=0)         # (T,)
+        feat_entries = int((valid_edges + 1).sum())
+        feat_bits = int(((valid_edges + 1)[:, None]
+                         * _code_bits(radix)[...]).sum())
+        dec_entries = int(sizes.sum())
+        payload_bits = (art.dtable_value.bits
+                        if art.agg != "vote"
+                        else max(1, math.ceil(math.log2(max(art.n_classes, 2)))))
+        dec_bits = int(sizes.sum()) * payload_bits
+        return ResourceReport(
+            tables=f_dim + n_trees + 1,
+            entries=feat_entries + dec_entries,
+            bits=feat_bits + dec_bits,
+            stages=3)
+
+    # classical: feature value tables + one aggregation/compare stage
+    m = art.vtable.q.shape[2]
+    feat_entries = int((valid_edges + 1).sum())
+    bits = feat_entries * m * art.vtable.bits
+    extra_tables = 1 if art.agg != "nb_log" else 2   # paper: NB uses 2 tables
+    return ResourceReport(tables=f_dim + extra_tables,
+                          entries=feat_entries, bits=bits,
+                          stages=3 if art.agg != "nb_log" else 4)

@@ -1,0 +1,2 @@
+from repro.data.unsw_like import make_unsw_like
+from repro.data.janestreet_like import make_janestreet_like

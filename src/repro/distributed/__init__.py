@@ -1,0 +1,9 @@
+"""Distribution: mesh-aware sharding rules, specs for params/batches/caches."""
+
+from repro.distributed.sharding import (
+    param_specs,
+    batch_specs,
+    cache_specs,
+    opt_state_specs,
+    named_sharding_tree,
+)

@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the IIsy hot path (validated interpret=True on CPU).
+
+bucketize        -- per-feature range match (the TCAM analog)
+ensemble_lookup  -- fused tree-family match-action pipeline
+classical_lookup -- fused SVM/NB/K-Means per-feature value tables
+
+ops.py holds the jitd public wrappers (+ XLA fallback); ref.py the oracles.
+"""
+
+from repro.kernels.ops import bucketize, fused_classify, fits_vmem

@@ -1,0 +1,63 @@
+"""Pallas TPU kernel: per-feature range match ("bucketize").
+
+The switch's TCAM range match becomes a *parallel compare against every
+edge* on the VPU — literally what a TCAM does in silicon, expressed in
+vector registers. For each sample n and feature f:
+
+    bin[n, f] = #{ u : x[n, f] > edges[f, u] }
+
+Edges are padded with +inf (never match), so one dense (F, U) array serves
+ragged per-feature edge counts.
+
+Tiling: the batch is blocked into (TILE_N, F) VMEM tiles; the edge table is
+small (the switch-SRAM analog) and stays fully VMEM-resident across the
+grid. The compare sweep is chunked over U to bound the (TILE_N, F, CHUNK)
+broadcast intermediate.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE_N = 256
+EDGE_CHUNK = 32
+
+
+def _bucketize_kernel(x_ref, edges_ref, out_ref, *, u_total: int):
+    x = x_ref[...]                                     # (TILE_N, F)
+    acc = jnp.zeros(x.shape, jnp.int32)
+    n_chunks = pl.cdiv(u_total, EDGE_CHUNK)
+    for c in range(n_chunks):                          # static unroll
+        lo = c * EDGE_CHUNK
+        hi = min(lo + EDGE_CHUNK, u_total)
+        e = edges_ref[:, lo:hi]                        # (F, cu)
+        cmp = x[:, :, None] > e[None, :, :]            # (TILE_N, F, cu)
+        acc = acc + jnp.sum(cmp.astype(jnp.int32), axis=2)
+    out_ref[...] = acc
+
+
+def bucketize_pallas(x: jax.Array, edges: jax.Array, *,
+                     interpret: bool = True) -> jax.Array:
+    """x (N, F) float32, edges (F, U) float32 (+inf padded) -> (N, F) int32.
+
+    N must be a multiple of TILE_N (ops.py pads).
+    """
+    n, f = x.shape
+    u = edges.shape[1]
+    assert n % TILE_N == 0, n
+    kernel = functools.partial(_bucketize_kernel, u_total=u)
+    return pl.pallas_call(
+        kernel,
+        grid=(n // TILE_N,),
+        in_specs=[
+            pl.BlockSpec((TILE_N, f), lambda i: (i, 0)),
+            pl.BlockSpec((f, u), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((TILE_N, f), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, f), jnp.int32),
+        interpret=interpret,
+    )(x, edges)

@@ -1,0 +1,64 @@
+"""Pallas TPU kernel: fused classical-model pipeline (SVM / NB / K-Means).
+
+The §4.3 "table per feature" mapping: each feature's bin holds a quantized
+partial term vector (a_j*x for SVM planes, log P(x|c) for NB, (x-c)^2 for
+K-Means); the pipeline sums them. Fused as:
+
+  out[n, m] = sum_f vtable[f, bins[n, f], m]
+            = sum_f onehot(bins_f) @ vtable[f]     (MXU matmuls)
+
+The epilogue (plane votes / argmax / argmin + confidence) is elementwise and
+lives in kernels/ops.py. Integer payloads ride as exact f32, so the result
+is bit-identical to the integer-domain oracle sum.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.ensemble_lookup import _range_match
+
+TILE_N = 128
+
+
+def _classical_kernel(x_ref, edges_ref, vtable_ref, out_ref, *, u_total: int):
+    x = x_ref[...]                                          # (TN, F)
+    tn, f = x.shape
+    m = vtable_ref.shape[2]
+    n_bins = u_total + 1
+
+    bins = _range_match(x, edges_ref, u_total)
+
+    total = jnp.zeros((tn, m), jnp.float32)
+    b_iota = jax.lax.broadcasted_iota(jnp.int32, (1, n_bins), 1)
+    for fi in range(f):
+        oh = (bins[:, fi][:, None] == b_iota).astype(jnp.float32)  # (TN, B)
+        vt = vtable_ref[fi].astype(jnp.float32)             # (B, M)
+        total = total + jax.lax.dot(oh, vt,
+                                    preferred_element_type=jnp.float32)
+    out_ref[...] = total
+
+
+def classical_lookup_pallas(x, edges, vtable, *, interpret: bool = True):
+    """x (N, F) f32, edges (F, U), vtable (F, U+1, M) -> (N, M) f32 sums."""
+    n, f = x.shape
+    u = edges.shape[1]
+    m = vtable.shape[2]
+    assert n % TILE_N == 0, n
+    kernel = functools.partial(_classical_kernel, u_total=u)
+    return pl.pallas_call(
+        kernel,
+        grid=(n // TILE_N,),
+        in_specs=[
+            pl.BlockSpec((TILE_N, f), lambda i: (i, 0)),
+            pl.BlockSpec((f, u), lambda i: (0, 0)),
+            pl.BlockSpec((f, u + 1, m), lambda i: (0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((TILE_N, m), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, m), jnp.float32),
+        interpret=interpret,
+    )(x, edges, vtable)

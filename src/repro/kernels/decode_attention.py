@@ -1,0 +1,91 @@
+"""Pallas TPU kernel: fused int8-KV decode attention.
+
+The §Perf B2 optimization (int8 KV cache with per-slot scales) realized
+as a TPU kernel: the XLA path materializes the dequantized (S, hd) f32
+cache in HBM before the dot; this kernel streams int8 KV blocks into
+VMEM, dequantizes in-register, and runs the online-softmax accumulation
+— HBM traffic is the int8 bytes, which is the whole point of B2.
+
+One grid step = one (batch, kv-head) pair:
+  q      (M, hd)  f32   M = query heads per kv head (GQA group)
+  k_q    (S, hd)  int8  + k_s (S, 1) f32 per-slot scales
+  v_q    (S, hd)  int8  + v_s (S, 1) f32
+  valid  (S, 1)   f32   1.0 = live cache slot (ring-buffer mask)
+  out    (M, hd)  f32
+
+The S dimension is processed in VMEM-sized blocks with the standard
+running-max online softmax, so the kernel supports 32k-deep caches with
+a constant VMEM footprint.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+S_BLOCK = 512
+
+
+def _decode_attn_kernel(q_ref, kq_ref, ks_ref, vq_ref, vs_ref, valid_ref,
+                        out_ref, *, s_total: int, scale: float):
+    q = q_ref[0, 0]                                  # (M, hd)
+    m, hd = q.shape
+    m_run = jnp.full((m, 1), -1e30, jnp.float32)
+    l_run = jnp.zeros((m, 1), jnp.float32)
+    acc = jnp.zeros((m, hd), jnp.float32)
+
+    for blk in range(pl.cdiv(s_total, S_BLOCK)):
+        lo = blk * S_BLOCK
+        hi = min(lo + S_BLOCK, s_total)
+        k = (kq_ref[0, 0, lo:hi, :].astype(jnp.float32)
+             * ks_ref[0, 0, lo:hi, :])               # dequant in VMEM
+        v = (vq_ref[0, 0, lo:hi, :].astype(jnp.float32)
+             * vs_ref[0, 0, lo:hi, :])
+        ok = valid_ref[0, 0, lo:hi, :]               # (s, 1)
+        sc = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale   # (M, s)
+        sc = jnp.where((ok > 0.5).T, sc, -1e30)
+        m_new = jnp.maximum(m_run, sc.max(axis=1, keepdims=True))
+        alpha = jnp.exp(m_run - m_new)
+        p = jnp.exp(sc - m_new)
+        l_run = l_run * alpha + p.sum(axis=1, keepdims=True)
+        acc = acc * alpha + jax.lax.dot(
+            p, v, preferred_element_type=jnp.float32)
+        m_run = m_new
+
+    out_ref[0, 0] = acc / jnp.maximum(l_run, 1e-30)
+
+
+def decode_attention_int8_pallas(q, k_q, k_s, v_q, v_s, valid, *,
+                                 scale: float, interpret: bool = True):
+    """q (B, G, M, hd) f32; k_q/v_q (B, S, G, hd) int8;
+    k_s/v_s (B, S, G, 1) f32; valid (B, S) f32 -> (B, G, M, hd) f32."""
+    b, g, m, hd = q.shape
+    s = k_q.shape[1]
+    kernel = functools.partial(_decode_attn_kernel, s_total=s, scale=scale)
+    # layout per grid step: (S, hd) slices for one (batch, head)
+    kq = jnp.swapaxes(k_q, 1, 2)                     # (B, G, S, hd)
+    vq = jnp.swapaxes(v_q, 1, 2)
+    ks = jnp.swapaxes(k_s, 1, 2)                     # (B, G, S, 1)
+    vs = jnp.swapaxes(v_s, 1, 2)
+    val = valid[:, None, :, None].astype(jnp.float32)  # (B, 1, S, 1)
+    val = jnp.broadcast_to(val, (b, g, s, 1))
+    return pl.pallas_call(
+        kernel,
+        grid=(b, g),
+        in_specs=[
+            pl.BlockSpec((1, 1, m, hd), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, s, hd), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, s, 1), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, s, hd), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, s, 1), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, s, 1), lambda i, j: (i, j, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, m, hd), lambda i, j: (i, j, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, g, m, hd), jnp.float32),
+        interpret=interpret,
+    )(q, kq, ks, vq, vs, val)

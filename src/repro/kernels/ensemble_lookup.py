@@ -1,0 +1,123 @@
+"""Pallas TPU kernel: the fused IIsy match-action pipeline (tree family).
+
+One kernel = the whole switch pipeline:
+
+  1. range match         bins[n,f] = #{u : x[n,f] > edges[f,u]}        (VPU)
+  2. feature tables +    keys[n,t] = sum_f ftable[f, bins[n,f], t] * strides[t,f]
+     decision key        -> realized per feature as one-hot(bins_f) @ ftable[f],
+                            an MXU matmul: on TPU a lookup table IS a matmul
+                            with a one-hot key. The per-tree code and the
+                            mixed-radix combine fuse into one accumulation.
+  3. decision tables     leaf[n,t] = dtable[t, keys[n,t]]
+                         -> TCAM-style *parallel compare-select* chunked over
+                            table entries: every entry is matched against the
+                            key simultaneously, exactly what TCAM silicon
+                            does, expressed on the VPU.
+  4. aggregation         votes[n,c] = #{t : leaf class == c}  (vote)
+                         total[n]   = sum_t leaf value         (sum aggs)
+
+All tables stay fully VMEM-resident across the grid — the VMEM budget plays
+the switch-SRAM role (artifact_resources() decides fit, like Tables 1-2).
+The scalar epilogue (argmax / sigmoid / iforest score) runs in kernels/ops.py.
+
+Integer payloads ride as f32 (exact below 2^24), so the MXU path needs no
+integer matmul support and quantized sums stay bit-exact vs the oracle.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE_N = 128
+EDGE_CHUNK = 32
+DTABLE_CHUNK = 512
+
+
+def _range_match(x, edges_ref, u_total):
+    """bins[n,f] = #{u : x[n,f] > edges[f,u]} — chunked compare sweep."""
+    tn, f = x.shape
+    bins = jnp.zeros((tn, f), jnp.int32)
+    for c in range(pl.cdiv(u_total, EDGE_CHUNK)):
+        lo = c * EDGE_CHUNK
+        hi = min(lo + EDGE_CHUNK, u_total)
+        e = edges_ref[:, lo:hi]                             # (F, cu)
+        bins = bins + jnp.sum(
+            (x[:, :, None] > e[None, :, :]).astype(jnp.int32), axis=2)
+    return bins
+
+
+def _ensemble_kernel(x_ref, edges_ref, ftable_ref, strides_ref, dtable_ref,
+                     out_ref, *, u_total: int, s_total: int, n_classes: int,
+                     vote: bool):
+    x = x_ref[...]                                          # (TN, F)
+    tn, f = x.shape
+    t = strides_ref.shape[0]
+    n_bins = u_total + 1
+
+    bins = _range_match(x, edges_ref, u_total)
+
+    # stages 2+3 fused: keys[n,t] = sum_f (onehot(bins_f) @ ftable[f]) * strides[:,f]
+    keys = jnp.zeros((tn, t), jnp.float32)
+    b_iota = jax.lax.broadcasted_iota(jnp.int32, (1, n_bins), 1)
+    for fi in range(f):                                     # static unroll, F small
+        oh = (bins[:, fi][:, None] == b_iota).astype(jnp.float32)  # (TN, B)
+        ft = ftable_ref[fi].astype(jnp.float32)             # (B, T)
+        code = jax.lax.dot(oh, ft,
+                           preferred_element_type=jnp.float32)     # (TN, T)
+        keys = keys + code * strides_ref[:, fi].astype(jnp.float32)[None, :]
+    keys_i = keys.astype(jnp.int32)                         # exact below 2^24
+
+    # stage 4: TCAM-style parallel compare-select over decision entries
+    leaf = jnp.zeros((tn, t), jnp.float32)
+    for c in range(pl.cdiv(s_total, DTABLE_CHUNK)):
+        lo = c * DTABLE_CHUNK
+        hi = min(lo + DTABLE_CHUNK, s_total)
+        s_iota = jax.lax.broadcasted_iota(jnp.int32, (1, 1, hi - lo), 2) + lo
+        match = (keys_i[:, :, None] == s_iota)              # (TN, T, cs)
+        dt = dtable_ref[:, lo:hi].astype(jnp.float32)       # (T, cs)
+        leaf = leaf + jnp.sum(jnp.where(match, dt[None, :, :], 0.0), axis=2)
+
+    # stage 5: aggregation
+    if vote:
+        c_iota = jax.lax.broadcasted_iota(jnp.float32, (1, 1, n_classes), 2)
+        votes = jnp.sum((leaf[:, :, None] == c_iota).astype(jnp.float32),
+                        axis=1)                             # (TN, C)
+        out_ref[...] = votes
+    else:
+        out_ref[...] = jnp.sum(leaf, axis=1, keepdims=True)
+
+
+def ensemble_lookup_pallas(x, edges, ftable, strides, dtable, *,
+                           n_classes: int, vote: bool,
+                           interpret: bool = True) -> jax.Array:
+    """Run the fused pipeline. Returns (N, n_classes) votes or (N, 1) sums.
+
+    x (N, F) f32 with N % TILE_N == 0; edges (F, U) f32; ftable (F, U+1, T)
+    int32; strides (T, F) int32; dtable (T, S) f32 (class ids or quantized
+    payload as exact floats).
+    """
+    n, f = x.shape
+    u = edges.shape[1]
+    t, s = dtable.shape
+    assert n % TILE_N == 0, n
+    out_cols = n_classes if vote else 1
+    kernel = functools.partial(_ensemble_kernel, u_total=u, s_total=s,
+                               n_classes=n_classes, vote=vote)
+    return pl.pallas_call(
+        kernel,
+        grid=(n // TILE_N,),
+        in_specs=[
+            pl.BlockSpec((TILE_N, f), lambda i: (i, 0)),
+            pl.BlockSpec((f, u), lambda i: (0, 0)),
+            pl.BlockSpec((f, u + 1, t), lambda i: (0, 0, 0)),
+            pl.BlockSpec((t, f), lambda i: (0, 0)),
+            pl.BlockSpec((t, s), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((TILE_N, out_cols), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, out_cols), jnp.float32),
+        interpret=interpret,
+    )(x, edges, ftable, strides, dtable)

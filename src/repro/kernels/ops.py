@@ -1,0 +1,150 @@
+"""Jit'd public wrappers over the Pallas kernels.
+
+Handles batch padding to kernel tiles, dtype marshalling (quantized payloads
+ride as exact f32), backend routing (Pallas on TPU, interpret-mode on CPU for
+validation, or the XLA gather reference for speed), and the scalar epilogues
+that turn kernel outputs into (pred, confidence).
+
+VMEM fit check: the switch-SRAM analog. A model whose tables exceed the
+budget is rejected for the fused kernel — same failure mode as a model that
+doesn't fit the switch pipeline in the paper — and falls back to the XLA
+path (the "run it on the host" situation).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.artifact import TableArtifact
+from repro.kernels import bucketize as _bk
+from repro.kernels import ensemble_lookup as _ek
+from repro.kernels import classical_lookup as _ck
+from repro.kernels import ref as _ref
+
+VMEM_BUDGET_BYTES = 8 * 1024 * 1024   # half of a v5e core's ~16MB VMEM
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad_batch(x, tile):
+    n = x.shape[0]
+    pad = (-n) % tile
+    if pad:
+        x = jnp.concatenate([x, jnp.zeros((pad,) + x.shape[1:], x.dtype)])
+    return x, n
+
+
+def bucketize(x, edges, *, use_pallas=None):
+    """Public bucketize. x (N, F), edges (F, U) -> (N, F) int32."""
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if not use_pallas:
+        return _ref.bucketize_ref(x, edges)
+    xp, n = _pad_batch(jnp.asarray(x, jnp.float32), _bk.TILE_N)
+    return _bk.bucketize_pallas(xp, edges, interpret=not _on_tpu())[:n]
+
+
+def tree_tables_vmem_bytes(art: TableArtifact) -> int:
+    e = art.edges.size * 4
+    f = art.ftable.size * 4
+    s = art.strides.size * 4
+    d = art.dtable_class.size * 4
+    return e + f + s + d
+
+
+def fits_vmem(art: TableArtifact) -> bool:
+    if art.ftable is None:
+        return (art.edges.size + art.vtable.q.size) * 4 <= VMEM_BUDGET_BYTES
+    return tree_tables_vmem_bytes(art) <= VMEM_BUDGET_BYTES
+
+
+# ---------------------------------------------------------------------------
+# fused classify
+# ---------------------------------------------------------------------------
+
+def _tree_epilogue(art: TableArtifact, out):
+    if art.agg == "vote":
+        votes = out                                         # (N, C)
+        pred = jnp.argmax(votes, axis=1)
+        conf = jnp.max(votes, axis=1) / art.n_trees
+        return pred, conf
+    total = out[:, 0] / art.dtable_value.scale
+    if art.agg == "wsum_sigmoid":
+        p1 = jax.nn.sigmoid(art.base_score + art.learning_rate * total)
+        return (p1 > 0.5).astype(jnp.int32), jnp.maximum(p1, 1 - p1)
+    if art.agg == "iforest":
+        n = jnp.float32(art.iforest_subsample)
+        cfac = 2.0 * (jnp.log(n - 1.0) + 0.5772156649) - 2.0 * (n - 1.0) / n
+        score = 2.0 ** (-(total / art.n_trees) / cfac)
+        return (score > 0.5).astype(jnp.int32), jnp.maximum(score, 1 - score)
+    raise ValueError(art.agg)
+
+
+def _classical_epilogue(art: TableArtifact, out):
+    total = out / art.vtable.scale                          # (N, M)
+    if art.agg == "svm_ovo":
+        planes = total + art.consts[None, :]
+        win_i = planes > 0
+        votes = jnp.zeros((planes.shape[0], art.n_classes), jnp.float32)
+        votes = votes.at[:, art.pairs[:, 0]].add(win_i.astype(jnp.float32))
+        votes = votes.at[:, art.pairs[:, 1]].add((~win_i).astype(jnp.float32))
+        pred = jnp.argmax(votes, axis=1)
+        if planes.shape[1] == 1:
+            conf = jax.nn.sigmoid(2.0 * jnp.abs(planes[:, 0]))
+        else:
+            conf = jnp.max(votes, axis=1) / planes.shape[1]
+        return pred, conf
+    if art.agg == "nb_log":
+        joint = total + art.consts[None, :]
+        return (jnp.argmax(joint, axis=1),
+                jnp.max(jax.nn.softmax(joint, axis=1), axis=1))
+    if art.agg == "kmeans":
+        pred = jnp.argmin(total, axis=1)
+        top2 = jax.lax.top_k(-total, 2)[0]
+        return pred, 1.0 - jnp.exp(top2[:, 1] - top2[:, 0])
+    raise ValueError(art.agg)
+
+
+def fused_classify(art: TableArtifact, x, *, use_pallas=None,
+                   interpret=None):
+    """(pred, confidence) through the fused kernel path.
+
+    use_pallas=None auto-routes: Pallas on TPU, XLA reference otherwise.
+    Pass use_pallas=True on CPU to exercise interpret mode (tests do).
+    """
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if interpret is None:
+        interpret = not _on_tpu()
+    x = jnp.asarray(x, jnp.float32)
+
+    if art.ftable is not None:
+        vote = art.agg == "vote"
+        dtable = (art.dtable_class if vote else art.dtable_value.q)
+        dtable = dtable.astype(jnp.float32)
+        if use_pallas and fits_vmem(art):
+            xp, n = _pad_batch(x, _ek.TILE_N)
+            out = _ek.ensemble_lookup_pallas(
+                xp, art.edges, art.ftable, art.strides, dtable,
+                n_classes=art.n_classes, vote=vote, interpret=interpret)[:n]
+        else:
+            out = _ref.ensemble_lookup_ref(
+                x, art.edges, art.ftable, art.strides, dtable,
+                n_classes=art.n_classes, vote=vote)
+        return _tree_epilogue(art, out)
+
+    if use_pallas and fits_vmem(art):
+        xp, n = _pad_batch(x, _ck.TILE_N)
+        out = _ck.classical_lookup_pallas(
+            xp, art.edges, art.vtable.q.astype(jnp.float32),
+            interpret=interpret)[:n]
+    else:
+        out = _ref.classical_lookup_ref(x, art.edges,
+                                        art.vtable.q.astype(jnp.float32))
+    return _classical_epilogue(art, out)

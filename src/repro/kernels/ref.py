@@ -1,0 +1,53 @@
+"""Pure-jnp oracles for every kernel — the ground truth for allclose tests.
+
+These share semantics with repro.core.inference (the reference data plane)
+but expose the exact kernel contracts (same inputs, same outputs) so tests
+sweep shapes/dtypes against them directly.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def bucketize_ref(x: jax.Array, edges: jax.Array) -> jax.Array:
+    """x (N, F), edges (F, U) (+inf padded) -> (N, F) int32 bin ids."""
+    return jnp.sum(x[:, :, None] > edges[None, :, :], axis=2).astype(jnp.int32)
+
+
+def ensemble_lookup_ref(x, edges, ftable, strides, dtable, *,
+                        n_classes: int, vote: bool) -> jax.Array:
+    """Gather-based oracle for the fused tree pipeline."""
+    bins = bucketize_ref(x, edges)                          # (N, F)
+    f_idx = jnp.arange(x.shape[1])[None, :]
+    codes = ftable[f_idx, bins]                             # (N, F, T)
+    keys = jnp.einsum("nft,tf->nt", codes.astype(jnp.int32),
+                      strides).astype(jnp.int32)
+    t_idx = jnp.arange(dtable.shape[0])[None, :]
+    leaf = dtable[t_idx, keys]                              # (N, T)
+    if vote:
+        return jax.nn.one_hot(leaf.astype(jnp.int32), n_classes,
+                              dtype=jnp.float32).sum(axis=1)
+    return leaf.astype(jnp.float32).sum(axis=1, keepdims=True)
+
+
+def classical_lookup_ref(x, edges, vtable) -> jax.Array:
+    """Gather-based oracle for the classical pipeline. -> (N, M) f32."""
+    bins = bucketize_ref(x, edges)
+    f_idx = jnp.arange(x.shape[1])[None, :]
+    vals = vtable[f_idx, bins]                              # (N, F, M)
+    return vals.astype(jnp.float32).sum(axis=1)
+
+
+def decode_attention_int8_ref(q, k_q, k_s, v_q, v_s, valid, *, scale):
+    """Dense oracle for the int8-KV decode-attention kernel.
+
+    q (B,G,M,hd) f32; k_q/v_q (B,S,G,hd) int8; k_s/v_s (B,S,G,1) f32;
+    valid (B,S) -> (B,G,M,hd) f32."""
+    k = k_q.astype(jnp.float32) * k_s                      # (B,S,G,hd)
+    v = v_q.astype(jnp.float32) * v_s
+    sc = jnp.einsum("bgmd,bsgd->bgms", q, k) * scale
+    sc = jnp.where(valid[:, None, None, :] > 0.5, sc, -1e30)
+    w = jax.nn.softmax(sc, axis=-1)
+    return jnp.einsum("bgms,bsgd->bgmd", w, v)

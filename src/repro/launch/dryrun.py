@@ -1,0 +1,419 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape) cell on the
+production mesh, print memory_analysis / cost_analysis, parse collective
+bytes, and emit a JSON record per cell for §Dry-run / §Roofline.
+
+The two lines above MUST stay first: jax locks the device count on first
+init, and only the dry-run wants 512 placeholder host devices.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-4b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--out artifacts/dryrun]
+  python -m repro.launch.dryrun --all --both-meshes   # 16x16 and 2x16x16
+
+--all spawns one subprocess per cell (compile failures isolate; memory is
+returned to the OS between cells).
+
+§Perf knobs (per-cell variants for the hillclimb log):
+  --remat {none,full}       activation checkpointing policy for train cells
+  --compress {none,int8,topk}  DP-gradient compression inside the step
+  --seq-shard               shard prefill activations' sequence dim (SP)
+  --cache-seq-shard=0       disable sequence-sharding of decode caches
+"""
+
+import argparse
+import dataclasses
+import functools
+import json
+import subprocess
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCH_IDS, get_config
+from repro.distributed.sharding import (batch_specs, cache_specs,
+                                        named_sharding_tree,
+                                        opt_state_specs, param_specs)
+from repro.launch.mesh import make_production_mesh
+from repro.launch.shapes import SHAPES, cell_supported, input_specs
+from repro.models import model as M
+from repro.roofline.analysis import (collective_bytes_from_hlo, model_flops,
+                                     roofline_terms)
+from repro.training import grad_compress as gc
+from repro.training.optim import AdamWConfig, adamw_update
+
+F32 = jnp.float32
+
+
+def _opt_shapes(param_shapes):
+    zeros = jax.tree.map(
+        lambda l: jax.ShapeDtypeStruct(l.shape, F32), param_shapes)
+    return {"m": zeros, "v": zeros,
+            "step": jax.ShapeDtypeStruct((), jnp.int32)}
+
+
+def build_step(cfg, kind, *, remat=True, compress="none",
+               bf16_params=False):
+    """The function each cell lowers.
+
+    bf16_params: cast fp32 master weights to bf16 before the forward —
+    XLA sinks the convert below the FSDP all-gather, halving the
+    dominant gather bytes (§Perf iteration; grads stay fp32)."""
+    def maybe_cast(params):
+        if not bf16_params:
+            return params
+        return jax.tree.map(
+            lambda p: p.astype(jnp.bfloat16)
+            if p.dtype == jnp.float32 else p, params)
+
+    if kind == "train":
+        ocfg = AdamWConfig()
+
+        def train_step(params, opt_state, batch, err):
+            (loss, metrics), grads = jax.value_and_grad(
+                lambda p: M.loss_fn(maybe_cast(p), cfg, batch, remat=remat),
+                has_aux=True)(params)
+            if compress == "topk":
+                grads, err = gc.topk_compress(grads, err)
+            elif compress == "int8":
+                grads, err = gc.int8_compress(grads, err)
+            params, opt_state, om = adamw_update(ocfg, params, grads,
+                                                 opt_state)
+            return params, opt_state, err, loss
+
+        return train_step
+    if kind == "prefill":
+        def prefill_step(params, batch):
+            return M.prefill(maybe_cast(params), cfg, batch)
+
+        return prefill_step
+
+    def decode_step(params, token, pos, caches):
+        return M.decode_step(maybe_cast(params), cfg, token, pos, caches)
+
+    return decode_step
+
+
+def _reduced_cfgs(cfg):
+    """Depth-reduced configs for the scan-undercount correction.
+
+    Returns (base_cfg, [(seg_idx, n_periods_full, variant_cfg), ...]) where
+    base has ONE period per segment and each variant adds one period to a
+    single scanned segment. cost(variant) - cost(base) = one period's
+    exact flops/bytes/collectives; the full-depth value is
+    base + sum_seg (n_periods-1) * marginal_seg.
+    """
+    import dataclasses as dc
+    from repro.models.transformer import layer_plan
+    if cfg.encdec:
+        base = dc.replace(cfg, n_encoder_layers=1, n_layers=1)
+        return base, [
+            (0, cfg.n_encoder_layers,
+             dc.replace(cfg, n_encoder_layers=2, n_layers=1)),
+            (1, cfg.n_layers,
+             dc.replace(cfg, n_encoder_layers=1, n_layers=2)),
+        ]
+    plan = layer_plan(cfg)
+    period_lens = [len(s["specs"]) for s in plan]
+    n_dense = cfg.moe.n_dense_layers if cfg.moe else 0
+
+    def build(periods):
+        n_layers = sum(p * l for p, l in zip(periods, period_lens))
+        new = dc.replace(cfg, n_layers=n_layers)
+        if cfg.moe and n_dense:
+            # dense prefix segment is segment 0
+            nd = periods[0] * period_lens[0]
+            new = dc.replace(new, moe=dc.replace(cfg.moe,
+                                                 n_dense_layers=nd))
+        return new
+
+    base_periods = [1] * len(plan)
+    base = build(base_periods)
+    variants = []
+    for i, seg in enumerate(plan):
+        if seg["n_periods"] <= 1:
+            continue                      # unrolled: counted exactly in base
+        pp = list(base_periods)
+        pp[i] += 1
+        variants.append((i, seg["n_periods"], build(pp)))
+    return base, variants
+
+
+def _measure(cfg, kind, shape, mesh, *, remat, compress, seq_shard,
+             cache_seq_shard, serve_params=False, bf16_params=False,
+             int8_kv=False, want_hlo=True):
+    """Lower+compile one config; return (compiled stats dict)."""
+    spec = SHAPES[shape]
+    ins = input_specs(cfg, shape, int8_kv=int8_kv)
+    pshapes = M.model_param_shapes(cfg)
+    if bf16_params:
+        # STORED bf16 weights (f32 Adam moments stay). The cast-at-use
+        # variant was measured and refuted (§Perf A1): XLA gathers f32
+        # then converts, so gather/grad-reduction bytes only halve when
+        # the stored dtype itself is bf16.
+        pshapes = jax.tree.map(
+            lambda l: jax.ShapeDtypeStruct(
+                l.shape,
+                jnp.bfloat16 if l.dtype == jnp.float32 else l.dtype),
+            pshapes)
+    pspecs = param_specs(pshapes, mesh, serve=serve_params)
+    psh = named_sharding_tree(mesh, pspecs)
+    step = build_step(cfg, kind, remat=remat, compress=compress,
+                      bf16_params=bf16_params)
+    t0 = time.time()
+    with mesh:
+        if kind == "train":
+            oshapes = _opt_shapes(pshapes)
+            ospecs = opt_state_specs(pshapes, mesh)
+            bspecs = batch_specs(mesh, ins["batch"], seq_shard=False)
+            esh = (named_sharding_tree(mesh, pspecs)
+                   if compress != "none" else None)
+            err_shapes = (jax.tree.map(
+                lambda l: jax.ShapeDtypeStruct(l.shape, F32), pshapes)
+                if compress != "none" else None)
+            jitted = jax.jit(
+                step,
+                in_shardings=(psh, named_sharding_tree(mesh, ospecs),
+                              named_sharding_tree(mesh, bspecs), esh),
+                donate_argnums=(0, 1, 3))
+            lowered = jitted.lower(pshapes, oshapes, ins["batch"],
+                                   err_shapes)
+        elif kind == "prefill":
+            bspecs = batch_specs(mesh, ins["batch"], seq_shard=seq_shard)
+            jitted = jax.jit(
+                step, in_shardings=(psh, named_sharding_tree(mesh, bspecs)))
+            lowered = jitted.lower(pshapes, ins["batch"])
+        else:
+            b = spec["global_batch"]
+            cspecs = cache_specs(mesh, ins["caches"], b)
+            if not cache_seq_shard:
+                cspecs = jax.tree.map(
+                    lambda s: P(*[a if a != "model" else None for a in s]),
+                    cspecs, is_leaf=lambda x: isinstance(x, P))
+            tok_spec = NamedSharding(mesh, batch_specs(
+                mesh, {"t": ins["token"]})["t"])
+            jitted = jax.jit(
+                step,
+                in_shardings=(psh, tok_spec, NamedSharding(mesh, P()),
+                              named_sharding_tree(mesh, cspecs)),
+                donate_argnums=(3,))
+            lowered = jitted.lower(pshapes, ins["token"], ins["pos"],
+                                   ins["caches"])
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    cost = cost if isinstance(cost, dict) else cost[0]
+    coll = collective_bytes_from_hlo(compiled.as_text()) if want_hlo \
+        else {"total": 0.0, "by_op": {}, "count": 0}
+    return {"mem": mem, "cost": cost, "coll": coll,
+            "t_lower": t_lower, "t_compile": t_compile}
+
+
+def run_cell(arch: str, shape: str, *, multi_pod: bool, remat=True,
+             compress="none", seq_shard=False, cache_seq_shard=True,
+             serve_params=False, bf16_params=False, int8_kv=False,
+             correct_scans=None, verbose=True):
+    cfg = get_config(arch)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.size
+    spec = SHAPES[shape]
+    kind = spec["kind"]
+    ins = input_specs(cfg, shape)
+    if correct_scans is None:
+        correct_scans = not multi_pod     # roofline table is single-pod
+
+    kw = dict(remat=remat, compress=compress, seq_shard=seq_shard,
+              cache_seq_shard=cache_seq_shard, serve_params=serve_params,
+              bf16_params=bf16_params, int8_kv=int8_kv)
+    full = _measure(cfg, kind, shape, mesh, **kw)
+
+    # --- scan-undercount correction (collectives; HLO counts scan bodies
+    # once — verified empirically, see EXPERIMENTS.md §Methodology) --------
+    coll_corrected = None
+    if correct_scans:
+        try:
+            base_cfg, variants = _reduced_cfgs(cfg)
+            base = _measure(base_cfg, kind, shape, mesh, **kw)
+            total = base["coll"]["total"]
+            for _, n_periods, vcfg in variants:
+                var = _measure(vcfg, kind, shape, mesh, **kw)
+                marginal = max(var["coll"]["total"]
+                               - base["coll"]["total"], 0.0)
+                total += (n_periods - 1) * marginal
+            coll_corrected = total
+        except Exception as e:   # correction is best-effort
+            coll_corrected = None
+            if verbose:
+                print("scan correction failed:", e)
+
+    # --- analytic exact flops / streaming bytes ---------------------------
+    from repro.roofline.analytic import (cell_flops_per_device,
+                                         cell_hbm_bytes_per_device,
+                                         decode_cache_bytes)
+    pshapes = M.model_param_shapes(cfg)
+    n_total = M.count_params(pshapes)
+    n_active = M.active_params(cfg, n_total)
+    an_flops = cell_flops_per_device(cfg, shape, n_chips, remat=remat)
+    cache_b = (decode_cache_bytes(cfg, shape, int8_kv=int8_kv)
+               if kind == "decode" else 0)
+    an_bytes = cell_hbm_bytes_per_device(cfg, shape, n_chips, n_total,
+                                         cache_b, remat=remat)
+    coll_best = (coll_corrected if coll_corrected is not None
+                 else full["coll"]["total"])
+    roof = roofline_terms({"flops": an_flops, "bytes accessed": an_bytes},
+                          {"total": coll_best})
+    hlo_roof = roofline_terms(full["cost"], full["coll"])
+
+    mf = model_flops(cfg, n_total, n_active, kind,
+                     spec["seq_len"], spec["global_batch"])
+    mem = full["mem"]
+    record = {
+        "arch": arch, "shape": shape, "kind": kind,
+        "mesh": list(mesh.devices.shape), "chips": n_chips,
+        "multi_pod": multi_pod,
+        "remat": remat, "compress": compress, "seq_shard": seq_shard,
+        "cache_seq_shard": cache_seq_shard,
+        "serve_params": serve_params, "bf16_params": bf16_params,
+        "int8_kv": int8_kv,
+        "params_total": n_total, "params_active": n_active,
+        "lower_s": round(full["t_lower"], 1),
+        "compile_s": round(full["t_compile"], 1),
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "peak_per_device": (mem.argument_size_in_bytes
+                                + mem.output_size_in_bytes
+                                + mem.temp_size_in_bytes
+                                - mem.alias_size_in_bytes),
+        },
+        "cost_hlo_raw": {"flops_per_dev": hlo_roof["flops_per_dev"],
+                         "hbm_bytes_per_dev": hlo_roof["hbm_bytes_per_dev"],
+                         "note": "scan bodies counted once by XLA"},
+        "analytic": {"flops_per_dev": an_flops,
+                     "hbm_bytes_per_dev": an_bytes,
+                     "decode_cache_bytes_total": cache_b},
+        "collectives": full["coll"],
+        "collective_bytes_corrected": coll_corrected,
+        "roofline": {k: roof[k] for k in
+                     ("compute_s", "memory_s", "collective_s", "dominant",
+                      "overlap_roofline_frac")},
+        "roofline_hlo_raw": {k: hlo_roof[k] for k in
+                             ("compute_s", "memory_s", "collective_s",
+                              "dominant")},
+        "model_flops_global": mf,
+        "useful_flops_ratio": (mf / (an_flops * n_chips)
+                               if an_flops else 0.0),
+    }
+    if verbose:
+        print(json.dumps(record, indent=1))
+    return record
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--remat", default="full", choices=["full", "none"])
+    ap.add_argument("--compress", default="none",
+                    choices=["none", "int8", "topk"])
+    ap.add_argument("--seq-shard", action="store_true")
+    ap.add_argument("--no-cache-seq-shard", action="store_true")
+    ap.add_argument("--serve-params", action="store_true",
+                    help="TP-only weights (no FSDP) for serve steps")
+    ap.add_argument("--bf16-params", action="store_true",
+                    help="cast weights to bf16 before use (halves gathers)")
+    ap.add_argument("--int8-kv", action="store_true",
+                    help="int8 KV cache with per-slot scales (decode)")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args(argv)
+
+    os.makedirs(args.out, exist_ok=True)
+
+    if args.all:
+        meshes = [False, True] if args.both_meshes else [args.multi_pod]
+        failures = []
+        for mp in meshes:
+            for arch in ARCH_IDS:
+                for shape in SHAPES:
+                    if not cell_supported(arch, shape):
+                        _write(args.out, arch, shape, mp, args.tag,
+                               {"arch": arch, "shape": shape,
+                                "multi_pod": mp, "skipped":
+                                "full-attention arch at 500k decode"})
+                        continue
+                    name = _cell_name(arch, shape, mp, args.tag)
+                    path = os.path.join(args.out, name + ".json")
+                    if args.skip_existing and os.path.exists(path):
+                        print("skip", name)
+                        continue
+                    cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                           "--arch", arch, "--shape", shape,
+                           "--out", args.out, "--tag", args.tag,
+                           "--remat", args.remat,
+                           "--compress", args.compress]
+                    if mp:
+                        cmd.append("--multi-pod")
+                    if args.seq_shard:
+                        cmd.append("--seq-shard")
+                    if args.no_cache_seq_shard:
+                        cmd.append("--no-cache-seq-shard")
+                    print(">>", name, flush=True)
+                    r = subprocess.run(cmd, capture_output=True, text=True)
+                    if r.returncode != 0:
+                        failures.append(name)
+                        print("FAIL", name, "\n", r.stdout[-2000:],
+                              r.stderr[-4000:], flush=True)
+                    else:
+                        print(r.stdout.strip().splitlines()[-1], flush=True)
+        print(f"\ndry-run sweep done; {len(failures)} failures")
+        for f in failures:
+            print("  FAILED:", f)
+        sys.exit(1 if failures else 0)
+
+    record = run_cell(args.arch, args.shape, multi_pod=args.multi_pod,
+                      remat=args.remat == "full", compress=args.compress,
+                      seq_shard=args.seq_shard,
+                      cache_seq_shard=not args.no_cache_seq_shard,
+                      serve_params=args.serve_params,
+                      bf16_params=args.bf16_params,
+                      int8_kv=args.int8_kv,
+                      verbose=False)
+    _write(args.out, args.arch, args.shape, args.multi_pod, args.tag, record)
+    roof = record.get("roofline", {})
+    print(json.dumps({
+        "cell": _cell_name(args.arch, args.shape, args.multi_pod, args.tag),
+        "peak_bytes_per_dev": record["memory"]["peak_per_device"],
+        "dominant": roof.get("dominant"),
+        "compute_s": round(roof.get("compute_s", 0), 6),
+        "memory_s": round(roof.get("memory_s", 0), 6),
+        "collective_s": round(roof.get("collective_s", 0), 6),
+        "compile_s": record["compile_s"]}))
+
+
+def _cell_name(arch, shape, multi_pod, tag):
+    mesh = "2x16x16" if multi_pod else "16x16"
+    return f"{arch}__{shape}__{mesh}" + (f"__{tag}" if tag else "")
+
+
+def _write(out, arch, shape, multi_pod, tag, record):
+    path = os.path.join(out, _cell_name(arch, shape, multi_pod, tag) + ".json")
+    with open(path, "w") as f:
+        json.dump(record, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

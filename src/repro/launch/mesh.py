@@ -1,0 +1,26 @@
+"""Production mesh construction.
+
+Single pod: (data=16, model=16) — 256 chips (one v5e pod).
+Multi-pod:  (pod=2, data=16, model=16) — 512 chips; the 'pod' axis carries
+pure data parallelism (params replicated across pods, gradients
+all-reduced over ('pod', 'data') — the cross-pod leg rides DCN, which is
+why grad compression targets exactly that reduction).
+
+Defined as functions so importing this module never touches jax device
+state (the dry-run must set XLA_FLAGS before first jax init).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """Degenerate 1x1 mesh for single-device smoke runs of mesh-aware code."""
+    return jax.make_mesh((1, 1), ("data", "model"))

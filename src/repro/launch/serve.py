@@ -1,0 +1,125 @@
+"""Serving launcher: hybrid IIsy switch tier + LM/ensemble backend.
+
+``python -m repro.launch.serve --use-case anomaly --threshold 0.7``
+trains the small switch model + large backend on the synthetic use-case
+data, stands up the HybridServer, runs batched requests through it, and
+prints the paper's telemetry (fraction handled, misclassification).
+
+``--backend lm`` scores forwarded requests with a (smoke-sized) LM
+backend instead of the full ensemble — the integration path where the
+low-confidence subset is re-encoded as tokens for an LM scorer.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.mapping import map_tree_ensemble
+from repro.kernels.ops import fused_classify
+from repro.ml.metrics import accuracy, precision_recall_f1
+from repro.ml.trees import (fit_random_forest, fit_xgboost,
+                            predict_margin_xgboost, predict_tree_ensemble)
+from repro.serving.hybrid_serving import HybridServer
+
+
+def build_usecase(name: str, n=20000, seed=0):
+    if name == "anomaly":
+        from repro.data.unsw_like import make_unsw_like, train_test_split
+        x, y = make_unsw_like(n, seed=seed, n_features=5)
+        return train_test_split(x, y)
+    from repro.data.janestreet_like import (SWITCH_FEATURES,
+                                            make_janestreet_like,
+                                            train_test_split)
+    x, y = make_janestreet_like(n, seed=seed)
+    return train_test_split(x, y)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--use-case", default="anomaly",
+                    choices=["anomaly", "finance"])
+    ap.add_argument("--threshold", type=float, default=0.7)
+    ap.add_argument("--capacity", type=int, default=1024)
+    ap.add_argument("--switch-trees", type=int, default=10)
+    ap.add_argument("--switch-depth", type=int, default=5)
+    ap.add_argument("--backend", default="ensemble",
+                    choices=["ensemble", "lm"])
+    ap.add_argument("--batch", type=int, default=2048)
+    args = ap.parse_args(argv)
+
+    xtr, ytr, xte, yte = build_usecase(args.use_case)
+    if args.use_case == "finance":
+        from repro.data.janestreet_like import SWITCH_FEATURES
+        xsw_tr, xsw_te = xtr[:, SWITCH_FEATURES], xte[:, SWITCH_FEATURES]
+    else:
+        xsw_tr, xsw_te = xtr, xte
+
+    # small switch model (paper Table 3 "Medium") + big backend
+    small = fit_random_forest(xsw_tr, ytr, n_classes=2,
+                              n_trees=args.switch_trees,
+                              max_depth=args.switch_depth, seed=0)
+    art = map_tree_ensemble(small, xsw_tr.shape[1])
+
+    if args.backend == "ensemble":
+        big = fit_xgboost(xtr, ytr, n_trees=60, max_depth=6)
+        full_dim = xtr.shape[1]
+
+        def backend_fn(rows_sw):
+            # the backend sees the full feature vector; look rows up by
+            # matching switch features is not possible -> in serving the
+            # forwarded request carries its full payload. Here we emulate
+            # by an index side-channel set per batch (see loop below).
+            idx = backend_fn.idx
+            margins = predict_margin_xgboost(big, backend_fn.full_rows[idx])
+            return (margins > 0).astype(jnp.int32)
+    else:
+        from repro.configs import get_smoke_config
+        from repro.models import model as M
+        cfg = get_smoke_config("qwen3-4b")
+        params = M.init_model(cfg, jax.random.PRNGKey(0))
+
+        def backend_fn(rows_sw):
+            # encode each forwarded row as a token sequence (feature
+            # binning as tokens) and read class from the last logit sign
+            toks = (jnp.abs(rows_sw[:, :8]) * 7).astype(jnp.int32) % cfg.vocab_size
+            toks = jnp.pad(toks, ((0, 0), (0, max(0, 8 - toks.shape[1]))))
+            logits, _ = M.prefill(params, cfg, {"tokens": toks})
+            return (logits[:, 0] > logits[:, 1]).astype(jnp.int32)
+
+    server = HybridServer(art, backend_fn, threshold=args.threshold,
+                          capacity=args.capacity)
+
+    n = xsw_te.shape[0]
+    preds = []
+    t0 = time.time()
+    for lo in range(0, n - args.batch + 1, args.batch):
+        rows = xsw_te[lo:lo + args.batch]
+        if args.backend == "ensemble":
+            backend_fn.full_rows = jnp.asarray(xte[lo:lo + args.batch])
+            # dispatch indices are produced inside classify; recompute here
+            sw_pred, conf = fused_classify(art, rows)
+            from repro.core.hybrid import dispatch
+            fwd = conf < args.threshold
+            buf, idx, valid = dispatch(jnp.asarray(rows), fwd, args.capacity)
+            backend_fn.idx = idx
+        pred, stats = server.classify(rows)
+        preds.append(np.asarray(pred))
+    pred = np.concatenate(preds)
+    m = len(pred)
+    acc = accuracy(yte[:m], pred)
+    p, r, f1 = precision_recall_f1(yte[:m], pred)
+    print(f"use_case={args.use_case} backend={args.backend} "
+          f"tau={args.threshold}")
+    print(f"acc={acc:.4f} precision={p:.4f} recall={r:.4f} f1={f1:.4f}")
+    print(f"handled_at_switch={stats.fraction_handled:.3f} "
+          f"backend_rows/batch={stats.backend_rows}/{args.batch} "
+          f"wall={time.time()-t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,79 @@
+"""Input ShapeDtypeStruct stand-ins for every (arch x shape) dry-run cell.
+
+Shapes (LM family, per the assignment):
+  train_4k     seq 4,096   global_batch 256   -> train_step
+  prefill_32k  seq 32,768  global_batch 32    -> prefill
+  decode_32k   seq 32,768 (KV), batch 128     -> serve (decode) step
+  long_500k    seq 524,288 (KV), batch 1      -> decode; sub-quadratic only
+
+long_500k applicability: requires O(1)-or-windowed per-token state —
+xlstm-1.3b (recurrent), h2o-danube-1.8b (SWA ring), recurrentgemma-2b
+(RG-LRU + local window). Pure full-attention archs skip it (recorded).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model as M
+
+I32 = jnp.int32
+F32 = jnp.float32
+BF16 = jnp.bfloat16
+
+SHAPES = {
+    "train_4k": dict(kind="train", seq_len=4096, global_batch=256),
+    "prefill_32k": dict(kind="prefill", seq_len=32768, global_batch=32),
+    "decode_32k": dict(kind="decode", seq_len=32768, global_batch=128),
+    "long_500k": dict(kind="decode", seq_len=524288, global_batch=1),
+}
+
+LONG_OK = {"xlstm-1.3b", "h2o-danube-1.8b", "recurrentgemma-2b"}
+
+
+def cell_supported(arch_id: str, shape_name: str, cfg=None) -> bool:
+    if shape_name == "long_500k":
+        return arch_id in LONG_OK
+    return True
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _frontend_extras(cfg, batch):
+    extras = {}
+    if cfg.encdec:
+        extras["frames"] = _sds(
+            (batch, cfg.n_frontend_tokens, cfg.frontend_dim), F32)
+    if cfg.frontend == "image_patches":
+        extras["patch_embeds"] = _sds(
+            (batch, cfg.n_frontend_tokens, cfg.frontend_dim), F32)
+    return extras
+
+
+def input_specs(cfg, shape_name: str, *, int8_kv: bool = False):
+    """-> dict of ShapeDtypeStruct args for the cell's step function.
+
+    train:   {"batch": {tokens, labels, extras...}}
+    prefill: {"batch": {tokens, extras...}}
+    decode:  {"token": (B,), "pos": scalar, "caches": cache shapes}
+    """
+    spec = SHAPES[shape_name]
+    b, s = spec["global_batch"], spec["seq_len"]
+    if spec["kind"] == "train":
+        batch = {"tokens": _sds((b, s), I32), "labels": _sds((b, s), I32)}
+        batch.update(_frontend_extras(cfg, b))
+        return {"batch": batch}
+    if spec["kind"] == "prefill":
+        batch = {"tokens": _sds((b, s), I32)}
+        batch.update(_frontend_extras(cfg, b))
+        return {"batch": batch}
+    # decode: one new token against a seq_len-deep cache
+    cache_shapes = jax.eval_shape(
+        lambda: M.init_decode_cache(cfg, b, s, dtype=BF16,
+                                    quantize_kv=int8_kv))
+    return {"token": _sds((b,), I32),
+            "pos": _sds((), I32),
+            "caches": cache_shapes}

@@ -1,0 +1,61 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> [...]``.
+
+Runs the real training loop (repro.training.loop) on whatever devices
+exist. On this CPU container use --smoke for the reduced config; the full
+config + production mesh path is exercised by the dry-run (launch.dryrun),
+which lowers the *same* step function.
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, get_config, get_smoke_config
+from repro.models import model as M
+from repro.training.loop import TrainConfig, train
+from repro.training.optim import AdamWConfig
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS, required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config (CPU-sized)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq-len", type=int, default=256)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--compress", default="none",
+                    choices=["none", "topk", "int8"])
+    ap.add_argument("--ckpt-dir", default=None)
+    args = ap.parse_args(argv)
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    tcfg = TrainConfig(
+        steps=args.steps, seq_len=args.seq_len,
+        global_batch=args.global_batch, microbatches=args.microbatches,
+        opt=AdamWConfig(lr_peak=args.lr, warmup_steps=max(args.steps // 20, 5),
+                        total_steps=args.steps),
+        grad_compress=args.compress, ckpt_dir=args.ckpt_dir)
+
+    extra = {}
+    if cfg.encdec:
+        extra["frames"] = jnp.zeros(
+            (args.global_batch // max(args.microbatches, 1),
+             cfg.n_frontend_tokens, cfg.frontend_dim), jnp.float32)
+    if cfg.frontend == "image_patches":
+        extra["patch_embeds"] = jnp.zeros(
+            (args.global_batch // max(args.microbatches, 1),
+             cfg.n_frontend_tokens, cfg.frontend_dim), jnp.float32)
+
+    params, history = train(cfg, tcfg, extra_batch=extra or None)
+    print(f"final loss: {history[-1]['loss_total']:.4f} "
+          f"({len(history)} steps)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,30 @@
+"""JAX-native classical-ML training substrate.
+
+IIsy's prototype trains with scikit-learn; this package is the equivalent
+substrate built in JAX so the whole framework is self-contained: histogram
+decision trees / random forests / gradient boosting / isolation forests,
+linear SVM, Gaussian naive Bayes and K-means — all with fixed-shape,
+jit-compatible training loops, plus the metrics used in the paper's tables.
+"""
+
+from repro.ml.trees import (
+    TreeEnsemble,
+    fit_decision_tree,
+    fit_random_forest,
+    fit_xgboost,
+    fit_isolation_forest,
+    predict_tree_ensemble,
+    predict_proba_tree_ensemble,
+    predict_margin_xgboost,
+    predict_iforest_score,
+    quantile_bin_edges,
+)
+from repro.ml.svm import LinearSVM, fit_linear_svm, predict_svm, svm_decision_values
+from repro.ml.naive_bayes import GaussianNB, fit_gaussian_nb, predict_nb, nb_log_likelihood
+from repro.ml.kmeans import KMeansModel, fit_kmeans, predict_kmeans
+from repro.ml.metrics import (
+    accuracy,
+    precision_recall_f1,
+    confusion_matrix,
+    macro_f1,
+)

@@ -1,0 +1,70 @@
+"""K-means (k-means++ init, Lloyd iterations, jit'd)."""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class KMeansModel:
+    centers: jax.Array     # (K, F)
+    mean: jax.Array        # (F,) standardization applied before clustering
+    scale: jax.Array       # (F,)
+
+
+def _plusplus_init(xs, k, key):
+    n = xs.shape[0]
+    i0 = jax.random.randint(key, (), 0, n)
+    centers = jnp.zeros((k, xs.shape[1]), xs.dtype).at[0].set(xs[i0])
+
+    def pick(carry, i):
+        centers, key = carry
+        key, sub = jax.random.split(key)
+        d2 = jnp.min(
+            jnp.sum((xs[:, None, :] - centers[None, :, :]) ** 2, -1)
+            + jnp.where(jnp.arange(k)[None, :] < i, 0.0, jnp.inf), axis=1)
+        p = d2 / jnp.maximum(d2.sum(), 1e-9)
+        idx = jax.random.choice(sub, n, (), p=p)
+        return (centers.at[i].set(xs[idx]), key), None
+
+    (centers, _), _ = jax.lax.scan(pick, (centers, key), jnp.arange(1, k))
+    return centers
+
+
+def fit_kmeans(x, *, k, iters=50, seed=0):
+    x = jnp.asarray(x, jnp.float32)
+    mean = x.mean(0)
+    scale = jnp.maximum(x.std(0), 1e-6)
+    xs = (x - mean) / scale
+
+    @jax.jit
+    def run(key):
+        centers = _plusplus_init(xs, k, key)
+
+        def lloyd(centers, _):
+            d2 = jnp.sum((xs[:, None, :] - centers[None, :, :]) ** 2, -1)
+            assign = jnp.argmin(d2, axis=1)
+            oh = jax.nn.one_hot(assign, k, dtype=xs.dtype)      # (N, K)
+            counts = jnp.maximum(oh.sum(0), 1.0)
+            new = (oh.T @ xs) / counts[:, None]
+            keep = (oh.sum(0) > 0)[:, None]
+            return jnp.where(keep, new, centers), None
+
+        centers, _ = jax.lax.scan(lloyd, centers, None, length=iters)
+        return centers
+
+    return KMeansModel(centers=run(jax.random.PRNGKey(seed)),
+                       mean=mean, scale=scale)
+
+
+def kmeans_sq_dists(model: KMeansModel, x) -> jax.Array:
+    xs = (jnp.asarray(x, jnp.float32) - model.mean) / model.scale
+    return jnp.sum((xs[:, None, :] - model.centers[None, :, :]) ** 2, -1)
+
+
+def predict_kmeans(model: KMeansModel, x) -> jax.Array:
+    return jnp.argmin(kmeans_sq_dists(model, x), axis=1)

@@ -1,0 +1,35 @@
+"""Classification metrics used by the paper's tables (acc/P/R/F1)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def confusion_matrix(y_true, y_pred, n_classes):
+    y_true = jnp.asarray(y_true, jnp.int32)
+    y_pred = jnp.asarray(y_pred, jnp.int32)
+    idx = y_true * n_classes + y_pred
+    cm = jnp.zeros((n_classes * n_classes,), jnp.int32).at[idx].add(1)
+    return cm.reshape(n_classes, n_classes)
+
+
+def accuracy(y_true, y_pred):
+    return float(jnp.mean(jnp.asarray(y_true) == jnp.asarray(y_pred)))
+
+
+def precision_recall_f1(y_true, y_pred, positive=1):
+    """Binary P/R/F1 treating ``positive`` as the positive class."""
+    y_true = jnp.asarray(y_true); y_pred = jnp.asarray(y_pred)
+    tp = jnp.sum((y_pred == positive) & (y_true == positive))
+    fp = jnp.sum((y_pred == positive) & (y_true != positive))
+    fn = jnp.sum((y_pred != positive) & (y_true == positive))
+    p = tp / jnp.maximum(tp + fp, 1)
+    r = tp / jnp.maximum(tp + fn, 1)
+    f1 = 2 * p * r / jnp.maximum(p + r, 1e-9)
+    return float(p), float(r), float(f1)
+
+
+def macro_f1(y_true, y_pred, n_classes):
+    f1s = [precision_recall_f1(y_true, y_pred, positive=c)[2]
+           for c in range(n_classes)]
+    return sum(f1s) / n_classes

@@ -1,0 +1,40 @@
+"""Gaussian naive Bayes (closed-form fit, log-domain prediction)."""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class GaussianNB:
+    mu: jax.Array          # (C, F)
+    var: jax.Array         # (C, F)
+    log_prior: jax.Array   # (C,)
+    n_classes: int = dataclasses.field(metadata=dict(static=True), default=2)
+
+
+def fit_gaussian_nb(x, y, *, n_classes, var_smoothing=1e-6):
+    x = jnp.asarray(x, jnp.float32)
+    y1h = jax.nn.one_hot(jnp.asarray(y), n_classes, dtype=jnp.float32)
+    count = jnp.maximum(y1h.sum(0), 1.0)                       # (C,)
+    mu = (y1h.T @ x) / count[:, None]                          # (C, F)
+    sq = (y1h.T @ (x * x)) / count[:, None]
+    var = jnp.maximum(sq - mu * mu, 0.0) + var_smoothing * x.var(0).max()
+    log_prior = jnp.log(count / count.sum())
+    return GaussianNB(mu=mu, var=var, log_prior=log_prior, n_classes=n_classes)
+
+
+def nb_log_likelihood(model: GaussianNB, x) -> jax.Array:
+    """Per-class joint log likelihood log P(y) + sum_i log P(x_i|y). (N, C)."""
+    x = jnp.asarray(x, jnp.float32)
+    d = x[:, None, :] - model.mu[None, :, :]                   # (N, C, F)
+    ll = -0.5 * (jnp.log(2 * jnp.pi * model.var)[None] + d * d / model.var[None])
+    return model.log_prior[None, :] + ll.sum(-1)
+
+
+def predict_nb(model: GaussianNB, x) -> jax.Array:
+    return jnp.argmax(nb_log_likelihood(model, x), axis=1)

@@ -1,0 +1,82 @@
+"""Linear SVM with one-vs-one hyperplanes, trained by hinge-loss SGD in JAX.
+
+The training output is exactly what IIsy's SVM mapping (§A.1) consumes: the
+hyperplane equations ``a·x + d`` for each of the m = k(k-1)/2 class pairs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class LinearSVM:
+    weights: jax.Array     # (m, F) hyperplane normals
+    bias: jax.Array        # (m,)
+    pairs: jax.Array       # (m, 2) int32 class pair (i, j); sign>0 votes i
+    mean: jax.Array        # (F,) feature standardization
+    scale: jax.Array       # (F,)
+    n_classes: int = dataclasses.field(metadata=dict(static=True), default=2)
+
+
+def _fit_binary(x, y_pm, key, epochs, lr, reg):
+    """Full-batch subgradient descent on hinge loss. y_pm in {-1, +1}."""
+    n, f = x.shape
+    w0 = jnp.zeros((f,), jnp.float32)
+    b0 = jnp.zeros((), jnp.float32)
+
+    def step(carry, i):
+        w, b = carry
+        margin = y_pm * (x @ w + b)
+        active = (margin < 1.0).astype(jnp.float32)
+        gw = reg * w - (active * y_pm) @ x / n
+        gb = -jnp.mean(active * y_pm)
+        eta = lr / (1.0 + 0.01 * i)
+        return (w - eta * gw, b - eta * gb), None
+
+    (w, b), _ = jax.lax.scan(step, (w0, b0), jnp.arange(epochs))
+    return w, b
+
+
+def fit_linear_svm(x, y, *, n_classes, epochs=300, lr=0.5, reg=1e-3, seed=0):
+    x = jnp.asarray(x, jnp.float32)
+    y = np.asarray(y)
+    mean = x.mean(0)
+    scale = jnp.maximum(x.std(0), 1e-6)
+    xs = (x - mean) / scale
+
+    pairs = list(itertools.combinations(range(n_classes), 2))
+    ws, bs = [], []
+    key = jax.random.PRNGKey(seed)
+    fit = jax.jit(_fit_binary, static_argnums=(3,))
+    for (i, j) in pairs:
+        m = (y == i) | (y == j)
+        xij = xs[np.where(m)[0]]
+        y_pm = jnp.where(jnp.asarray(y[m]) == i, 1.0, -1.0)
+        w, b = fit(xij, y_pm, key, epochs, lr, reg)
+        ws.append(w); bs.append(b)
+    return LinearSVM(weights=jnp.stack(ws), bias=jnp.stack(bs),
+                     pairs=jnp.asarray(pairs, jnp.int32),
+                     mean=mean, scale=scale, n_classes=n_classes)
+
+
+def svm_decision_values(model: LinearSVM, x) -> jax.Array:
+    """Raw hyperplane values (N, m) — the quantity IIsy tabulates."""
+    xs = (jnp.asarray(x, jnp.float32) - model.mean) / model.scale
+    return xs @ model.weights.T + model.bias
+
+
+def predict_svm(model: LinearSVM, x) -> jax.Array:
+    vals = svm_decision_values(model, x)               # (N, m)
+    n = vals.shape[0]
+    votes = jnp.zeros((n, model.n_classes), jnp.float32)
+    win_i = (vals > 0)
+    votes = votes.at[:, model.pairs[:, 0]].add(win_i.astype(jnp.float32))
+    votes = votes.at[:, model.pairs[:, 1]].add((~win_i).astype(jnp.float32))
+    return jnp.argmax(votes, axis=1)

@@ -1,0 +1,18 @@
+"""Backend model substrate: composable JAX transformer/SSM stack.
+
+Pure-function style: params are pytrees of arrays, every forward is a
+function of (params, batch). Sharding is annotated externally via
+repro.distributed.sharding rules so the same model code runs on 1 CPU
+device (smoke tests) and a 512-chip multi-pod mesh (dry-run).
+"""
+
+from repro.models.config import ArchConfig, MoEConfig, MLAConfig
+from repro.models.transformer import (
+    init_params,
+    param_shapes,
+    forward_train,
+    forward_prefill,
+    forward_decode,
+    init_decode_cache,
+    decode_cache_shapes,
+)

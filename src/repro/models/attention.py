@@ -1,0 +1,400 @@
+"""Attention variants: GQA (+qk-norm, +bias, +sliding window), blockwise
+"flash" attention for long prefill, MLA (DeepSeek latent attention) with a
+naive and an *absorbed* decode path, and cross-attention for enc-dec.
+
+Shapes: hidden (B, S, D); per-head tensors (B, S, H, hd).
+Caches are functional: every decode returns the updated cache pytree.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, apply_rope, rmsnorm
+
+F32 = jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# parameter builders
+# ---------------------------------------------------------------------------
+
+def gqa_params(key, cfg):
+    d, h, g, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    p = {"wq": dense_init(ks[0], (d, h * hd)),
+         "wk": dense_init(ks[1], (d, g * hd)),
+         "wv": dense_init(ks[2], (d, g * hd)),
+         "wo": dense_init(ks[3], (h * hd, d))}
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h * hd,), F32)
+        p["bk"] = jnp.zeros((g * hd,), F32)
+        p["bv"] = jnp.zeros((g * hd,), F32)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), F32)
+        p["k_norm"] = jnp.ones((hd,), F32)
+    return p
+
+
+def mla_params(key, cfg):
+    m = cfg.mla
+    d, h = cfg.d_model, cfg.n_heads
+    ks = jax.random.split(key, 5)
+    return {
+        "wq_a": dense_init(ks[0], (d, m.q_lora_rank)),
+        "q_norm": jnp.ones((m.q_lora_rank,), F32),
+        "wq_b": dense_init(ks[1], (m.q_lora_rank,
+                                   h * (m.qk_nope_dim + m.qk_rope_dim))),
+        "wkv_a": dense_init(ks[2], (d, m.kv_lora_rank + m.qk_rope_dim)),
+        "kv_norm": jnp.ones((m.kv_lora_rank,), F32),
+        "wkv_b": dense_init(ks[3], (m.kv_lora_rank,
+                                    h * (m.qk_nope_dim + m.v_head_dim))),
+        "wo": dense_init(ks[4], (h * m.v_head_dim, d)),
+    }
+
+
+def cross_attn_params(key, cfg):
+    return gqa_params(key, cfg)
+
+
+# ---------------------------------------------------------------------------
+# QKV projection (GQA)
+# ---------------------------------------------------------------------------
+
+def _project_qkv(p, cfg, x, positions):
+    from repro.distributed.sharding import hint_batch_heads
+    b, s, _ = x.shape
+    h, g, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = hint_batch_heads(q.reshape(b, s, h, hd))
+    k = hint_batch_heads(k.reshape(b, s, g, hd))
+    v = hint_batch_heads(v.reshape(b, s, g, hd))
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_norm"])
+        k = rmsnorm(k, p["k_norm"])
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _sdpa(q, k, v, mask, scale):
+    """q (B,Sq,H,hd), k/v (B,Sk,G,hd) grouped attention with bool mask."""
+    b, sq, h, hd = q.shape
+    g = k.shape[2]
+    q = q.reshape(b, sq, g, h // g, hd)
+    scores = jnp.einsum("bqgmd,bkgd->bgmqk", q, k,
+                        preferred_element_type=F32) * scale
+    if mask is not None:
+        scores = jnp.where(mask[:, None, None, :, :], scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bgmqk,bkgd->bqgmd", w, v)
+    return out.reshape(b, sq, h, hd)
+
+
+def causal_mask(sq, sk, window=None, offset=0):
+    """(1, Sq, Sk) bool. offset = number of kv positions before q[0]."""
+    qi = jnp.arange(sq)[:, None] + offset
+    ki = jnp.arange(sk)[None, :]
+    m = ki <= qi
+    if window is not None:
+        m = m & (qi - ki < window)
+    return m[None]
+
+
+def gqa_forward(p, cfg, x, positions, *, window=None, bidirectional=False):
+    """Full-sequence attention (training / short prefill)."""
+    q, k, v = _project_qkv(p, cfg, x, positions)
+    s = x.shape[1]
+    mask = None if bidirectional else causal_mask(s, s, window)
+    out = _sdpa(q, k, v, mask, 1.0 / jnp.sqrt(cfg.head_dim).astype(F32))
+    return out.reshape(x.shape[0], s, -1) @ p["wo"], (k, v)
+
+
+# ---------------------------------------------------------------------------
+# blockwise online-softmax attention (long prefill; O(S * block) memory)
+# ---------------------------------------------------------------------------
+
+def flash_attention(q, k, v, *, window=None, q_block=1024, k_block=1024,
+                    scale=None):
+    """Causal grouped attention via online softmax. q (B,S,H,hd).
+
+    Sequences are padded internally to block multiples: padded KV columns
+    sit at positions > any real query (causally masked out); padded query
+    rows are sliced off. v's head dim may differ from q/k's (MLA).
+    """
+    b, s_orig, h, hd = q.shape
+    g = k.shape[2]
+    hd_v = v.shape[-1]
+    scale = scale if scale is not None else 1.0 / jnp.sqrt(jnp.float32(hd))
+    q_block = min(q_block, s_orig)
+    k_block = min(k_block, s_orig)
+    pad = (-s_orig) % q_block
+    if q_block != k_block:
+        lcm = (q_block * k_block) // __import__("math").gcd(q_block, k_block)
+        pad = (-s_orig) % lcm
+    if pad:
+        padder = lambda a: jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        q, k, v = padder(q), padder(k), padder(v)
+    s = s_orig + pad
+    nq = s // q_block
+    nk = s // k_block
+    qb = q.reshape(b, nq, q_block, h, hd)
+
+    def per_qblock(qi, q_i):
+        # q_i (B, Qb, H, hd); scan kv blocks 0..nk-1, masked beyond causal
+        q_i = q_i.reshape(b, q_block, g, h // g, hd)
+
+        def step(carry, ki):
+            m_run, l_run, acc = carry
+            k_i = jax.lax.dynamic_slice_in_dim(k, ki * k_block, k_block, 1)
+            v_i = jax.lax.dynamic_slice_in_dim(v, ki * k_block, k_block, 1)
+            sc = jnp.einsum("bqgmd,bkgd->bgmqk", q_i, k_i,
+                            preferred_element_type=F32) * scale
+            qpos = qi * q_block + jnp.arange(q_block)[:, None]
+            kpos = ki * k_block + jnp.arange(k_block)[None, :]
+            msk = kpos <= qpos
+            if window is not None:
+                msk = msk & (qpos - kpos < window)
+            sc = jnp.where(msk[None, None, None], sc, -1e30)
+            m_new = jnp.maximum(m_run, sc.max(-1))
+            alpha = jnp.exp(m_run - m_new)
+            pexp = jnp.exp(sc - m_new[..., None])
+            l_new = l_run * alpha + pexp.sum(-1)
+            acc = acc * alpha[..., None] + jnp.einsum(
+                "bgmqk,bkgd->bgmqd", pexp, v_i.astype(F32))
+            return (m_new, l_new, acc), None
+
+        m0 = jnp.full((b, g, h // g, q_block), -1e30, F32)
+        l0 = jnp.zeros((b, g, h // g, q_block), F32)
+        a0 = jnp.zeros((b, g, h // g, q_block, hd_v), F32)
+        (m_f, l_f, acc), _ = jax.lax.scan(step, (m0, l0, a0), jnp.arange(nk))
+        out = acc / jnp.maximum(l_f[..., None], 1e-30)
+        return out.transpose(0, 3, 1, 2, 4).reshape(b, q_block, h, hd_v)
+
+    outs = jax.lax.map(lambda i: per_qblock(i, qb[:, i]), jnp.arange(nq))
+    out = outs.transpose(1, 0, 2, 3, 4).reshape(b, s, h, hd_v).astype(q.dtype)
+    return out[:, :s_orig]
+
+
+def gqa_prefill(p, cfg, x, positions, *, window=None, flash=True):
+    """Long prefill: blockwise attention, returns output and (k, v) cache."""
+    q, k, v = _project_qkv(p, cfg, x, positions)
+    if flash:
+        out = flash_attention(q, k, v, window=window)
+    else:
+        s = x.shape[1]
+        out = _sdpa(q, k, v, causal_mask(s, s, window),
+                    1.0 / jnp.sqrt(cfg.head_dim).astype(F32))
+    return out.reshape(x.shape[0], x.shape[1], -1) @ p["wo"], (k, v)
+
+
+# ---------------------------------------------------------------------------
+# decode (single token) with KV caches
+# ---------------------------------------------------------------------------
+
+def init_gqa_cache(cfg, batch, max_len, dtype=jnp.bfloat16, window=None,
+                   quantized=False):
+    """quantized=True stores K/V as int8 with a per-(slot, head) fp32
+    absmax scale — the paper's "action data bits" knob applied to the
+    serving backend's KV memory (halves cache HBM reads vs bf16)."""
+    size = min(max_len, window) if window else max_len
+    g, hd = cfg.n_kv_heads, cfg.head_dim
+    kv_dtype = jnp.int8 if quantized else dtype
+    c = {"k": jnp.zeros((batch, size, g, hd), kv_dtype),
+         "v": jnp.zeros((batch, size, g, hd), kv_dtype),
+         "pos": jnp.full((size,), -1, jnp.int32)}
+    if quantized:
+        c["k_scale"] = jnp.zeros((batch, size, g, 1), jnp.float32)
+        c["v_scale"] = jnp.zeros((batch, size, g, 1), jnp.float32)
+    return c
+
+
+def _q8(v):
+    """Symmetric int8 quantize along the last dim. -> (q, scale)."""
+    s = jnp.max(jnp.abs(v.astype(F32)), axis=-1, keepdims=True) / 127.0
+    s = jnp.maximum(s, 1e-8)
+    return jnp.round(v.astype(F32) / s).astype(jnp.int8), s
+
+
+def gqa_decode(p, cfg, x, pos, cache, *, window=None):
+    """x (B, 1, D), pos scalar int32. Returns (out (B,1,D), new cache)."""
+    b = x.shape[0]
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    q, k, v = _project_qkv(p, cfg, x, positions)
+    size = cache["k"].shape[1]
+    slot = pos % size if window else pos
+    quantized = "k_scale" in cache
+    if quantized:
+        k_q, k_s = _q8(k)
+        v_q, v_s = _q8(v)
+        ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_q, slot, 1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_q, slot, 1)
+        cks = jax.lax.dynamic_update_slice_in_dim(cache["k_scale"], k_s,
+                                                  slot, 1)
+        cvs = jax.lax.dynamic_update_slice_in_dim(cache["v_scale"], v_s,
+                                                  slot, 1)
+        k_eff = ck.astype(F32) * cks          # fused dequant (VMEM on TPU)
+        v_eff = cv.astype(F32) * cvs
+    else:
+        ck = jax.lax.dynamic_update_slice_in_dim(
+            cache["k"], k.astype(cache["k"].dtype), slot, 1)
+        cv = jax.lax.dynamic_update_slice_in_dim(
+            cache["v"], v.astype(cache["v"].dtype), slot, 1)
+        k_eff, v_eff = ck.astype(F32), cv.astype(F32)
+    cpos = jax.lax.dynamic_update_slice_in_dim(
+        cache["pos"], jnp.full((1,), pos, jnp.int32), slot, 0)
+    valid = (cpos >= 0) & (cpos <= pos)
+    if window is not None:
+        valid = valid & (pos - cpos < window)
+    g, hd = cfg.n_kv_heads, cfg.head_dim
+    h = cfg.n_heads
+    qh = q.reshape(b, g, h // g, hd)
+    scores = jnp.einsum("bgmd,bkgd->bgmk", qh, k_eff,
+                        preferred_element_type=F32) / jnp.sqrt(hd)
+    scores = jnp.where(valid[None, None, None, :], scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bgmk,bkgd->bgmd", w, v_eff)
+    out = out.reshape(b, 1, h * hd).astype(x.dtype) @ p["wo"]
+    new = {"k": ck, "v": cv, "pos": cpos}
+    if quantized:
+        new["k_scale"] = cks
+        new["v_scale"] = cvs
+    return out, new
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2/V3 latent attention)
+# ---------------------------------------------------------------------------
+
+def _mla_q(p, cfg, x, positions):
+    m = cfg.mla
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    q = rmsnorm(x @ p["wq_a"], p["q_norm"]) @ p["wq_b"]
+    q = q.reshape(b, s, h, m.qk_nope_dim + m.qk_rope_dim)
+    q_nope, q_rope = jnp.split(q, [m.qk_nope_dim], axis=-1)
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _mla_ckv(p, cfg, x, positions):
+    m = cfg.mla
+    kv = x @ p["wkv_a"]
+    c_kv, k_rope = jnp.split(kv, [m.kv_lora_rank], axis=-1)
+    c_kv = rmsnorm(c_kv, p["kv_norm"])
+    k_rope = apply_rope(k_rope[:, :, None, :], positions,
+                        cfg.rope_theta)[:, :, 0, :]         # shared head
+    return c_kv, k_rope
+
+
+def mla_forward(p, cfg, x, positions):
+    """Full-sequence MLA (training / prefill). Cache = (c_kv, k_rope).
+
+    Long sequences run blockwise: q/k are assembled as
+    concat(nope, rope) per head (the shared rope key broadcast across
+    heads) and fed through flash_attention — never materializing the
+    (B, H, S, S) score tensor (137 GB at train_4k for deepseek-v3).
+    """
+    m = cfg.mla
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    q_nope, q_rope = _mla_q(p, cfg, x, positions)
+    c_kv, k_rope = _mla_ckv(p, cfg, x, positions)
+    kv = (c_kv @ p["wkv_b"]).reshape(b, s, h, m.qk_nope_dim + m.v_head_dim)
+    k_nope, v = jnp.split(kv, [m.qk_nope_dim], axis=-1)
+    scale = 1.0 / jnp.sqrt(m.qk_nope_dim + m.qk_rope_dim).astype(F32)
+    if s >= 2048:
+        qf = jnp.concatenate([q_nope, q_rope], axis=-1)
+        kf = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope[:, :, None, :],
+                                      (b, s, h, m.qk_rope_dim))], axis=-1)
+        out = flash_attention(qf, kf, v, scale=scale)
+    else:
+        sc = (jnp.einsum("bqhd,bkhd->bhqk", q_nope, k_nope,
+                         preferred_element_type=F32)
+              + jnp.einsum("bqhd,bkd->bhqk", q_rope, k_rope,
+                           preferred_element_type=F32)) * scale
+        sc = jnp.where(causal_mask(s, s)[:, None], sc, -1e30)
+        w = jax.nn.softmax(sc, axis=-1).astype(v.dtype)
+        out = jnp.einsum("bhqk,bkhd->bqhd", w, v)
+    out = out.reshape(b, s, h * m.v_head_dim) @ p["wo"]
+    return out, (c_kv, k_rope)
+
+
+def init_mla_cache(cfg, batch, max_len, dtype=jnp.bfloat16):
+    m = cfg.mla
+    return {"c_kv": jnp.zeros((batch, max_len, m.kv_lora_rank), dtype),
+            "k_rope": jnp.zeros((batch, max_len, m.qk_rope_dim), dtype)}
+
+
+def mla_decode(p, cfg, x, pos, cache, *, absorb=True):
+    """Single-token MLA decode over the compressed cache.
+
+    absorb=False (naive): expand every cached latent back to per-head K/V
+    each step — O(S * H * (nope+v) * kv_lora) FLOPs and a huge transient.
+    absorb=True: fold W_uk into the query and W_uv into the output — the
+    attention runs directly in the 512-dim latent space; the cache is read
+    once. This is the §Perf memory-term optimization for decode_32k.
+    """
+    m = cfg.mla
+    b = x.shape[0]
+    h = cfg.n_heads
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    q_nope, q_rope = _mla_q(p, cfg, x, positions)       # (B,1,H,*)
+    c_new, r_new = _mla_ckv(p, cfg, x, positions)       # (B,1,lora),(B,1,rope)
+    ckv = jax.lax.dynamic_update_slice_in_dim(
+        cache["c_kv"], c_new.astype(cache["c_kv"].dtype), pos, 1)
+    krp = jax.lax.dynamic_update_slice_in_dim(
+        cache["k_rope"], r_new.astype(cache["k_rope"].dtype), pos, 1)
+    s_max = ckv.shape[1]
+    valid = jnp.arange(s_max) <= pos
+    scale = 1.0 / jnp.sqrt(m.qk_nope_dim + m.qk_rope_dim).astype(F32)
+    wkv_b = p["wkv_b"].reshape(m.kv_lora_rank, h, m.qk_nope_dim + m.v_head_dim)
+    w_uk = wkv_b[..., :m.qk_nope_dim]                   # (lora, H, nope)
+    w_uv = wkv_b[..., m.qk_nope_dim:]                   # (lora, H, v)
+
+    if absorb:
+        q_abs = jnp.einsum("bqhn,lhn->bqhl", q_nope, w_uk)   # (B,1,H,lora)
+        sc = (jnp.einsum("bqhl,bkl->bhqk", q_abs, ckv.astype(F32))
+              + jnp.einsum("bqhr,bkr->bhqk", q_rope, krp.astype(F32))) * scale
+        sc = jnp.where(valid[None, None, None, :], sc, -1e30)
+        w = jax.nn.softmax(sc, axis=-1)
+        ctx = jnp.einsum("bhqk,bkl->bqhl", w, ckv.astype(F32))  # latent ctx
+        out = jnp.einsum("bqhl,lhv->bqhv", ctx, w_uv)
+    else:
+        kv = jnp.einsum("bkl,lhe->bkhe", ckv.astype(F32), wkv_b)
+        k_nope, v = jnp.split(kv, [m.qk_nope_dim], axis=-1)
+        sc = (jnp.einsum("bqhn,bkhn->bhqk", q_nope, k_nope)
+              + jnp.einsum("bqhr,bkr->bhqk", q_rope, krp.astype(F32))) * scale
+        sc = jnp.where(valid[None, None, None, :], sc, -1e30)
+        w = jax.nn.softmax(sc, axis=-1)
+        out = jnp.einsum("bhqk,bkhv->bqhv", w, v)
+    out = out.reshape(b, 1, h * m.v_head_dim).astype(x.dtype) @ p["wo"]
+    return out, {"c_kv": ckv, "k_rope": krp}
+
+
+# ---------------------------------------------------------------------------
+# cross-attention (whisper decoder -> encoder states)
+# ---------------------------------------------------------------------------
+
+def cross_attention(p, cfg, x, enc_kv):
+    """x (B,S,D) queries; enc_kv = (k, v) precomputed from encoder output."""
+    b, s, _ = x.shape
+    h, g, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = (x @ p["wq"]).reshape(b, s, h, hd)
+    k, v = enc_kv
+    out = _sdpa(q, k, v, None, 1.0 / jnp.sqrt(hd).astype(F32))
+    return out.reshape(b, s, -1) @ p["wo"]
+
+
+def encode_cross_kv(p, cfg, enc_out):
+    b, t, _ = enc_out.shape
+    g, hd = cfg.n_kv_heads, cfg.head_dim
+    k = (enc_out @ p["wk"]).reshape(b, t, g, hd)
+    v = (enc_out @ p["wv"]).reshape(b, t, g, hd)
+    return k, v

@@ -1,0 +1,95 @@
+"""Shared neural building blocks (norms, rope, MLPs, init)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def dense_init(key, shape, scale=None):
+    """Truncated-normal fan-in init, fp32 master weights."""
+    fan_in = shape[0] if len(shape) >= 2 else max(shape[0], 1)
+    std = scale if scale is not None else 1.0 / np.sqrt(fan_in)
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * std)
+
+
+def rmsnorm(x, w, eps=1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps)).astype(x.dtype) * w
+
+
+def layernorm(x, w, b, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    return (((xf - mu) * jax.lax.rsqrt(var + eps)).astype(x.dtype) * w + b)
+
+
+def apply_norm(cfg, p, x):
+    if cfg.norm == "rmsnorm":
+        return rmsnorm(x, p["w"])
+    return layernorm(x, p["w"], p["b"])
+
+
+def norm_params(cfg, d):
+    if cfg.norm == "rmsnorm":
+        return {"w": jnp.ones((d,), jnp.float32)}
+    return {"w": jnp.ones((d,), jnp.float32), "b": jnp.zeros((d,), jnp.float32)}
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings
+# ---------------------------------------------------------------------------
+
+def rope_freqs(dim, theta):
+    return 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+
+
+def apply_rope(x, positions, theta=10000.0):
+    """x (..., S, H, hd), positions (..., S) -> same shape, rotated."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # (hd/2,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    cos = jnp.cos(angles)[..., None, :]                 # (..., S, 1, hd/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# feed-forward
+# ---------------------------------------------------------------------------
+
+def swiglu_params(key, d_model, d_ff):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"gate": dense_init(k1, (d_model, d_ff)),
+            "up": dense_init(k2, (d_model, d_ff)),
+            "down": dense_init(k3, (d_ff, d_model))}
+
+
+def swiglu(p, x):
+    h = jax.nn.silu(x @ p["gate"]) * (x @ p["up"])
+    return h @ p["down"]
+
+
+def gelu_mlp_params(key, d_model, d_ff):
+    k1, k2 = jax.random.split(key)
+    return {"up": dense_init(k1, (d_model, d_ff)),
+            "up_b": jnp.zeros((d_ff,), jnp.float32),
+            "down": dense_init(k2, (d_ff, d_model)),
+            "down_b": jnp.zeros((d_model,), jnp.float32)}
+
+
+def gelu_mlp(p, x):
+    return jax.nn.gelu(x @ p["up"] + p["up_b"]) @ p["down"] + p["down_b"]
+
+
+def sinusoidal_positions(n_pos, dim):
+    pos = np.arange(n_pos)[:, None]
+    i = np.arange(dim // 2)[None, :]
+    angle = pos / np.power(10000.0, 2 * i / dim)
+    out = np.concatenate([np.sin(angle), np.cos(angle)], axis=1)
+    return jnp.asarray(out, jnp.float32)

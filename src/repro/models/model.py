@@ -1,0 +1,106 @@
+"""Model registry: one uniform (init / train_step-able loss / prefill /
+decode) surface over the three backbone families (decoder-only, enc-dec,
+VLM decoder). The launcher, trainer, server and dry-run all go through
+this module and never branch on architecture internals.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as tfm
+from repro.models import whisper as whi
+from repro.models.config import ArchConfig
+
+F32 = jnp.float32
+
+MOE_AUX_WEIGHT = 0.01
+MTP_WEIGHT = 0.3
+
+
+def init_model(cfg: ArchConfig, key):
+    if cfg.encdec:
+        return whi.init_params(cfg, key)
+    return tfm.init_params(cfg, key)
+
+
+def model_param_shapes(cfg: ArchConfig):
+    return jax.eval_shape(lambda k: init_model(cfg, k), jax.random.PRNGKey(0))
+
+
+def _xent(logits, labels):
+    """Mean token cross-entropy, f32 logsumexp (vocab-sharding friendly)."""
+    logits = logits.astype(F32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None],
+                               axis=-1)[..., 0]
+    return jnp.mean(lse - gold)
+
+
+def loss_fn(params, cfg: ArchConfig, batch, *, remat=True):
+    """batch: tokens/labels (+frames or patch_embeds). -> (loss, metrics)."""
+    tokens, labels = batch["tokens"], batch["labels"]
+    if cfg.encdec:
+        logits, aux = whi.forward_train(params, cfg, tokens, batch["frames"],
+                                        remat=remat)
+    else:
+        logits, aux = tfm.forward_train(
+            params, cfg, tokens,
+            patch_embeds=batch.get("patch_embeds"), remat=remat)
+    loss = _xent(logits, labels)
+    total = loss + MOE_AUX_WEIGHT * aux["moe_aux"]
+    metrics = {"xent": loss, "moe_aux": aux["moe_aux"]}
+    if "mtp_logits" in aux:
+        # MTP head predicts token t+2: logits t covers label t+1
+        mtp = _xent(aux["mtp_logits"], labels[:, 1:])
+        total = total + MTP_WEIGHT * mtp
+        metrics["mtp_xent"] = mtp
+    metrics["loss"] = total
+    return total, metrics
+
+
+def prefill(params, cfg: ArchConfig, batch):
+    """-> (last-token logits (B, V), caches)."""
+    if cfg.encdec:
+        return whi.forward_prefill(params, cfg, batch["tokens"],
+                                   batch["frames"])
+    return tfm.forward_prefill(params, cfg, batch["tokens"],
+                               patch_embeds=batch.get("patch_embeds"))
+
+
+def decode_step(params, cfg: ArchConfig, token, pos, caches):
+    """-> (logits (B, V), new caches)."""
+    if cfg.encdec:
+        return whi.forward_decode(params, cfg, token, pos, caches)
+    return tfm.forward_decode(params, cfg, token, pos, caches)
+
+
+def init_decode_cache(cfg: ArchConfig, batch, max_len, dtype=jnp.bfloat16,
+                      quantize_kv=False):
+    if cfg.encdec:
+        return whi.init_decode_cache(cfg, batch, max_len,
+                                     cfg.n_frontend_tokens, dtype)
+    return tfm.init_decode_cache(cfg, batch, max_len, dtype,
+                                 quantize_kv=quantize_kv)
+
+
+def count_params(shapes) -> int:
+    import math
+    return sum(math.prod(l.shape) for l in jax.tree.leaves(shapes))
+
+
+def active_params(cfg: ArchConfig, total: int) -> int:
+    """Per-token active parameters (MoE: routed experts count top_k/E)."""
+    if cfg.moe is None:
+        return total
+    m = cfg.moe
+    per_expert = 3 * cfg.d_model * m.d_expert
+    n_moe_layers = sum(
+        1 for i in range(cfg.n_layers)
+        if cfg.moe is not None and i >= m.n_dense_layers and cfg.d_ff > 0)
+    inactive = n_moe_layers * per_expert * (m.n_experts - m.top_k)
+    return total - inactive

@@ -1,0 +1,408 @@
+"""Recurrent sequence blocks: RG-LRU (Griffin/RecurrentGemma) and
+xLSTM's mLSTM / sLSTM.
+
+All blocks expose the same triple of entry points:
+  <kind>_params(key, cfg)                -> param pytree
+  <kind>_block(p, cfg, x)                -> (y, final_state)   full sequence
+  <kind>_block_decode(p, cfg, x, state)  -> (y, new_state)     single token
+
+Full-sequence forms are parallel where the math allows it:
+  * RG-LRU is a linear recurrence  h_t = a_t h_{t-1} + u_t  — evaluated with
+    jax.lax.associative_scan (Blelloch), O(log S) depth.
+  * mLSTM's matrix memory is evaluated in its parallel quadratic form
+    (the xLSTM paper's eq. (2x): attention-like with a cumulative-gate
+    decay matrix) — O(S^2) compute, O(1) recurrent state for decode. The
+    long_500k shape only exercises the *decode* path, whose state is
+    (H, hd, hd) per layer, independent of context length.
+  * sLSTM has genuine hidden-to-hidden recurrence (its defining feature),
+    so the full-sequence form is a lax.scan over time.
+
+Decode states are plain pytrees of arrays — they live in the serving cache
+alongside KV caches.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+
+F32 = jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# causal depthwise conv1d (width w), used by RG-LRU and mLSTM branches
+# ---------------------------------------------------------------------------
+
+def conv1d_params(key, width, channels):
+    return {"w": dense_init(key, (width, channels), scale=0.3),
+            "b": jnp.zeros((channels,), F32)}
+
+
+def causal_conv1d(p, x):
+    """x (B, S, C) -> (B, S, C); y_t = b + sum_w W[w] * x_{t-w}."""
+    width = p["w"].shape[0]
+    y = jnp.zeros_like(x) + p["b"]
+    for w in range(width):
+        shifted = jnp.pad(x, ((0, 0), (w, 0), (0, 0)))[:, :x.shape[1]]
+        y = y + shifted * p["w"][w]
+    return y
+
+
+def causal_conv1d_decode(p, x1, conv_state):
+    """x1 (B, 1, C), conv_state (B, width-1, C) = previous inputs (oldest
+    first). Returns (y1, new_state)."""
+    width = p["w"].shape[0]
+    window = jnp.concatenate([conv_state, x1], axis=1)      # (B, width, C)
+    # window[:, -1] is x_t and must pair with W[0] (shift 0): flip taps
+    y = p["b"] + jnp.einsum("bwc,wc->bc", window,
+                            p["w"][::-1])[:, None, :]
+    return y, window[:, 1:]
+
+
+def conv_tail(x, width):
+    """Last width-1 positions of x (left-padded if S < width-1)."""
+    b, s, c = x.shape
+    pad = max(0, (width - 1) - s)
+    xp = jnp.pad(x, ((0, 0), (pad, 0), (0, 0)))
+    return xp[:, -(width - 1):]
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU block (Griffin recurrent block)
+# ---------------------------------------------------------------------------
+
+_RGLRU_C = 8.0
+
+
+def rglru_params(key, cfg):
+    d = cfg.d_model
+    w = cfg.rglru_width or d
+    ks = jax.random.split(key, 7)
+    # Lambda init so a = exp(-c*softplus(L)) lands in [0.9, 0.999]
+    u = jax.random.uniform(ks[0], (w,), F32, 0.9, 0.999)
+    lam = jnp.log(jnp.expm1(-jnp.log(u) / _RGLRU_C))
+    return {
+        "in_x": dense_init(ks[1], (d, w)),       # recurrent branch
+        "in_g": dense_init(ks[2], (d, w)),       # gate branch (GeLU)
+        "conv": conv1d_params(ks[3], cfg.conv1d_width, w),
+        "w_rg": dense_init(ks[4], (w, w), scale=0.02),  # recurrence gate
+        "b_rg": jnp.zeros((w,), F32),
+        "w_ig": dense_init(ks[5], (w, w), scale=0.02),  # input gate
+        "b_ig": jnp.zeros((w,), F32),
+        "lam": lam,
+        "out": dense_init(ks[6], (w, d)),
+    }
+
+
+def _rglru_scan_coeffs(p, u):
+    """u (B,S,W) conv output -> (a, gated_input) for the linear scan."""
+    r = jax.nn.sigmoid(u @ p["w_rg"] + p["b_rg"])
+    i = jax.nn.sigmoid(u @ p["w_ig"] + p["b_ig"])
+    log_a = -_RGLRU_C * jax.nn.softplus(p["lam"]) * r       # (B,S,W) <= 0
+    a = jnp.exp(log_a)
+    # sqrt(1 - a^2) computed stably from log a
+    beta = jnp.sqrt(jnp.maximum(-jnp.expm1(2.0 * log_a), 1e-12))
+    return a, beta * (i * u)
+
+
+def rglru_block(p, cfg, x):
+    """x (B,S,D) -> (y (B,S,D), state)."""
+    u = causal_conv1d(p["conv"], x @ p["in_x"])
+    g = jax.nn.gelu(x @ p["in_g"])
+    a, v = _rglru_scan_coeffs(p, u.astype(F32))
+
+    def combine(c1, c2):
+        a1, u1 = c1
+        a2, u2 = c2
+        return a1 * a2, a2 * u1 + u2
+
+    a_c, h = jax.lax.associative_scan(combine, (a, v), axis=1)
+    y = (h * g.astype(F32)).astype(x.dtype) @ p["out"]
+    state = {"h": h[:, -1], "conv": conv_tail(x @ p["in_x"], cfg.conv1d_width)}
+    return y, state
+
+
+def rglru_init_state(cfg, batch, dtype=F32):
+    w = cfg.rglru_width or cfg.d_model
+    return {"h": jnp.zeros((batch, w), F32),
+            "conv": jnp.zeros((batch, cfg.conv1d_width - 1, w), dtype)}
+
+
+def rglru_block_decode(p, cfg, x, state):
+    """x (B,1,D) -> (y (B,1,D), state)."""
+    u_in = x @ p["in_x"]
+    u, conv_state = causal_conv1d_decode(p["conv"], u_in, state["conv"])
+    g = jax.nn.gelu(x @ p["in_g"])
+    a, v = _rglru_scan_coeffs(p, u.astype(F32))
+    h = a[:, 0] * state["h"] + v[:, 0]
+    y = (h[:, None] * g.astype(F32)).astype(x.dtype) @ p["out"]
+    return y, {"h": h, "conv": conv_state}
+
+
+# ---------------------------------------------------------------------------
+# mLSTM block (xLSTM): matrix memory, exponential gating
+# ---------------------------------------------------------------------------
+
+def mlstm_params(key, cfg):
+    d = cfg.d_model
+    w = 2 * d                                   # up-projection factor 2
+    nh = cfg.n_heads
+    hd = w // nh
+    ks = jax.random.split(key, 9)
+    return {
+        "up_u": dense_init(ks[0], (d, w)),
+        "up_z": dense_init(ks[1], (d, w)),
+        "conv": conv1d_params(ks[2], cfg.conv1d_width, w),
+        # per-head block-diagonal q/k/v (the xLSTM BlockDiagonal linear)
+        "wq": dense_init(ks[3], (nh, hd, hd)),
+        "wk": dense_init(ks[4], (nh, hd, hd)),
+        "wv": dense_init(ks[5], (nh, hd, hd)),
+        "w_if": dense_init(ks[6], (w, 2 * cfg.n_heads), scale=0.02),
+        "b_if": jnp.concatenate([jnp.zeros((cfg.n_heads,), F32),
+                                 jnp.full((cfg.n_heads,), 3.0, F32)]),
+        "gn": jnp.ones((w,), F32),              # per-channel group norm gain
+        "down": dense_init(ks[7], (w, d)),
+        "skip": jnp.ones((w,), F32),            # learnable per-channel skip
+    }
+
+
+def _blockdiag(x_heads, w):
+    """x (B,S,H,hd) @ per-head (H, hd, hd) -> (B,S,H,hd)."""
+    return jnp.einsum("bshd,hde->bshe", x_heads, w)
+
+
+def _mlstm_qkv_gates(p, cfg, x):
+    u = x @ p["up_u"]
+    z = x @ p["up_z"]
+    c = jax.nn.silu(causal_conv1d(p["conv"], u))
+    b, s, w = u.shape
+    nh = cfg.n_heads
+    hd = w // nh
+    ch = c.reshape(b, s, nh, hd)
+    q = _blockdiag(ch, p["wq"])
+    k = _blockdiag(ch, p["wk"]) / jnp.sqrt(jnp.float32(hd))
+    v = _blockdiag(u.reshape(b, s, nh, hd), p["wv"])
+    g = c @ p["w_if"] + p["b_if"]                                # (B,S,2H)
+    log_i = g[..., :nh].astype(F32)                              # pre-act ~ log i
+    log_f = jax.nn.log_sigmoid(g[..., nh:].astype(F32))          # f = sigmoid
+    return q, k, v, z, c, log_i, log_f
+
+
+def _headnorm(h, gain):
+    """Per-head RMS norm then flatten; h (B,S,H,hd), gain (H*hd,)."""
+    var = jnp.mean(jnp.square(h), axis=-1, keepdims=True)
+    hn = h * jax.lax.rsqrt(var + 1e-6)
+    b, s = h.shape[:2]
+    return hn.reshape(b, s, -1) * gain
+
+
+MLSTM_CHUNK = 256
+
+
+def mlstm_block(p, cfg, x):
+    """Chunkwise-parallel mLSTM: intra-chunk quadratic + carried matrix
+    state across chunks (lax.scan). O(S*L) memory instead of O(S^2)."""
+    b, s, d = x.shape
+    q, k, v, z, c, log_i, log_f = _mlstm_qkv_gates(p, cfg, x)
+    nh = cfg.n_heads
+    hd = q.shape[-1]
+    L = MLSTM_CHUNK if s % MLSTM_CHUNK == 0 else s
+    nc = s // L
+
+    # chunked views: (NC, B, L, H, ...)
+    def chunked(a):
+        return jnp.swapaxes(a.reshape(b, nc, L, *a.shape[2:]), 0, 1)
+
+    qc, kc, vc = chunked(q.astype(F32)), chunked(k.astype(F32)), \
+        chunked(v.astype(F32))
+    lic, lfc = chunked(log_i), chunked(log_f)
+    causal = jnp.tril(jnp.ones((L, L), bool))
+
+    def chunk_step(carry, inp):
+        C, n, m_st = carry
+        qi, ki, vi, li, lf = inp                       # (B,L,H,*) / (B,L,H)
+        lf_cum = jnp.cumsum(lf, axis=1)                # (B,L,H)
+        lf_tot = lf_cum[:, -1]                         # (B,H)
+        # inter-chunk: query i sees state with decay lf_cum[i] (+ m_st)
+        b_i = lf_cum + m_st[:, None, :]                # (B,L,H)
+        # intra-chunk decay matrix
+        dmat = (lf_cum[:, :, None, :] - lf_cum[:, None, :, :]
+                + li[:, None, :, :])                   # (B,Lq,Lk,H)
+        dmat = jnp.where(causal[None, :, :, None], dmat, -jnp.inf)
+        m_i = jnp.maximum(jnp.maximum(jnp.max(dmat, axis=2), b_i), 0.0)
+        dexp = jnp.exp(dmat - m_i[:, :, None, :])      # (B,Lq,Lk,H)
+        inter_sc = jnp.exp(b_i - m_i)                  # (B,L,H)
+
+        scores = jnp.einsum("blhd,bmhd->blmh", qi, ki) * dexp
+        num = (jnp.einsum("blmh,bmhe->blhe", scores, vi)
+               + inter_sc[..., None]
+               * jnp.einsum("blhd,bhde->blhe", qi, C))
+        den = (scores.sum(axis=2)
+               + inter_sc * jnp.einsum("blhd,bhd->blh", qi, n))
+        hval = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_i))[..., None]
+
+        # state update to end of chunk
+        dlast = lf_tot[:, None, :] - lf_cum + li       # (B,L,H)
+        m_new = jnp.maximum(lf_tot + m_st, jnp.max(dlast, axis=1))
+        carry_sc = jnp.exp(lf_tot + m_st - m_new)      # (B,H)
+        wgt = jnp.exp(dlast - m_new[:, None, :])       # (B,L,H)
+        C_new = (carry_sc[..., None, None] * C
+                 + jnp.einsum("blh,blhd,blhe->bhde", wgt, ki, vi))
+        n_new = (carry_sc[..., None] * n
+                 + jnp.einsum("blh,blhd->bhd", wgt, ki))
+        return (C_new, n_new, m_new), hval
+
+    C0 = jnp.zeros((b, nh, hd, hd), F32)
+    n0 = jnp.zeros((b, nh, hd), F32)
+    m0 = jnp.full((b, nh), -1e30, F32)
+    (C, n, m_f), hs = jax.lax.scan(chunk_step, (C0, n0, m0),
+                                   (qc, kc, vc, lic, lfc))
+    h = jnp.swapaxes(hs, 0, 1).reshape(b, s, nh, hd)   # (B,S,H,hd)
+
+    hn = _headnorm(h, p["gn"]) + c.astype(F32) * p["skip"]
+    y = (hn * jax.nn.silu(z.astype(F32))).astype(x.dtype) @ p["down"]
+    state = {"C": C, "n": n, "m": m_f,
+             "conv": conv_tail(x @ p["up_u"], cfg.conv1d_width)}
+    return y, state
+
+
+def mlstm_init_state(cfg, batch, dtype=F32):
+    w = 2 * cfg.d_model
+    nh = cfg.n_heads
+    hd = w // nh
+    return {"C": jnp.zeros((batch, nh, hd, hd), F32),
+            "n": jnp.zeros((batch, nh, hd), F32),
+            "m": jnp.full((batch, nh), -1e30, F32),
+            "conv": jnp.zeros((batch, cfg.conv1d_width - 1, w), dtype)}
+
+
+def mlstm_block_decode(p, cfg, x, state):
+    """Single-token recurrent mLSTM step. x (B,1,D)."""
+    b = x.shape[0]
+    nh = cfg.n_heads
+    u = x @ p["up_u"]
+    z = x @ p["up_z"]
+    cval, conv_state = causal_conv1d_decode(p["conv"], u, state["conv"])
+    cact = jax.nn.silu(cval)
+    w = u.shape[-1]
+    hd = w // nh
+    ch = cact.reshape(b, 1, nh, hd)
+    q = _blockdiag(ch, p["wq"])[:, 0]
+    k = _blockdiag(ch, p["wk"])[:, 0] / jnp.sqrt(jnp.float32(hd))
+    v = _blockdiag(u.reshape(b, 1, nh, hd), p["wv"])[:, 0]
+    g = (cact @ p["w_if"] + p["b_if"])[:, 0]                     # (B,2H)
+    log_i = g[:, :nh].astype(F32)
+    log_f = jax.nn.log_sigmoid(g[:, nh:].astype(F32))
+
+    m_new = jnp.maximum(log_f + state["m"], log_i)               # (B,H)
+    f_sc = jnp.exp(log_f + state["m"] - m_new)
+    i_sc = jnp.exp(log_i - m_new)
+    C = f_sc[..., None, None] * state["C"] + \
+        i_sc[..., None, None] * jnp.einsum("bhd,bhe->bhde",
+                                           k.astype(F32), v.astype(F32))
+    n = f_sc[..., None] * state["n"] + i_sc[..., None] * k.astype(F32)
+    num = jnp.einsum("bhde,bhd->bhe", C, q.astype(F32))
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", n, q.astype(F32))),
+                      jnp.exp(-m_new))
+    h = (num / den[..., None])[:, None]                          # (B,1,H,hd)
+    hn = _headnorm(h, p["gn"]) + cact.astype(F32) * p["skip"]
+    y = (hn * jax.nn.silu(z.astype(F32))).astype(x.dtype) @ p["down"]
+    return y, {"C": C, "n": n, "m": m_new, "conv": conv_state}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM block (xLSTM): scalar memory, true hidden-to-hidden recurrence
+# ---------------------------------------------------------------------------
+
+def slstm_params(key, cfg):
+    d = cfg.d_model
+    nh = cfg.n_heads
+    hd = d // nh
+    ks = jax.random.split(key, 6)
+    d_up = int(d * 4 / 3)
+    return {
+        # input projections for z, i, f, o (4 gates)
+        "w_in": dense_init(ks[0], (d, 4 * d)),
+        "b_in": jnp.concatenate([
+            jnp.zeros((d,), F32),                 # z
+            jnp.zeros((d,), F32),                 # i
+            jnp.full((d,), 3.0, F32),             # f (open at init)
+            jnp.zeros((d,), F32)]),               # o
+        # block-diagonal (per-head) hidden-to-hidden recurrence
+        "w_rec": dense_init(ks[1], (nh, hd, 4 * hd), scale=0.02),
+        "gn": jnp.ones((d,), F32),
+        # post-block GeGLU FFN, factor 4/3
+        "ffn_gate": dense_init(ks[2], (d, d_up)),
+        "ffn_up": dense_init(ks[3], (d, d_up)),
+        "ffn_down": dense_init(ks[4], (d_up, d)),
+    }
+
+
+def _slstm_step(p, cfg, xg, carry):
+    """One time step. xg (B, 4D) pre-computed input gates; carry pytree."""
+    c, n, h, m = carry["c"], carry["n"], carry["h"], carry["m"]
+    b = xg.shape[0]
+    nh = cfg.n_heads
+    d = c.shape[1]
+    hd = d // nh
+    hh = h.reshape(b, nh, hd)
+    rec = jnp.einsum("bhd,hde->bhe", hh, p["w_rec"]).reshape(b, 4 * d)
+    g = xg + rec
+    zt = jnp.tanh(g[:, :d])
+    log_i = g[:, d:2 * d].astype(F32)
+    log_f = jax.nn.log_sigmoid(g[:, 2 * d:3 * d].astype(F32))
+    o = jax.nn.sigmoid(g[:, 3 * d:])
+    m_new = jnp.maximum(log_f + m, log_i)
+    i_sc = jnp.exp(log_i - m_new)
+    f_sc = jnp.exp(log_f + m - m_new)
+    c_new = f_sc * c + i_sc * zt
+    n_new = f_sc * n + i_sc
+    h_new = o * (c_new / jnp.maximum(n_new, 1e-6))
+    return {"c": c_new, "n": n_new, "h": h_new, "m": m_new}
+
+
+def slstm_init_state(cfg, batch, dtype=F32):
+    d = cfg.d_model
+    return {"c": jnp.zeros((batch, d), F32), "n": jnp.zeros((batch, d), F32),
+            "h": jnp.zeros((batch, d), F32),
+            "m": jnp.full((batch, d), -1e30, F32)}
+
+
+def _slstm_ffn(p, h):
+    return (jax.nn.gelu(h @ p["ffn_gate"]) * (h @ p["ffn_up"])) @ p["ffn_down"]
+
+
+def slstm_block(p, cfg, x):
+    """Sequential scan over time. x (B,S,D) -> (y, state)."""
+    b, s, d = x.shape
+    xg = x @ p["w_in"] + p["b_in"]                               # (B,S,4D)
+
+    def step(carry, xt):
+        new = _slstm_step(p, cfg, xt, carry)
+        return new, new["h"]
+
+    init = slstm_init_state(cfg, b)
+    state, hs = jax.lax.scan(step, init, jnp.swapaxes(xg, 0, 1))
+    h = jnp.swapaxes(hs, 0, 1)                                   # (B,S,D)
+    var = jnp.mean(jnp.square(h.reshape(b, s, cfg.n_heads, -1)),
+                   axis=-1, keepdims=True)
+    hn = (h.reshape(b, s, cfg.n_heads, -1)
+          * jax.lax.rsqrt(var + 1e-6)).reshape(b, s, d) * p["gn"]
+    y = _slstm_ffn(p, hn.astype(x.dtype))
+    return y, state
+
+
+def slstm_block_decode(p, cfg, x, state):
+    b = x.shape[0]
+    xg = (x @ p["w_in"] + p["b_in"])[:, 0]
+    new = _slstm_step(p, cfg, xg, state)
+    h = new["h"][:, None]
+    d = x.shape[-1]
+    var = jnp.mean(jnp.square(h.reshape(b, 1, cfg.n_heads, -1)),
+                   axis=-1, keepdims=True)
+    hn = (h.reshape(b, 1, cfg.n_heads, -1)
+          * jax.lax.rsqrt(var + 1e-6)).reshape(b, 1, d) * p["gn"]
+    y = _slstm_ffn(p, hn.astype(x.dtype))
+    return y, new

@@ -1,0 +1,372 @@
+"""Composable decoder stack driven by ArchConfig.
+
+Layer plan / compile-time scaling
+---------------------------------
+Layers are grouped into *segments*: maximal runs where the per-layer spec
+sequence is periodic with the arch's block pattern. Each segment's params
+are stacked over periods and executed with ``jax.lax.scan`` — so HLO size
+and compile time scale with the number of *distinct* layer specs (2-3 for
+every assigned arch), not with n_layers (61 for deepseek-v3). Remainders
+that don't fill a period run unrolled.
+
+Per-layer wiring (pre-norm residual):
+  x = x + Block(norm1(x))          Block in {gqa, local gqa, MLA, RG-LRU,
+                                             mLSTM, sLSTM}
+  x = x + FFN(norm2(x))            FFN in {swiglu, moe, none}
+
+Three entry modes share the same layer code:
+  train    full sequence, no caches, returns (logits, aux)
+  prefill  full sequence, returns (logits, caches)
+  decode   one token + caches, returns (logits, new caches)
+
+Caches mirror the segment structure (stacked leading period dim), so the
+decode step scans (params, cache) jointly.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as att
+from repro.models import moe as moe_mod
+from repro.models import recurrent as rec
+from repro.models.config import ArchConfig
+from repro.models.layers import (apply_norm, dense_init, norm_params,
+                                 swiglu, swiglu_params)
+
+F32 = jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# layer plan
+# ---------------------------------------------------------------------------
+
+def _layer_spec(cfg: ArchConfig, i: int):
+    block = cfg.block_kind(i)
+    if block == "attn" and cfg.attn_kind == "mla":
+        block = "mla"
+    if cfg.d_ff == 0:
+        ffn = "none"
+    elif cfg.moe is not None and i >= cfg.moe.n_dense_layers:
+        ffn = "moe"
+    else:
+        ffn = "dense"
+    return (block, ffn)
+
+
+def layer_plan(cfg: ArchConfig):
+    """-> list of segments: {"specs": tuple[LayerSpec], "n_periods": int}.
+
+    A segment with n_periods > 1 is scanned; n_periods == 1 runs inline.
+    """
+    specs = [_layer_spec(cfg, i) for i in range(cfg.n_layers)]
+    period = len(cfg.block_pattern)
+    segments = []
+    i = 0
+    while i < cfg.n_layers:
+        # longest periodic run starting at i
+        pat = tuple(specs[i:i + period])
+        n = 0
+        while (i + (n + 1) * period <= cfg.n_layers
+               and tuple(specs[i + n * period:i + (n + 1) * period]) == pat):
+            n += 1
+        if n >= 1 and len(pat) == period:
+            segments.append({"specs": pat, "n_periods": n})
+            i += n * period
+        else:   # ragged tail: single layers
+            segments.append({"specs": (specs[i],), "n_periods": 1})
+            i += 1
+    return segments
+
+
+# ---------------------------------------------------------------------------
+# per-layer params
+# ---------------------------------------------------------------------------
+
+def _init_block(cfg, key, kind):
+    if kind in ("attn", "local_attn"):
+        return att.gqa_params(key, cfg)
+    if kind == "mla":
+        return att.mla_params(key, cfg)
+    if kind == "rglru":
+        return rec.rglru_params(key, cfg)
+    if kind == "mlstm":
+        return rec.mlstm_params(key, cfg)
+    if kind == "slstm":
+        return rec.slstm_params(key, cfg)
+    raise ValueError(kind)
+
+
+def _init_layer(cfg, key, spec):
+    block, ffn = spec
+    k1, k2 = jax.random.split(key)
+    p = {"norm1": norm_params(cfg, cfg.d_model),
+         "block": _init_block(cfg, k1, block)}
+    if ffn != "none":
+        p["norm2"] = norm_params(cfg, cfg.d_model)
+        p["ffn"] = (moe_mod.moe_params(k2, cfg) if ffn == "moe"
+                    else swiglu_params(k2, cfg.d_model, cfg.d_ff))
+    return p
+
+
+def _init_period(cfg, key, specs):
+    ks = jax.random.split(key, len(specs))
+    return [_init_layer(cfg, k, s) for k, s in zip(ks, specs)]
+
+
+def init_params(cfg: ArchConfig, key) -> dict:
+    ks = jax.random.split(key, 8)
+    segs = []
+    for si, seg in enumerate(layer_plan(cfg)):
+        kseg = jax.random.fold_in(ks[1], si)
+        if seg["n_periods"] == 1:
+            segs.append(_init_period(cfg, kseg, seg["specs"]))
+        else:
+            pks = jax.random.split(kseg, seg["n_periods"])
+            segs.append(jax.vmap(
+                lambda k: _init_period(cfg, k, seg["specs"]))(pks))
+    p = {
+        "embed": dense_init(ks[0], (cfg.vocab_size, cfg.d_model), scale=0.02),
+        "segments": segs,
+        "final_norm": norm_params(cfg, cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = dense_init(ks[2], (cfg.d_model, cfg.vocab_size))
+    if cfg.frontend == "image_patches":
+        p["patch_proj"] = dense_init(ks[3], (cfg.frontend_dim, cfg.d_model))
+    if cfg.mtp:
+        p["mtp"] = {"proj": dense_init(ks[4], (2 * cfg.d_model, cfg.d_model)),
+                    "layer": _init_layer(cfg, ks[5],
+                                         _layer_spec(cfg, cfg.n_layers - 1)),
+                    "norm": norm_params(cfg, cfg.d_model)}
+    return p
+
+
+def param_shapes(cfg: ArchConfig):
+    """Shape/dtype tree without allocating (for dry-run / checkpoints)."""
+    return jax.eval_shape(
+        lambda k: init_params(cfg, k), jax.random.PRNGKey(0))
+
+
+# ---------------------------------------------------------------------------
+# per-layer forward (mode in {"train", "prefill", "decode"})
+# ---------------------------------------------------------------------------
+
+def _window(cfg, kind):
+    if kind == "local_attn":
+        return cfg.local_window
+    return cfg.sliding_window   # None for full attention
+
+
+def _block_apply(p, cfg, kind, x, positions, mode, cache, pos):
+    """-> (y, new_cache)."""
+    if kind in ("attn", "local_attn"):
+        w = _window(cfg, kind)
+        if mode == "decode":
+            return att.gqa_decode(p, cfg, x, pos, cache, window=w)
+        y, kv = att.gqa_prefill(p, cfg, x, positions, window=w,
+                                flash=x.shape[1] >= 2048)
+        if mode == "train":
+            return y, None
+        return y, _kv_to_cache(cfg, kv, positions, w)
+    if kind == "mla":
+        if mode == "decode":
+            return att.mla_decode(p, cfg, x, pos, cache)
+        y, (c_kv, k_rope) = att.mla_forward(p, cfg, x, positions)
+        if mode == "train":
+            return y, None
+        return y, {"c_kv": c_kv, "k_rope": k_rope}
+    fwd = {"rglru": (rec.rglru_block, rec.rglru_block_decode),
+           "mlstm": (rec.mlstm_block, rec.mlstm_block_decode),
+           "slstm": (rec.slstm_block, rec.slstm_block_decode)}[kind]
+    if mode == "decode":
+        return fwd[1](p, cfg, x, cache)
+    y, state = fwd[0](p, cfg, x)
+    return y, (state if mode == "prefill" else None)
+
+
+def _kv_to_cache(cfg, kv, positions, window):
+    """Turn prefill (k, v) into the decode ring cache layout."""
+    k, v = kv
+    s = k.shape[1]
+    size = min(s, window) if window else s
+    pos_ids = positions[0]                           # (S,) assume aligned
+    if window and s > size:
+        k, v, pos_ids = k[:, -size:], v[:, -size:], pos_ids[-size:]
+    # ring layout: slot = pos % size
+    slots = pos_ids % size
+    order = jnp.argsort(slots)
+    return {"k": k[:, order], "v": v[:, order], "pos": pos_ids[order]}
+
+
+def _layer_apply(p, cfg, spec, x, positions, mode, cache, pos):
+    """-> (x, new_cache, aux)."""
+    block, ffn = spec
+    h = apply_norm(cfg, p["norm1"], x)
+    y, new_cache = _block_apply(p["block"], cfg, block, h, positions,
+                                mode, cache, pos)
+    x = x + y
+    aux = jnp.zeros((), F32)
+    if ffn == "dense":
+        x = x + swiglu(p["ffn"], apply_norm(cfg, p["norm2"], x))
+    elif ffn == "moe":
+        y, aux = moe_mod.moe_forward(p["ffn"], cfg,
+                                     apply_norm(cfg, p["norm2"], x))
+        x = x + y
+    return x, new_cache, aux
+
+
+def _period_apply(period_params, cfg, specs, x, positions, mode,
+                  period_cache, pos):
+    new_caches = []
+    aux = jnp.zeros((), F32)
+    for li, (p, spec) in enumerate(zip(period_params, specs)):
+        c = None if period_cache is None else period_cache[li]
+        x, nc, a = _layer_apply(p, cfg, spec, x, positions, mode, c, pos)
+        new_caches.append(nc)
+        aux = aux + a
+    return x, new_caches, aux
+
+
+# ---------------------------------------------------------------------------
+# stack forward
+# ---------------------------------------------------------------------------
+
+def _run_segments(params, cfg, x, positions, mode, caches, pos, remat):
+    """caches: list aligned with segments (None in train mode)."""
+    new_caches = []
+    aux_total = jnp.zeros((), F32)
+    plan = layer_plan(cfg)
+    for si, seg in enumerate(plan):
+        seg_p = params["segments"][si]
+        specs = seg["specs"]
+        seg_cache = None if caches is None else caches[si]
+        if seg["n_periods"] == 1:
+            x, nc, aux = _period_apply(seg_p, cfg, specs, x, positions,
+                                       mode, seg_cache, pos)
+            new_caches.append(nc)
+            aux_total = aux_total + aux
+        else:
+            def body(carry, xs):
+                xc, aux_c = carry
+                if mode == "decode":
+                    pp, pc = xs
+                else:
+                    pp, pc = xs, None
+                xc, nc, aux = _period_apply(pp, cfg, specs, xc, positions,
+                                            mode, pc, pos)
+                return (xc, aux_c + aux), nc
+
+            if remat:
+                body = jax.checkpoint(body)
+            xs = (seg_p, seg_cache) if mode == "decode" else seg_p
+            (x, aux_total), nc = jax.lax.scan(body, (x, aux_total), xs)
+            new_caches.append(nc if mode != "train" else None)
+    return x, new_caches, aux_total
+
+
+def _embed(params, cfg, tokens, patch_embeds=None, frames=None):
+    x = params["embed"][tokens]                      # (B, S, D)
+    if cfg.frontend == "image_patches" and patch_embeds is not None:
+        pe = patch_embeds.astype(x.dtype) @ params["patch_proj"]
+        x = jnp.concatenate([pe, x], axis=1)
+    return x
+
+
+def _logits(params, cfg, x):
+    x = apply_norm(cfg, params["final_norm"], x)
+    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    return x @ head
+
+
+def forward_train(params, cfg: ArchConfig, tokens, *, patch_embeds=None,
+                  remat=True):
+    """tokens (B, S) -> (logits (B, S_text_out, V), aux losses dict).
+
+    With an image frontend, logits cover only the text positions.
+    """
+    b, s = tokens.shape
+    x = _embed(params, cfg, tokens, patch_embeds)
+    positions = jnp.broadcast_to(jnp.arange(x.shape[1]), (b, x.shape[1]))
+    x, _, aux = _run_segments(params, cfg, x, positions, "train",
+                              None, None, remat)
+    n_front = x.shape[1] - s
+    xt = x[:, n_front:]
+    logits = _logits(params, cfg, xt)
+    out_aux = {"moe_aux": aux}
+    if cfg.mtp:
+        # DeepSeek-V3 MTP: one extra layer predicts token t+2 from
+        # concat(h_t, embed(token_{t+1})), sharing the embedding/head.
+        emb_next = params["embed"][tokens]
+        h_in = jnp.concatenate([xt[:, :-1], emb_next[:, 1:]], axis=-1)
+        h = h_in @ params["mtp"]["proj"]
+        h, _, _ = _period_apply([params["mtp"]["layer"]], cfg,
+                                (_layer_spec(cfg, cfg.n_layers - 1),),
+                                h, positions[:, 1:], "train", None, None)
+        out_aux["mtp_logits"] = _logits(
+            {**params, "final_norm": params["mtp"]["norm"]}, cfg, h)
+    return logits, out_aux
+
+
+def forward_prefill(params, cfg: ArchConfig, tokens, *, patch_embeds=None):
+    """-> (last-position logits (B, V), caches)."""
+    b, s = tokens.shape
+    x = _embed(params, cfg, tokens, patch_embeds)
+    positions = jnp.broadcast_to(jnp.arange(x.shape[1]), (b, x.shape[1]))
+    x, caches, _ = _run_segments(params, cfg, x, positions, "prefill",
+                                 None, None, False)
+    return _logits(params, cfg, x[:, -1]), caches
+
+
+def forward_decode(params, cfg: ArchConfig, token, pos, caches):
+    """token (B,) int32, pos scalar -> (logits (B, V), new caches)."""
+    x = params["embed"][token][:, None, :]           # (B, 1, D)
+    positions = jnp.full((x.shape[0], 1), pos, jnp.int32)
+    x, new_caches, _ = _run_segments(params, cfg, x, positions, "decode",
+                                     caches, pos, False)
+    return _logits(params, cfg, x[:, 0]), new_caches
+
+
+# ---------------------------------------------------------------------------
+# decode cache init (shape-faithful for every block kind)
+# ---------------------------------------------------------------------------
+
+def _layer_cache(cfg, spec, batch, max_len, dtype, quantize_kv=False):
+    block, _ = spec
+    if block in ("attn", "local_attn"):
+        return att.init_gqa_cache(cfg, batch, max_len, dtype,
+                                  window=_window(cfg, block),
+                                  quantized=quantize_kv)
+    if block == "mla":
+        return att.init_mla_cache(cfg, batch, max_len, dtype)
+    if block == "rglru":
+        return rec.rglru_init_state(cfg, batch, dtype)
+    if block == "mlstm":
+        return rec.mlstm_init_state(cfg, batch, dtype)
+    if block == "slstm":
+        return rec.slstm_init_state(cfg, batch, dtype)
+    raise ValueError(block)
+
+
+def init_decode_cache(cfg: ArchConfig, batch, max_len, dtype=jnp.bfloat16,
+                      quantize_kv=False):
+    caches = []
+    for seg in layer_plan(cfg):
+        per = [_layer_cache(cfg, s, batch, max_len, dtype, quantize_kv)
+               for s in seg["specs"]]
+        if seg["n_periods"] == 1:
+            caches.append(per)
+        else:
+            caches.append(jax.tree.map(
+                lambda a: jnp.broadcast_to(
+                    a, (seg["n_periods"],) + a.shape).copy(), per))
+    return caches
+
+
+def decode_cache_shapes(cfg: ArchConfig, batch, max_len, dtype=jnp.bfloat16):
+    return jax.eval_shape(
+        functools.partial(init_decode_cache, cfg, batch, max_len, dtype))

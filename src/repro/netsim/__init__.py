@@ -1,0 +1,19 @@
+"""Network feature extraction (§5 of the paper), in JAX.
+
+The switch parser + stateful registers become JAX ops over packet arrays:
+packet-level features are pure maps, flow-level features are hash + segment
+reductions (the register-per-flow analog), aggregate features reduce over
+flow groups, and file-level features parse payload byte arrays (the paper's
+fixed-width csv demonstration, incl. features split across packets).
+"""
+
+from repro.netsim.packets import synth_trace, PacketTrace
+from repro.netsim.features import (
+    packet_features,
+    flow_features,
+    aggregate_features,
+    file_features_csv,
+    stitch_split_payload,
+    encode_csv_payload,
+    fnv1a_hash,
+)

@@ -1,0 +1,167 @@
+"""Feature extraction at four granularities (§5), as JAX dataflow.
+
+Switch mechanism -> JAX realization:
+  parser header extraction   -> pure elementwise maps over packet arrays
+  hash(flow 5-tuple)         -> vectorized FNV-1a-style integer hash
+  per-flow registers         -> jax.ops.segment_* keyed by hash bucket
+  aggregate registers        -> segment reductions over coarser keys
+  payload parsing (files)    -> fixed-stride byte-array slicing, incl.
+                                stitching a field split across packets
+                                (§5.3 "examining payload across packets")
+
+Hash-bucket collisions are real (they are on the switch too): features of
+colliding flows merge, exactly like two flows sharing a register slot.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def fnv1a_hash(*cols, n_buckets: int) -> jax.Array:
+    """Vectorized 32-bit FNV-1a over integer columns -> bucket id."""
+    h = jnp.full(cols[0].shape, 2166136261, jnp.uint32)
+    for c in cols:
+        c = jnp.asarray(c).astype(jnp.uint32)
+        for shift in (0, 8, 16, 24):
+            byte = (c >> shift) & jnp.uint32(0xFF)
+            h = (h ^ byte) * jnp.uint32(16777619)
+    return (h % jnp.uint32(n_buckets)).astype(jnp.int32)
+
+
+def packet_features(trace) -> jax.Array:
+    """Stateless per-packet features (parser stage).
+
+    Columns: sport, dport, proto, length, is_sm_ips_ports (src==dst port),
+    direction. -> (P, 6) float32
+    """
+    sport = jnp.asarray(trace.sport, jnp.float32)
+    dport = jnp.asarray(trace.dport, jnp.float32)
+    return jnp.stack([
+        sport,
+        dport,
+        jnp.asarray(trace.proto, jnp.float32),
+        jnp.asarray(trace.length, jnp.float32),
+        (sport == dport).astype(jnp.float32),
+        jnp.asarray(trace.direction, jnp.float32),
+    ], axis=1)
+
+
+def flow_features(trace, n_buckets=4096):
+    """Stateful flow-level features via hash + segment registers.
+
+    Returns (bucket_ids (P,), flow_table (n_buckets, 8)) where columns are:
+      0 pkt_count  1 byte_count  2 duration  3 mean_iat
+      4 fwd_pkts   5 rev_pkts    6 fwd_bytes 7 rev_bytes
+    """
+    b = fnv1a_hash(trace.src_ip, trace.dst_ip, trace.sport, trace.dport,
+                   trace.proto, n_buckets=n_buckets)
+    ts = jnp.asarray(trace.ts, jnp.float32)
+    ln = jnp.asarray(trace.length, jnp.float32)
+    fwd = (jnp.asarray(trace.direction) == 0).astype(jnp.float32)
+
+    seg = lambda v: jax.ops.segment_sum(v, b, num_segments=n_buckets)
+    cnt = seg(jnp.ones_like(ln))
+    byt = seg(ln)
+    t_min = jax.ops.segment_min(ts, b, num_segments=n_buckets)
+    t_max = jax.ops.segment_max(ts, b, num_segments=n_buckets)
+    dur = jnp.where(cnt > 0, t_max - t_min, 0.0)
+    iat = jnp.where(cnt > 1, dur / jnp.maximum(cnt - 1, 1), 0.0)
+    table = jnp.stack([
+        cnt, byt, dur, iat,
+        seg(fwd), seg(1.0 - fwd), seg(ln * fwd), seg(ln * (1.0 - fwd)),
+    ], axis=1)
+    return b, table
+
+
+def aggregate_features(trace, *, key: str = "dport", n_buckets=1024):
+    """Aggregate-level features over a traffic group (§5.2).
+
+    Groups packets by a coarse key (e.g. destination port = "traffic toward
+    application X") and reduces volume/rate statistics per group.
+    Returns (group_ids (P,), agg_table (n_buckets, 3)): pkts, bytes, rate.
+    """
+    col = jnp.asarray(getattr(trace, key))
+    g = (col.astype(jnp.int32) % n_buckets)
+    ln = jnp.asarray(trace.length, jnp.float32)
+    ts = jnp.asarray(trace.ts, jnp.float32)
+    cnt = jax.ops.segment_sum(jnp.ones_like(ln), g, num_segments=n_buckets)
+    byt = jax.ops.segment_sum(ln, g, num_segments=n_buckets)
+    dur = jnp.where(
+        cnt > 0,
+        jax.ops.segment_max(ts, g, num_segments=n_buckets)
+        - jax.ops.segment_min(ts, g, num_segments=n_buckets), 0.0)
+    rate = jnp.where(dur > 0, byt / jnp.maximum(dur, 1e-6), 0.0)
+    return g, jnp.stack([cnt, byt, rate], axis=1)
+
+
+# ---------------------------------------------------------------------------
+# file-level (§5.3): fixed-width csv payloads, fields split across packets
+# ---------------------------------------------------------------------------
+
+def encode_csv_payload(values, width=8):
+    """Encode float rows as fixed-width ASCII columns (the paper's
+    reformatted Jane Street file: "columns of eight characters").
+
+    values (R, C) -> uint8 bytes (R, C*width).
+    """
+    import numpy as np
+    r, c = values.shape
+    out = np.zeros((r, c * width), np.uint8)
+    for i in range(r):
+        row = "".join(f"{float(v):{width}.3f}"[:width].rjust(width)
+                      for v in values[i])
+        out[i] = np.frombuffer(row.encode("ascii"), np.uint8)
+    return out
+
+
+def _ascii_to_float(field: jax.Array) -> jax.Array:
+    """Parse fixed-width ASCII numeric fields (N, W) -> (N,) float32.
+
+    Switch-feasible parsing: digit accumulation with sign and decimal point,
+    no branches — each byte contributes via masked multiply-add.
+    """
+    is_digit = (field >= 48) & (field <= 57)
+    digit = jnp.where(is_digit, field - 48, 0).astype(jnp.float32)
+    is_dot = field == 46
+    is_minus = field == 45
+    # integer part scale: positions before the dot accumulate *10 each digit
+    def scan_fn(carry, col):
+        val, frac_scale, seen_dot = carry
+        d, dot, dig = col
+        val = jnp.where(dig & ~seen_dot, val * 10 + d, val)
+        frac_scale = jnp.where(dig & seen_dot, frac_scale * 0.1, frac_scale)
+        val = jnp.where(dig & seen_dot, val + d * frac_scale, val)
+        seen_dot = seen_dot | dot
+        return (val, frac_scale, seen_dot), None
+
+    n, w = field.shape
+    init = (jnp.zeros(n), jnp.ones(n), jnp.zeros(n, bool))
+    cols = (digit.T, is_dot.T, is_digit.T)
+    (val, _, _), _ = jax.lax.scan(scan_fn, init, cols)
+    sign = jnp.where(jnp.any(is_minus, axis=1), -1.0, 1.0)
+    return sign * val
+
+
+def stitch_split_payload(first_pkt: jax.Array, second_pkt: jax.Array):
+    """Re-stitch a record split across two packets (§5.3).
+
+    Models the switch mechanism: the tail bytes of packet k are saved in a
+    register and prepended to packet k+1 before parsing. first_pkt (R, A),
+    second_pkt (R, B) -> (R, A+B).
+    """
+    return jnp.concatenate([first_pkt, second_pkt], axis=1)
+
+
+def file_features_csv(payload: jax.Array, feature_cols, width=8):
+    """Extract selected fixed-width columns from csv payload bytes.
+
+    payload (R, C*width) uint8 — use stitch_split_payload first when a row
+    spans packets.
+    """
+    feats = []
+    for c in feature_cols:
+        field = jax.lax.dynamic_slice_in_dim(payload, c * width, width, axis=1)
+        feats.append(_ascii_to_float(field))
+    return jnp.stack(feats, axis=1)

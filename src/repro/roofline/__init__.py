@@ -1,0 +1,4 @@
+"""Roofline analysis from compiled dry-run artifacts."""
+
+from repro.roofline.analysis import (HW, collective_bytes_from_hlo,
+                                     roofline_terms, model_flops)

@@ -1,0 +1,4 @@
+"""Serving runtime: cache plumbing, prefill/decode engine, hybrid tier."""
+
+from repro.serving.engine import ServeEngine, greedy_generate
+from repro.serving.hybrid_serving import HybridServer

@@ -1,0 +1,83 @@
+"""Batched prefill/decode serving engine.
+
+One jitted prefill (full prompt -> last logits + caches) and one jitted
+decode step (token + caches -> logits + caches), reused across requests.
+Caches are functional pytrees — the engine threads them; on a mesh they
+carry the cache_specs shardings so decode runs fully distributed.
+
+Sampling: greedy or temperature; the engine is deliberately simple —
+batching discipline (fixed batch, fixed max_len) mirrors what the
+dry-run's decode shapes lower.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model as M
+
+
+class ServeEngine:
+    def __init__(self, cfg, params, *, batch: int, max_len: int,
+                 cache_dtype=jnp.bfloat16):
+        self.cfg = cfg
+        self.params = params
+        self.batch = batch
+        self.max_len = max_len
+        self.cache_dtype = cache_dtype
+        self._prefill = jax.jit(
+            functools.partial(M.prefill, cfg=cfg))
+        self._decode = jax.jit(
+            functools.partial(M.decode_step, cfg=cfg),
+            donate_argnums=(3,))
+
+    def prefill(self, batch_dict):
+        logits, caches = self._prefill(self.params, batch=batch_dict)
+        return logits, caches
+
+    def decode(self, token, pos, caches):
+        return self._decode(self.params, token=token, pos=pos,
+                            caches=caches)
+
+
+def _place_prefill_into_decode(decode_cache, prefill_cache):
+    def place(d, s):
+        if d.shape == s.shape:
+            return s.astype(d.dtype)
+        sl = tuple(slice(0, x) for x in s.shape)
+        return d.at[sl].set(s.astype(d.dtype))
+
+    return jax.tree.map(place, decode_cache, prefill_cache)
+
+
+def greedy_generate(cfg, params, batch_dict, *, n_new: int,
+                    max_len: Optional[int] = None,
+                    cache_dtype=jnp.float32, temperature: float = 0.0,
+                    key=None):
+    """Prefill the prompt, then decode n_new tokens. Returns (B, n_new)."""
+    tokens = batch_dict["tokens"]
+    b, s = tokens.shape
+    n_front = (cfg.n_frontend_tokens
+               if cfg.frontend == "image_patches" else 0)
+    max_len = max_len or (s + n_front + n_new + 1)
+
+    logits, pcache = M.prefill(params, cfg, batch_dict)
+    dcache = M.init_decode_cache(cfg, b, max_len, dtype=cache_dtype)
+    caches = _place_prefill_into_decode(dcache, pcache)
+
+    outs = []
+    pos = s + n_front
+    for i in range(n_new):
+        if temperature > 0.0 and key is not None:
+            key, sub = jax.random.split(key)
+            nxt = jax.random.categorical(sub, logits / temperature, axis=-1)
+        else:
+            nxt = jnp.argmax(logits, axis=-1)
+        nxt = nxt.astype(jnp.int32)
+        outs.append(nxt)
+        logits, caches = M.decode_step(params, cfg, nxt, pos + i, caches)
+    return jnp.stack(outs, axis=1)

@@ -1,0 +1,75 @@
+"""Hybrid serving tier: the paper's §2.2.1 deployment, end to end.
+
+Request path:
+  1. feature extraction (netsim) produced a feature vector per request;
+  2. the SWITCH TIER — the fused IIsy table pipeline — classifies the
+     whole batch at line rate and yields (class, confidence);
+  3. confidence >= tau  -> answered at the switch (dropped / tagged /
+     fast-pathed per use case);
+  4. confidence <  tau  -> the low-confidence subset is *compacted* into a
+     fixed-capacity buffer (same machinery as MoE token dispatch) and only
+     that buffer hits the BACKEND — either the full-grown ensemble
+     (paper-faithful) or an LM scorer. This is the paper's back-end load
+     reduction, in batch-size form: the expensive model runs on
+     capacity-many rows, not on the full batch.
+
+The per-batch telemetry (fraction handled, backend batch occupancy)
+matches Figs 10-11's sweep quantities.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.artifact import TableArtifact
+from repro.core.hybrid import combine, dispatch
+from repro.kernels.ops import fused_classify
+
+
+@dataclasses.dataclass
+class HybridStats:
+    fraction_handled: float
+    backend_rows: int
+    capacity: int
+
+
+class HybridServer:
+    def __init__(self, artifact: TableArtifact, backend_fn: Callable,
+                 *, threshold: float = 0.7, capacity: int = 256,
+                 use_pallas: bool = False):
+        """backend_fn: (rows (capacity, F)) -> class predictions (capacity,)."""
+        self.artifact = artifact
+        self.backend_fn = backend_fn
+        self.threshold = threshold
+        self.capacity = capacity
+        self.use_pallas = use_pallas
+        self._switch = jax.jit(
+            lambda art, x: fused_classify(art, x, use_pallas=use_pallas))
+
+    def classify(self, x):
+        """x (N, F) -> (pred (N,), stats)."""
+        sw_pred, conf = self._switch(self.artifact, x)
+        fwd = conf < self.threshold
+        buf, idx, valid = dispatch(jnp.asarray(x, jnp.float32), fwd,
+                                   self.capacity)
+        be_pred = self.backend_fn(buf)
+        pred = combine(sw_pred, jnp.asarray(be_pred), idx, valid)
+        stats = HybridStats(
+            fraction_handled=float(1.0 - jnp.mean(fwd.astype(jnp.float32))),
+            backend_rows=int(jnp.sum(valid)),
+            capacity=self.capacity)
+        return pred, stats
+
+    def update_tables(self, artifact: TableArtifact):
+        """§4.4: retraining swaps table *contents*; nothing recompiles as
+        long as shapes (the model constraints) are unchanged."""
+        same = jax.tree.map(lambda a, b: a.shape == b.shape,
+                            self.artifact, artifact)
+        if not all(jax.tree.leaves(same)):
+            raise ValueError("table shapes changed: constraints violated "
+                             "(paper §4.4 requires fixed model constraints)")
+        self.artifact = artifact

@@ -1,0 +1,7 @@
+"""Training runtime: optimizer, loop, checkpointing, compression, watchdog."""
+
+from repro.training.optim import AdamWConfig, adamw_update, init_opt_state, lr_at
+from repro.training.loop import TrainConfig, make_train_step, train
+from repro.training.checkpoint import (save_checkpoint, restore_checkpoint,
+                                       latest_step, AsyncCheckpointer)
+from repro.training.watchdog import StepWatchdog

@@ -1,0 +1,86 @@
+"""Gradient compression for the DP all-reduce, with error feedback.
+
+Two schemes, composable with any optimizer because they sit *between*
+per-shard gradient computation and the cross-replica reduction:
+
+  * top-k sparsification: keep the largest-|g| fraction per tensor; the
+    residual is carried to the next step (error feedback, à la Deep
+    Gradient Compression) so nothing is lost, only delayed.
+  * int8 block quantization: per-block absmax scales; the quantization
+    error likewise enters the feedback buffer.
+
+On a real multi-host mesh the compressed payload is what crosses DCN
+between pods; here the benefit is *measured* in collective bytes on the
+dry-run HLO (see §Perf) by applying compression inside the jitted step
+before the psum that GSPMD inserts.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+def init_error_state(params):
+    return jax.tree.map(lambda p: jnp.zeros_like(p, F32), params)
+
+
+def _topk_mask(x, frac):
+    k = max(1, int(x.size * frac))
+    flat = jnp.abs(x.reshape(-1))
+    thresh = jax.lax.top_k(flat, k)[0][-1]
+    return (jnp.abs(x) >= thresh).astype(F32)
+
+
+def topk_compress(grads, err, *, frac=0.05):
+    """-> (sparse grads to reduce, new error state)."""
+    def one(g, e):
+        acc = g.astype(F32) + e
+        mask = _topk_mask(acc, frac)
+        sent = acc * mask
+        return sent, acc - sent
+
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_e = jax.tree.leaves(err)
+    outs = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    return (jax.tree.unflatten(tdef, [o[0] for o in outs]),
+            jax.tree.unflatten(tdef, [o[1] for o in outs]))
+
+
+def int8_compress(grads, err, *, block=256):
+    """Quantize (g + err) to int8 blocks; returns (dequantized-to-send,
+    new error). The dequantized value is what the all-reduce sees; the
+    wire format would be the int8 payload + per-block scales."""
+    def one(g, e):
+        acc = g.astype(F32) + e
+        flat = acc.reshape(-1)
+        pad = (-flat.size) % block
+        fp = jnp.pad(flat, (0, pad)).reshape(-1, block)
+        scale = jnp.max(jnp.abs(fp), axis=1, keepdims=True) / 127.0
+        scale = jnp.maximum(scale, 1e-12)
+        q = jnp.clip(jnp.round(fp / scale), -127, 127)
+        deq = (q * scale).reshape(-1)[:flat.size].reshape(acc.shape)
+        return deq, acc - deq
+
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_e = jax.tree.leaves(err)
+    outs = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    return (jax.tree.unflatten(tdef, [o[0] for o in outs]),
+            jax.tree.unflatten(tdef, [o[1] for o in outs]))
+
+
+def compressed_bytes(params, scheme: str, *, frac=0.05, block=256) -> int:
+    """Wire bytes per DP all-reduce under each scheme (for §Perf deltas)."""
+    n = sum(l.size for l in jax.tree.leaves(params))
+    if scheme == "none":
+        return 4 * n
+    if scheme == "int8":
+        return n + 4 * (n // block)        # payload + scales
+    if scheme == "topk":
+        k = int(n * frac)
+        return k * (4 + 4)                 # value + index
+    raise ValueError(scheme)

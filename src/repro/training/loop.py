@@ -1,0 +1,159 @@
+"""Training loop: jitted step (grad accumulation, optional gradient
+compression), checkpoint/restart, watchdog, deterministic data.
+
+The step function is built once per (cfg, mesh) and carries explicit
+in/out shardings, so the same code drives the single-device smoke tests,
+the 256-chip single-pod mesh and the 512-chip multi-pod mesh.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.data.lm_pipeline import TokenPipeline
+from repro.distributed.sharding import (batch_specs, named_sharding_tree,
+                                        opt_state_specs, param_specs)
+from repro.models import model as M
+from repro.training import checkpoint as ckpt
+from repro.training import grad_compress as gc
+from repro.training.optim import AdamWConfig, adamw_update, init_opt_state
+from repro.training.watchdog import StepWatchdog
+
+F32 = jnp.float32
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    steps: int = 100
+    seq_len: int = 256
+    global_batch: int = 8
+    microbatches: int = 1            # gradient accumulation
+    opt: AdamWConfig = AdamWConfig()
+    remat: bool = True
+    grad_compress: str = "none"      # none | topk | int8
+    topk_frac: float = 0.05
+    ckpt_dir: Optional[str] = None
+    ckpt_every: int = 50
+    log_every: int = 10
+
+
+def make_train_step(cfg, tcfg: TrainConfig, mesh=None, batch_shapes=None):
+    """Build the jitted (params, opt_state, err_state, batch) -> ... step."""
+
+    def loss_of(params, batch):
+        return M.loss_fn(params, cfg, batch, remat=tcfg.remat)
+
+    def step(params, opt_state, err_state, batch):
+        if tcfg.microbatches > 1:
+            # split the batch on dim0 and accumulate grads over a scan —
+            # activation memory drops by the microbatch factor
+            def micro(acc, mb):
+                (l, metrics), g = jax.value_and_grad(
+                    loss_of, has_aux=True)(params, mb)
+                return jax.tree.map(jnp.add, acc, g), (l, metrics)
+
+            mbs = jax.tree.map(
+                lambda a: a.reshape((tcfg.microbatches,
+                                     a.shape[0] // tcfg.microbatches)
+                                    + a.shape[1:]), batch)
+            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, F32), params)
+            grads, (losses, metrics) = jax.lax.scan(micro, zeros, mbs)
+            grads = jax.tree.map(lambda g: g / tcfg.microbatches, grads)
+            loss = losses.mean()
+            metrics = jax.tree.map(lambda m: m.mean(), metrics)
+        else:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_of, has_aux=True)(params, batch)
+
+        if tcfg.grad_compress == "topk":
+            grads, err_state = gc.topk_compress(grads, err_state,
+                                                frac=tcfg.topk_frac)
+        elif tcfg.grad_compress == "int8":
+            grads, err_state = gc.int8_compress(grads, err_state)
+
+        params, opt_state, om = adamw_update(tcfg.opt, params, grads,
+                                             opt_state)
+        metrics = {**metrics, **om, "loss_total": loss}
+        return params, opt_state, err_state, metrics
+
+    if mesh is None:
+        return jax.jit(step, donate_argnums=(0, 1, 2))
+
+    pspecs = param_specs(M.model_param_shapes(cfg), mesh)
+    ospecs = opt_state_specs(M.model_param_shapes(cfg), mesh)
+    bspecs = batch_specs(mesh, batch_shapes)
+    espec = pspecs if tcfg.grad_compress != "none" else P()
+    err_in = pspecs if tcfg.grad_compress != "none" else None
+    return jax.jit(
+        step,
+        in_shardings=(pspecs, ospecs,
+                      pspecs if tcfg.grad_compress != "none" else None,
+                      bspecs),
+        out_shardings=(pspecs, ospecs,
+                       pspecs if tcfg.grad_compress != "none" else None,
+                       None),
+        donate_argnums=(0, 1, 2))
+
+
+def train(cfg, tcfg: TrainConfig, *, seed=0, mesh=None, extra_batch=None,
+          verbose=True):
+    """Run the loop on the current devices. Returns (params, history).
+
+    extra_batch: dict of static per-batch arrays (frames / patch_embeds
+    stubs) merged into every step's batch.
+    """
+    key = jax.random.PRNGKey(seed)
+    params = M.init_model(cfg, key)
+    opt_state = init_opt_state(params)
+    err_state = (gc.init_error_state(params)
+                 if tcfg.grad_compress != "none" else None)
+
+    start_step = 0
+    if tcfg.ckpt_dir:
+        latest = ckpt.latest_step(tcfg.ckpt_dir)
+        if latest is not None:           # restart path
+            (params, opt_state), start_step = ckpt.restore_checkpoint(
+                tcfg.ckpt_dir, (params, opt_state), step=latest)
+
+    pipe_batch = None
+    step_fn = make_train_step(cfg, tcfg, mesh=mesh,
+                              batch_shapes=pipe_batch)
+    watchdog = StepWatchdog()
+    writer = (ckpt.AsyncCheckpointer(tcfg.ckpt_dir)
+              if tcfg.ckpt_dir else None)
+    history = []
+
+    # deterministic per-(step, shard) data — any host can regenerate any
+    # shard after failover
+    pipe = TokenPipeline(cfg.vocab_size, seq_len=tcfg.seq_len,
+                         global_batch=tcfg.global_batch, seed=seed)
+
+    for step in range(start_step, tcfg.steps):
+        watchdog.step_start(step)
+        data = pipe.batch(step)
+        batch = {"tokens": jnp.asarray(data["tokens"]),
+                 "labels": jnp.asarray(data["labels"])}
+        if extra_batch:
+            batch.update(extra_batch)
+        params, opt_state, err_state, metrics = step_fn(
+            params, opt_state, err_state, batch)
+        metrics = jax.tree.map(float, jax.device_get(metrics))
+        stat = watchdog.step_end(step)
+        metrics["step_time"] = stat["dt"]
+        history.append({"step": step, **metrics})
+        if verbose and (step % tcfg.log_every == 0 or step == tcfg.steps - 1):
+            print(f"step {step:5d} loss {metrics['loss_total']:.4f} "
+                  f"xent {metrics['xent']:.4f} lr {metrics['lr']:.2e} "
+                  f"dt {stat['dt']:.2f}s")
+        if writer and (step + 1) % tcfg.ckpt_every == 0:
+            writer.save(step + 1, (params, opt_state))
+    if writer:
+        writer.wait()
+    return params, history

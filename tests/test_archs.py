@@ -1,0 +1,127 @@
+"""Per-arch smoke tests: reduced config, one forward/train step on CPU,
+output shapes + no NaNs; prefill->decode consistency."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, get_smoke_config
+from repro.models import model as M
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _batch(cfg, b=2, s=12, with_labels=True):
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (b, s), 0,
+                                          cfg.vocab_size)}
+    if with_labels:
+        batch["labels"] = jax.random.randint(jax.random.PRNGKey(2), (b, s),
+                                             0, cfg.vocab_size)
+    if cfg.encdec:
+        batch["frames"] = 0.1 * jax.random.normal(
+            jax.random.PRNGKey(3), (b, cfg.n_frontend_tokens,
+                                    cfg.frontend_dim))
+    if cfg.frontend == "image_patches":
+        batch["patch_embeds"] = 0.1 * jax.random.normal(
+            jax.random.PRNGKey(3), (b, cfg.n_frontend_tokens,
+                                    cfg.frontend_dim))
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_train_step_smoke(arch):
+    cfg = get_smoke_config(arch)
+    params = M.init_model(cfg, KEY)
+    batch = _batch(cfg)
+    loss, metrics = M.loss_fn(params, cfg, batch, remat=False)
+    assert loss.shape == ()
+    assert np.isfinite(float(loss))
+    grads = jax.grad(lambda p: M.loss_fn(p, cfg, batch, remat=False)[0])(
+        params)
+    gnorm = sum(float(jnp.sum(jnp.square(g)))
+                for g in jax.tree.leaves(grads))
+    assert np.isfinite(gnorm) and gnorm > 0
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_prefill_decode_consistency(arch):
+    cfg = get_smoke_config(arch)
+    params = M.init_model(cfg, KEY)
+    b, s = 2, 12
+    batch = _batch(cfg, b, s, with_labels=False)
+    toks = batch["tokens"]
+    ref_logits, _ = M.prefill(params, cfg, batch)
+
+    batch2 = dict(batch)
+    batch2["tokens"] = toks[:, :s - 1]
+    _, caches = M.prefill(params, cfg, batch2)
+    n_front = cfg.n_frontend_tokens if cfg.frontend == "image_patches" else 0
+
+    def place(d, src):
+        if d.shape == src.shape:
+            return src.astype(d.dtype)
+        sl = tuple(slice(0, x) for x in src.shape)
+        return d.at[sl].set(src.astype(d.dtype))
+
+    dc = jax.tree.map(place,
+                      M.init_decode_cache(cfg, b, s + n_front + 4,
+                                          dtype=jnp.float32), caches)
+    logits2, _ = M.decode_step(params, cfg, toks[:, s - 1],
+                               s - 1 + n_front, dc)
+    err = float(jnp.max(jnp.abs(ref_logits - logits2)))
+    tol = 0.05 if cfg.moe is not None else 1e-3  # MoE: capacity drops
+    assert err < tol, (arch, err)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_full_config_shapes_only(arch):
+    """The FULL config must build its shape tree without allocation."""
+    cfg = get_config(arch)
+    shapes = M.model_param_shapes(cfg)
+    n = M.count_params(shapes)
+    assert n > 50e6, f"{arch}: suspiciously small ({n})"
+    na = M.active_params(cfg, n)
+    assert 0 < na <= n
+
+
+def test_remat_matches_no_remat():
+    cfg = get_smoke_config("qwen3-4b")
+    params = M.init_model(cfg, KEY)
+    batch = _batch(cfg)
+    l1, _ = M.loss_fn(params, cfg, batch, remat=False)
+    l2, _ = M.loss_fn(params, cfg, batch, remat=True)
+    assert abs(float(l1) - float(l2)) < 1e-5
+
+
+def test_layer_plan_covers_all_layers():
+    from repro.models.transformer import layer_plan
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        if cfg.encdec:
+            continue
+        plan = layer_plan(cfg)
+        total = sum(len(s["specs"]) * s["n_periods"] for s in plan)
+        assert total == cfg.n_layers, (arch, total)
+        # compile-time proxy: few distinct segments
+        assert len(plan) <= 4, (arch, len(plan))
+
+
+def test_mlstm_chunked_equals_single_chunk():
+    """Chunkwise mLSTM == one-chunk (quadratic) evaluation."""
+    from repro.models import recurrent as rec
+    cfg = get_smoke_config("xlstm-1.3b")
+    p = rec.mlstm_params(KEY, cfg)
+    x = 0.5 * jax.random.normal(jax.random.PRNGKey(5), (2, 8, cfg.d_model))
+    y_chunked, st1 = rec.mlstm_block(p, cfg, x)      # S=8 -> single chunk
+    # force multi-chunk by monkeypatching the chunk size
+    old = rec.MLSTM_CHUNK
+    rec.MLSTM_CHUNK = 4
+    try:
+        y_multi, st2 = rec.mlstm_block(p, cfg, x)
+    finally:
+        rec.MLSTM_CHUNK = old
+    np.testing.assert_allclose(np.asarray(y_chunked), np.asarray(y_multi),
+                               rtol=2e-4, atol=2e-5)
+    np.testing.assert_allclose(np.asarray(st1["C"]), np.asarray(st2["C"]),
+                               rtol=2e-4, atol=2e-5)

@@ -1,0 +1,130 @@
+"""IIsy mapping fidelity: table inference vs direct model evaluation."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.inference import (table_predict, table_predict_per_tree,
+                                  tree_vote_predict)
+from repro.core.mapping import (map_kmeans, map_naive_bayes, map_svm,
+                                map_tree_ensemble)
+from repro.ml.kmeans import fit_kmeans, predict_kmeans
+from repro.ml.naive_bayes import fit_gaussian_nb, predict_nb
+from repro.ml.svm import fit_linear_svm, predict_svm
+from repro.ml.trees import (fit_decision_tree, fit_isolation_forest,
+                            fit_random_forest, fit_xgboost,
+                            predict_iforest_score, predict_margin_xgboost,
+                            predict_tree_ensemble, tree_leaf_indices)
+
+
+def test_decision_tree_table_exact(anomaly_data):
+    """A single tree's table pipeline must agree with walking the tree."""
+    xtr, ytr, xte, _ = anomaly_data
+    dt = fit_decision_tree(xtr, ytr, n_classes=2, max_depth=5)
+    art = map_tree_ensemble(dt, xtr.shape[1])
+    p_tab, _ = table_predict(art, xte)
+    p_dir = predict_tree_ensemble(dt, xte)
+    assert float(jnp.mean((p_tab == p_dir).astype(jnp.float32))) == 1.0
+
+
+def test_rf_per_tree_equivalence(anomaly_data):
+    """Every tree's table decision equals that tree's walked decision —
+    the strongest mapping-correctness property (per-tree, not just
+    ensemble-vote)."""
+    xtr, ytr, xte, _ = anomaly_data
+    rf = fit_random_forest(xtr, ytr, n_classes=2, n_trees=5, max_depth=4,
+                           seed=3)
+    art = map_tree_ensemble(rf, xtr.shape[1])
+    table_cls = table_predict_per_tree(art, xte)           # (N, T)
+    leaf_idx = tree_leaf_indices(rf, xte)                  # (T, N)
+    counts = jnp.take_along_axis(rf.leaf, leaf_idx[:, :, None], axis=1)
+    walked_cls = jnp.argmax(counts, axis=2).T              # (N, T)
+    assert bool(jnp.all(table_cls == walked_cls))
+
+
+def test_rf_vote_equivalence(anomaly_data):
+    xtr, ytr, xte, _ = anomaly_data
+    rf = fit_random_forest(xtr, ytr, n_classes=2, n_trees=6, max_depth=4)
+    art = map_tree_ensemble(rf, xtr.shape[1])
+    p_tab, _ = table_predict(art, xte)
+    p_vote, _ = tree_vote_predict(rf, xte)
+    assert bool(jnp.all(p_tab == p_vote))
+
+
+def test_xgb_margin_close(anomaly_data):
+    """Quantized table margin ~= float margin; predictions match."""
+    xtr, ytr, xte, _ = anomaly_data
+    xgb = fit_xgboost(xtr, ytr, n_trees=8, max_depth=4)
+    art = map_tree_ensemble(xgb, xtr.shape[1], action_bits=16)
+    p_tab, conf = table_predict(art, xte)
+    p_dir = predict_tree_ensemble(xgb, xte)
+    agree = float(jnp.mean((p_tab == p_dir).astype(jnp.float32)))
+    assert agree > 0.999
+
+
+def test_iforest_score_close(anomaly_data):
+    xtr, _, xte, _ = anomaly_data
+    iso = fit_isolation_forest(xtr, n_trees=16, max_depth=5, seed=1)
+    art = map_tree_ensemble(iso, xtr.shape[1])
+    p_tab, conf = table_predict(art, xte)
+    score = predict_iforest_score(iso, xte)
+    p_dir = (score > 0.5).astype(jnp.int32)
+    agree = float(jnp.mean((p_tab == p_dir).astype(jnp.float32)))
+    assert agree > 0.995
+
+
+@pytest.mark.parametrize("n_classes", [2, 3])
+def test_svm_multiclass_agreement(n_classes):
+    rng = np.random.default_rng(0)
+    centers = rng.normal(0, 4, (n_classes, 6))
+    x = np.concatenate([rng.normal(c, 1.0, (400, 6)) for c in centers])
+    y = np.repeat(np.arange(n_classes), 400)
+    svm = fit_linear_svm(x.astype(np.float32), y, n_classes=n_classes)
+    art = map_svm(svm, x, n_bins=64)
+    p_tab, _ = table_predict(art, x.astype(np.float32))
+    p_dir = predict_svm(svm, x.astype(np.float32))
+    agree = float(jnp.mean((p_tab == p_dir).astype(jnp.float32)))
+    assert agree > 0.97, agree
+
+
+def test_nb_log_domain_no_underflow(anomaly_data):
+    """Log-domain NB removes the paper's Fig-9 underflow failure mode."""
+    xtr, ytr, xte, _ = anomaly_data
+    nb = fit_gaussian_nb(xtr, ytr, n_classes=2)
+    art = map_naive_bayes(nb, xtr, n_bins=64, action_bits=16)
+    p_tab, conf = table_predict(art, xte)
+    p_dir = predict_nb(nb, xte)
+    agree = float(jnp.mean((p_tab == p_dir).astype(jnp.float32)))
+    assert agree > 0.995
+    assert bool(jnp.all(jnp.isfinite(conf)))
+
+
+def test_kmeans_agreement(anomaly_data):
+    xtr, _, xte, _ = anomaly_data
+    km = fit_kmeans(xtr, k=3, seed=0)
+    art = map_kmeans(km, xtr, n_bins=128)
+    p_tab, _ = table_predict(art, xte)
+    p_dir = predict_kmeans(km, xte)
+    agree = float(jnp.mean((p_tab == p_dir).astype(jnp.float32)))
+    assert agree > 0.99, agree
+
+
+def test_action_bits_monotone(anomaly_data):
+    """More action bits -> calc error does not increase (Fig 9 trend)."""
+    from repro.core.quantize import quantize_fixed, relative_error
+    rng = np.random.default_rng(1)
+    v = rng.normal(0, 3, (64, 64)).astype(np.float32)
+    errs = [relative_error(quantize_fixed(v, b), v) for b in (8, 12, 16, 24)]
+    assert all(errs[i] >= errs[i + 1] for i in range(len(errs) - 1))
+
+
+def test_decision_table_cap():
+    """Unmappable (too-deep/too-wide) ensembles raise, like a switch
+    rejecting a model that does not fit (paper §4.2 pruning)."""
+    rng = np.random.default_rng(0)
+    x = rng.normal(0, 1, (2000, 12)).astype(np.float32)
+    y = ((x.sum(axis=1) + 0.3 * rng.normal(size=2000)) > 0).astype(np.int32)
+    rf = fit_random_forest(x, y, n_classes=2, n_trees=8, max_depth=8,
+                           max_features=12, seed=0)
+    with pytest.raises(ValueError, match="decision tables"):
+        map_tree_ensemble(rf, 12, max_decision_entries=200)

@@ -1,0 +1,133 @@
+"""Sharding rules + roofline analysis unit tests (no 512-device init —
+uses small meshes compatible with 1 CPU device via spec-only checks)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.roofline.analysis import (collective_bytes_from_hlo,
+                                     model_flops, roofline_terms)
+
+
+class FakeMesh:
+    """Just enough of jax.sharding.Mesh for the spec rules."""
+
+    def __init__(self, shape):
+        self.shape = shape
+
+    @property
+    def axis_names(self):
+        return tuple(self.shape)
+
+
+def test_param_spec_rules():
+    from repro.distributed.sharding import spec_for_param
+    mesh = FakeMesh({"data": 16, "model": 16})
+    # generic 2D
+    assert spec_for_param("segments/0/ffn/gate", (7168, 2048), mesh) == \
+        P("data", "model")
+    # indivisible dims replicate
+    assert spec_for_param("segments/0/ffn/gate", (7167, 2049), mesh) == \
+        P(None, None)
+    # embed: vocab -> model
+    assert spec_for_param("embed", (129280, 7168), mesh) == \
+        P("model", "data")
+    # expert stacks: E -> model (EP)
+    s = spec_for_param("segments/1/ffn/w_gate", (58, 256, 7168, 2048), mesh)
+    assert s == P(None, "model", "data", None)
+    # 1D replicates
+    assert spec_for_param("final_norm/w", (7168,), mesh) == P()
+
+
+def test_cache_spec_batch_by_size():
+    from repro.distributed.sharding import cache_specs
+    mesh = FakeMesh({"data": 16, "model": 16})
+    shapes = {
+        "k": jax.ShapeDtypeStruct((64, 128, 32768, 8, 128), jnp.bfloat16),
+        "h": jax.ShapeDtypeStruct((128, 4096), jnp.float32),
+        "pos": jax.ShapeDtypeStruct((64, 32768), jnp.int32),
+    }
+    specs = cache_specs(mesh, shapes, batch=128)
+    assert specs["k"] == P(None, "data", "model", None, None)
+    assert specs["h"] == P("data", "model")
+    assert specs["pos"] == P(None, "model")
+
+
+def test_cache_spec_batch_one_replicates_batch():
+    from repro.distributed.sharding import cache_specs
+    mesh = FakeMesh({"data": 16, "model": 16})
+    shapes = {"C": jax.ShapeDtypeStruct((1, 4, 1024, 1024), jnp.float32)}
+    specs = cache_specs(mesh, shapes, batch=1)
+    assert specs["C"][0] is None            # batch not sharded
+
+
+HLO_SAMPLE = """
+  %ag = bf16[16,512,7168]{2,1,0} all-gather(%p0), channel_id=1, replica_groups={{0,1,2,3}}, dimensions={0}
+  %ar = f32[1024]{0} all-reduce(%x), replica_groups=[32,16]<=[512], to_apply=%add
+  %rs = f32[64,128]{1,0} reduce-scatter(%y), replica_groups={{0,1}}, dimensions={0}
+  %cp = f32[8,8]{1,0} collective-permute(%z), source_target_pairs={{0,1}}
+  %ags = (bf16[4,4]{1,0}, bf16[4,4]{1,0}) all-gather-start(%q), replica_groups={{0,1,2,3}}
+  %agd = bf16[4,4]{1,0} all-gather-done(%ags)
+"""
+
+
+def test_collective_parse():
+    out = collective_bytes_from_hlo(HLO_SAMPLE)
+    by = out["by_op"]
+    ag = 16 * 512 * 7168 * 2 * (3 / 4)          # (G-1)/G * result
+    ar = 1024 * 4 * 2 * (15 / 16)               # 2(G-1)/G, G=16 (iota)
+    rs = 64 * 128 * 4 * 1                       # (G-1), G=2
+    cp = 8 * 8 * 4
+    ags = 2 * (4 * 4 * 2) * (3 / 4)             # tuple result, started op
+    assert np.isclose(by["all-gather"], ag + ags)
+    assert np.isclose(by["all-reduce"], ar)
+    assert np.isclose(by["reduce-scatter"], rs)
+    assert np.isclose(by["collective-permute"], cp)
+    assert out["count"] == 5                     # -done not counted
+
+
+def test_roofline_terms_dominant():
+    cost = {"flops": 197e12, "bytes accessed": 819e9 * 2}
+    coll = {"total": 50e9 * 0.5}
+    r = roofline_terms(cost, coll)
+    assert abs(r["compute_s"] - 1.0) < 1e-9
+    assert abs(r["memory_s"] - 2.0) < 1e-9
+    assert abs(r["collective_s"] - 0.5) < 1e-9
+    assert r["dominant"] == "memory_s"
+
+
+def test_model_flops_kinds():
+    class Cfg:
+        moe = None
+    n = 1_000_000
+    assert model_flops(Cfg, n, n, "train", 128, 4) == 6 * n * 128 * 4
+    assert model_flops(Cfg, n, n, "prefill", 128, 4) == 2 * n * 128 * 4
+    assert model_flops(Cfg, n, n, "decode", 128, 4) == 2 * n * 4
+
+
+def test_input_specs_cells():
+    from repro.configs import get_config
+    from repro.launch.shapes import SHAPES, cell_supported, input_specs
+    cfg = get_config("qwen3-4b")
+    tr = input_specs(cfg, "train_4k")
+    assert tr["batch"]["tokens"].shape == (256, 4096)
+    pf = input_specs(cfg, "prefill_32k")
+    assert pf["batch"]["tokens"].shape == (32, 32768)
+    dc = input_specs(cfg, "decode_32k")
+    assert dc["token"].shape == (128,)
+    assert not cell_supported("qwen3-4b", "long_500k")
+    assert cell_supported("xlstm-1.3b", "long_500k")
+    assert cell_supported("recurrentgemma-2b", "long_500k")
+
+
+def test_vlm_input_specs_include_patches():
+    from repro.configs import get_config
+    from repro.launch.shapes import input_specs
+    cfg = get_config("phi-3-vision-4.2b")
+    tr = input_specs(cfg, "train_4k")
+    assert tr["batch"]["patch_embeds"].shape == (256, 576, 1024)
+    cfg2 = get_config("whisper-base")
+    tr2 = input_specs(cfg2, "train_4k")
+    assert tr2["batch"]["frames"].shape == (256, 1500, 512)

@@ -1,0 +1,153 @@
+"""Training runtime: optimizer, loop, checkpoint/restart/reshard,
+gradient compression with error feedback, watchdog."""
+
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.models import model as M
+from repro.training import checkpoint as ckpt
+from repro.training import grad_compress as gc
+from repro.training.loop import TrainConfig, train
+from repro.training.optim import (AdamWConfig, adamw_update,
+                                  init_opt_state, lr_at)
+from repro.training.watchdog import StepWatchdog
+
+
+def test_lr_schedule_shape():
+    cfg = AdamWConfig(lr_peak=1e-3, lr_min=1e-4, warmup_steps=10,
+                      total_steps=100)
+    lrs = [float(lr_at(cfg, jnp.int32(s))) for s in (0, 5, 10, 50, 100)]
+    assert lrs[0] == 0.0
+    assert abs(lrs[2] - 1e-3) < 1e-9          # peak at warmup end
+    assert lrs[3] < lrs[2]                     # decaying
+    assert abs(lrs[4] - 1e-4) < 1e-6           # floor
+
+
+def test_adamw_decreases_quadratic():
+    w = {"w": jnp.asarray([5.0, -3.0])}
+    st = init_opt_state(w)
+    cfg = AdamWConfig(lr_peak=0.2, warmup_steps=0, total_steps=100,
+                      weight_decay=0.0)
+    for _ in range(60):
+        g = {"w": 2 * w["w"]}
+        w, st, _ = adamw_update(cfg, w, g, st)
+    assert float(jnp.abs(w["w"]).max()) < 0.5
+
+
+def test_train_loss_decreases():
+    cfg = get_smoke_config("h2o-danube-1.8b")
+    tcfg = TrainConfig(steps=15, seq_len=32, global_batch=4,
+                       opt=AdamWConfig(lr_peak=2e-3, warmup_steps=3,
+                                       total_steps=15))
+    _, hist = train(cfg, tcfg, verbose=False)
+    assert hist[-1]["loss_total"] < hist[0]["loss_total"]
+
+
+def test_checkpoint_restart_resumes():
+    cfg = get_smoke_config("qwen3-4b")
+    with tempfile.TemporaryDirectory() as d:
+        tcfg = TrainConfig(steps=6, seq_len=16, global_batch=2,
+                           ckpt_dir=d, ckpt_every=3, log_every=100)
+        train(cfg, tcfg, verbose=False)
+        assert ckpt.latest_step(d) == 6
+        tcfg2 = TrainConfig(steps=8, seq_len=16, global_batch=2,
+                            ckpt_dir=d, ckpt_every=3, log_every=100)
+        _, hist = train(cfg, tcfg2, verbose=False)
+        assert hist[0]["step"] == 6             # resumed, not restarted
+        assert hist[-1]["step"] == 7
+
+
+def test_checkpoint_atomic_and_gc():
+    with tempfile.TemporaryDirectory() as d:
+        tree = {"a": jnp.arange(10), "b": {"c": jnp.ones((3, 3))}}
+        for step in (1, 2, 3, 4):
+            ckpt.save_checkpoint(d, step, tree, keep=2)
+        steps = sorted(x for x in os.listdir(d) if x.startswith("step_"))
+        assert steps == ["step_3", "step_4"]
+        restored, step = ckpt.restore_checkpoint(d, tree)
+        assert step == 4
+        np.testing.assert_array_equal(np.asarray(restored["a"]),
+                                      np.arange(10))
+
+
+def test_checkpoint_restore_with_sharding_tree():
+    """Elastic path: restore onto explicit (single-device) shardings."""
+    with tempfile.TemporaryDirectory() as d:
+        tree = {"w": jnp.arange(16.0).reshape(4, 4)}
+        ckpt.save_checkpoint(d, 1, tree)
+        sh = jax.tree.map(
+            lambda _: jax.sharding.SingleDeviceSharding(jax.devices()[0]),
+            tree)
+        restored, _ = ckpt.restore_checkpoint(d, tree, shardings=sh)
+        np.testing.assert_array_equal(np.asarray(restored["w"]),
+                                      np.asarray(tree["w"]))
+
+
+def test_async_checkpointer():
+    with tempfile.TemporaryDirectory() as d:
+        w = ckpt.AsyncCheckpointer(d)
+        w.save(5, {"x": jnp.ones(4)})
+        w.wait()
+        assert ckpt.latest_step(d) == 5
+
+
+@pytest.mark.parametrize("scheme", ["topk", "int8"])
+def test_compression_error_feedback_conserves(scheme):
+    """sent + residual == grad + old_residual (nothing is lost)."""
+    rng = np.random.default_rng(0)
+    g = {"w": jnp.asarray(rng.normal(0, 1, (64,)).astype(np.float32))}
+    err = gc.init_error_state(g)
+    fn = gc.topk_compress if scheme == "topk" else gc.int8_compress
+    sent, new_err = fn(g, err)
+    np.testing.assert_allclose(
+        np.asarray(sent["w"] + new_err["w"]),
+        np.asarray(g["w"] + err["w"]), rtol=1e-5, atol=1e-6)
+
+
+def test_topk_sparsity():
+    g = {"w": jnp.arange(100.0)}
+    err = gc.init_error_state(g)
+    sent, _ = gc.topk_compress(g, err, frac=0.1)
+    assert int(jnp.sum(sent["w"] != 0)) == 10
+    # kept the largest
+    assert float(sent["w"][99]) == 99.0
+
+
+def test_train_with_compression_converges():
+    cfg = get_smoke_config("yi-6b")
+    tcfg = TrainConfig(steps=12, seq_len=16, global_batch=2,
+                       grad_compress="int8",
+                       opt=AdamWConfig(lr_peak=2e-3, warmup_steps=2,
+                                       total_steps=12))
+    _, hist = train(cfg, tcfg, verbose=False)
+    assert hist[-1]["loss_total"] < hist[0]["loss_total"]
+
+
+def test_compressed_bytes_accounting():
+    params = {"w": jnp.zeros((1000,))}
+    full = gc.compressed_bytes(params, "none")
+    int8 = gc.compressed_bytes(params, "int8")
+    topk = gc.compressed_bytes(params, "topk", frac=0.05)
+    assert full == 4000
+    assert int8 < full / 3
+    assert topk < full / 2
+
+
+def test_watchdog_straggler_detection():
+    import time
+    wd = StepWatchdog(window=16, slow_factor=2.0, hang_timeout_s=999)
+    for s in range(10):
+        wd.step_start(s)
+        time.sleep(0.002)
+        wd.step_end(s)
+    wd.step_start(10)
+    time.sleep(0.05)
+    stat = wd.step_end(10)
+    assert stat["straggler"]
+    assert wd.events and wd.events[-1]["kind"] == "straggler"
