@@ -1,7 +1,10 @@
-"""Shared benchmark plumbing: use-case data, model zoo, table printing."""
+"""Shared benchmark plumbing: use-case data, model zoo, table printing,
+and the machine-readable BENCH_*.json emission (schema "bench-v1")."""
 
 from __future__ import annotations
 
+import json
+import os
 import time
 
 import jax
@@ -86,6 +89,51 @@ def table_pred_maybe_flip(art, x):
     if getattr(art, "flip", False):
         pred = 1 - pred
     return pred, conf
+
+
+def jsonable(obj):
+    """Best-effort conversion of benchmark rows to JSON-safe values."""
+    if isinstance(obj, dict):
+        return {str(k): jsonable(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [jsonable(v) for v in obj]
+    if isinstance(obj, (bool, np.bool_)):
+        return bool(obj)
+    if isinstance(obj, (np.integer,)):
+        return int(obj)
+    if isinstance(obj, (np.floating,)):
+        return float(obj)
+    if isinstance(obj, (np.ndarray, jax.Array)):
+        return jsonable(np.asarray(obj).tolist())
+    if isinstance(obj, (str, int, float, bool)) or obj is None:
+        return obj
+    return str(obj)
+
+
+def write_bench_json(path, suite, benches, config=None):
+    """Write one BENCH_*.json file (schema "bench-v1").
+
+    benches: list of dicts with keys name, paper_ref, wall_s, ok, rows —
+    rows being whatever the bench's run() returned (tables keep the
+    [headers-implied] row-list form the printed tables use). config
+    records the run parameters (sample size, subset, iters) so partial
+    --quick/--only runs are distinguishable in the trajectory.
+    """
+    payload = {
+        "schema": "bench-v1",
+        "suite": suite,
+        "generated_unix": time.time(),
+        "backend": jax.default_backend(),
+        "config": jsonable(config or {}),
+        "benches": [jsonable(b) for b in benches],
+    }
+    tmp = f"{path}.tmp"
+    with open(tmp, "w") as f:
+        json.dump(payload, f, indent=1)
+        f.write("\n")
+    os.replace(tmp, path)
+    print(f"[wrote {path}]")
+    return path
 
 
 def print_table(title, headers, rows):

@@ -1,0 +1,196 @@
+"""Kernel microbenchmarks: fused single-matmul pipeline vs baselines.
+
+``python -m benchmarks.kernel_microbench`` times, on the default backend:
+
+  * the fused single-matmul ensemble kernel (one blocked one-hot MXU pass
+    for the whole feature-table walk + one match-contraction for the
+    decision walk) against ``ensemble_lookup_pallas_loop`` — the previous
+    per-feature-loop formulation, kept exactly for this comparison;
+  * the autotuned tile configuration against the defaults;
+  * the fused classical kernel and bucketize against the XLA references.
+
+Every timed pair is first checked bit-identical against the kernels/ref.py
+oracle — a speedup from wrong answers is not a speedup.
+
+Results go to ``BENCH_kernels.json`` (schema "bench-v1", see DESIGN.md §6)
+next to the printed table. The headline configuration is the paper's
+feature-scaling regime (wide, shallow forests — Figs 4-5): many feature
+tables, switch-sized decision tables, where the table walk dominates and
+fusing it into one matmul pays the most.
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import print_table, write_bench_json
+from repro.core.mapping import map_tree_ensemble
+from repro.kernels import classical_lookup as ck
+from repro.kernels import ensemble_lookup as ek
+from repro.kernels import ref
+from repro.kernels.ops import bucketize, fused_classify
+from repro.kernels.tuning import DEFAULT_TILES, autotune_tiles
+from repro.ml.trees import fit_random_forest, fit_xgboost
+
+
+def _bench(fn, iters):
+    """Min over individual calls — robust to machine-load spikes."""
+    fn().block_until_ready()                    # compile + warm
+    best = float("inf")
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn().block_until_ready()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def _tile_batch(x, batch):
+    x = np.asarray(x, np.float32)
+    reps = batch // len(x) + 1
+    return jnp.asarray(np.tile(x, (reps, 1))[:batch])
+
+
+def _ensemble_cases(n, seed):
+    """(name, artifact, eval rows) triples spanning the shape regimes."""
+    from repro.data.janestreet_like import make_janestreet_like, \
+        train_test_split as js_split
+    from repro.data.unsw_like import make_unsw_like, \
+        train_test_split as un_split
+
+    xj, yj = make_janestreet_like(n, seed=seed)
+    xjtr, yjtr, xjte, _ = js_split(xj, yj)
+    xu, yu = make_unsw_like(n, seed=seed, n_features=5)
+    xutr, yutr, xute, _ = un_split(xu, yu)
+
+    cases = []
+    wide = fit_random_forest(xjtr[:, :32], yjtr, n_classes=2, n_trees=32,
+                             max_depth=3, seed=seed, max_features=3)
+    cases.append(("rf_wide_f32_t32_d3", map_tree_ensemble(wide, 32),
+                  xjte[:, :32]))
+    narrow = fit_random_forest(xutr, yutr, n_classes=2, n_trees=10,
+                               max_depth=5, seed=seed)
+    cases.append(("rf_narrow_f5_t10_d5", map_tree_ensemble(narrow, 5), xute))
+    xgb = fit_xgboost(xutr, yutr, n_trees=10, max_depth=4)
+    cases.append(("xgb_sum_f5_t10_d4", map_tree_ensemble(xgb, 5), xute))
+    return cases
+
+
+def run(n=20000, seed=0, batches=(1024, 8192), iters=20,
+        out="BENCH_kernels.json"):
+    rows = []
+    bench_entries = []
+    t_suite = time.time()
+
+    for name, art, xte in _ensemble_cases(min(n, 8000), seed):
+        vote = art.agg == "vote"
+        dtable = (art.dtable_class if vote
+                  else art.dtable_value.q).astype(jnp.float32)
+        tiles = autotune_tiles(art, batch=max(batches))
+        for batch in batches:
+            xb = _tile_batch(xte, batch)
+
+            # bit-exactness first: fused output vs the gather oracle
+            expect = ref.ensemble_lookup_ref(
+                xb, art.edges, art.ftable, art.strides, dtable,
+                n_classes=art.n_classes, vote=vote)
+            got = ek.ensemble_lookup_fused(
+                xb, art.edges, art.ftable_flat, art.dtable_flat,
+                art.dtable_pad)
+            np.testing.assert_array_equal(np.asarray(got), np.asarray(expect))
+
+            loop_fn = jax.jit(functools.partial(
+                ek.ensemble_lookup_pallas_loop, n_classes=art.n_classes,
+                vote=vote))
+            fused_fn = jax.jit(ek.ensemble_lookup_fused)
+            tuned_fn = jax.jit(functools.partial(
+                ek.ensemble_lookup_fused, tile_n=tiles.tile_n,
+                edge_chunk=tiles.edge_chunk,
+                dtable_chunk=tiles.dtable_chunk, select=tiles.select))
+
+            t_loop = _bench(lambda: loop_fn(
+                xb, art.edges, art.ftable, art.strides, dtable), iters)
+            t_fused = _bench(lambda: fused_fn(
+                xb, art.edges, art.ftable_flat, art.dtable_flat,
+                art.dtable_pad), iters)
+            t_tuned = _bench(lambda: tuned_fn(
+                xb, art.edges, art.ftable_flat, art.dtable_flat,
+                art.dtable_pad), iters)
+
+            best = min(t_fused, t_tuned)
+            rows.append({
+                "kernel": "ensemble_lookup", "case": name, "batch": batch,
+                "loop_ms": round(t_loop * 1e3, 3),
+                "fused_ms": round(t_fused * 1e3, 3),
+                "fused_tuned_ms": round(t_tuned * 1e3, 3),
+                "speedup": round(t_loop / best, 3),
+                "tiles": {"tile_n": tiles.tile_n,
+                          "edge_chunk": tiles.edge_chunk,
+                          "dtable_chunk": tiles.dtable_chunk,
+                          "select": tiles.select},
+                "bit_exact": True,
+            })
+
+    # classical + bucketize context rows (vs XLA reference realization)
+    from benchmarks.common import fit_and_map, load_usecase
+    xtr, ytr, xte, _ = load_usecase("anomaly", n=min(n, 8000), seed=seed)
+    _, art_svm, _ = fit_and_map("SVM", xtr, ytr)
+    for batch in batches:
+        xb = _tile_batch(xte, batch)
+        m = art_svm.vtable.q.shape[2]
+        expect = ref.classical_lookup_ref(
+            xb, art_svm.edges, art_svm.vtable.q.astype(jnp.float32))
+        got = ck.classical_lookup_fused(
+            xb, art_svm.edges, art_svm.vtable_flat)[:, :m]
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(expect))
+        fused_fn = jax.jit(ck.classical_lookup_fused)
+        ref_fn = jax.jit(ref.classical_lookup_ref)
+        t_fused = _bench(lambda: fused_fn(
+            xb, art_svm.edges, art_svm.vtable_flat), iters)
+        t_ref = _bench(lambda: ref_fn(
+            xb, art_svm.edges, art_svm.vtable.q.astype(jnp.float32)), iters)
+        rows.append({
+            "kernel": "classical_lookup", "case": "svm_f5", "batch": batch,
+            "loop_ms": None, "fused_ms": round(t_fused * 1e3, 3),
+            "fused_tuned_ms": None,
+            "speedup": round(t_ref / t_fused, 3),
+            "tiles": None, "bit_exact": True,
+            "baseline": "xla_ref",
+        })
+
+    headers = ["kernel", "case", "batch", "loop_ms", "fused_ms",
+               "tuned_ms", "speedup"]
+    print_table("Kernel microbench — fused single-matmul vs per-feature loop",
+                headers,
+                [[r["kernel"], r["case"], r["batch"], r["loop_ms"],
+                  r["fused_ms"], r["fused_tuned_ms"], r["speedup"]]
+                 for r in rows])
+
+    bench_entries.append({
+        "name": "kernel_microbench", "paper_ref": "Fig 8 / Figs 4-5",
+        "ok": True, "rows": rows,
+        "wall_s": round(time.time() - t_suite, 3),
+    })
+    if out:
+        write_bench_json(out, "kernels", bench_entries,
+                         config={"n": n, "iters": iters,
+                                 "batches": list(batches)})
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--out", default="BENCH_kernels.json")
+    args = ap.parse_args(argv)
+    run(n=6000 if args.quick else 20000,
+        iters=10 if args.quick else 20, out=args.out)
+
+
+if __name__ == "__main__":
+    main()

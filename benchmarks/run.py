@@ -2,6 +2,13 @@
 
 One module per paper table/figure (see DESIGN.md §7). Pass --quick for
 reduced sample sizes (CI), --only <name> for a single benchmark.
+
+Besides the printed tables, the suite writes machine-readable
+``BENCH_benchmarks.json`` (schema "bench-v1", see DESIGN.md §6): one row
+per benchmark with its wall time and whatever its run() returned, so the
+perf trajectory of the repo is tracked run over run. The kernel
+microbenchmark (``python -m benchmarks.kernel_microbench``) writes
+``BENCH_kernels.json`` in the same schema.
 """
 
 from __future__ import annotations
@@ -9,6 +16,8 @@ from __future__ import annotations
 import argparse
 import sys
 import time
+
+from benchmarks.common import write_bench_json
 
 BENCHES = [
     ("resource_anomaly", "Table 1"),
@@ -27,25 +36,40 @@ def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", default=None)
+    ap.add_argument("--out", default="BENCH_benchmarks.json",
+                    help="machine-readable results file (bench-v1 schema)")
     args = ap.parse_args(argv)
 
     n = 6000 if args.quick else 20000
     t_all = time.time()
     failures = []
+    results = []
     for mod_name, paper_ref in BENCHES:
         if args.only and args.only != mod_name:
             continue
         print(f"\n{'=' * 70}\n{paper_ref}  ->  benchmarks.{mod_name}"
               f"\n{'=' * 70}")
         t0 = time.time()
+        entry = {"name": mod_name, "paper_ref": paper_ref, "ok": True,
+                 "rows": None}
         try:
             mod = __import__(f"benchmarks.{mod_name}", fromlist=["run"])
-            mod.run(n=n)
+            entry["rows"] = mod.run(n=n)
             print(f"[{mod_name}: {time.time() - t0:.1f}s]")
         except Exception:   # keep the suite going; report at the end
             import traceback
             traceback.print_exc()
             failures.append(mod_name)
+            entry["ok"] = False
+        entry["wall_s"] = round(time.time() - t0, 3)
+        results.append(entry)
+    if args.only and not results:
+        names = ", ".join(m for m, _ in BENCHES)
+        sys.exit(f"unknown benchmark {args.only!r}; choices: {names}")
+    if args.out:
+        write_bench_json(args.out, "benchmarks", results,
+                         config={"n": n, "quick": args.quick,
+                                 "only": args.only})
     print(f"\ntotal: {time.time() - t_all:.1f}s; "
           f"{len(failures)} failures {failures or ''}")
     sys.exit(1 if failures else 0)

@@ -19,6 +19,35 @@ Classical (svm / nb / kmeans):
   vtable  (F, U+1, M) quantized per-bin partial terms
                       M = hyperplanes | classes | clusters
   consts  (M,)        intercept sums / log priors / zeros
+
+Fused-kernel layout (built once, control-plane side, by
+``finalize_artifact``; see DESIGN.md §2):
+
+  ftable_flat (F*Bp, Tp)   f32  stride-premultiplied flattened feature table:
+                                flat[f*Bp + b, t] = ftable[f, b, t] * strides[t, f]
+  vtable_flat (F*Bp, Mp)   f32  flattened quantized partial terms
+  dtable_flat (Co, T, Sp)  f32  decision+aggregation matmul table:
+                                Co = n_classes (vote: one-hot of the leaf
+                                class) or 1 (sum aggs: quantized payload)
+  dtable_pad  (T, Sp)      f32  lane-padded raw decision table (class ids or
+                                payloads) for the compare-select strategy
+                                used when T*Sp is too large for the matmul
+                                select to pay off
+
+where Bp/Tp/Mp/Sp are U+1/T/M/S rounded up to the lane boundary so every
+matmul/compare operand is lane-aligned on the MXU/VPU (``default_lane``:
+128 on TPU where alignment is mandatory and padding is free in the
+systolic tile; 8 elsewhere, where padded columns cost real FLOPs). Padded
+bins/trees/columns are zero and — because bins <= U and keys < S — can
+never be selected, so the fused kernels stay bit-exact. The logical shapes
+remain recoverable from the unpadded arrays (``pad_meta``); epilogues
+slice padded outputs back to logical width. All values involved are
+integers riding as f32 (< 2^24), so one big matmul is exact.
+
+The dtable_flat layout is what lets the kernel run the *entire*
+decision-table walk AND the aggregation as one more one-hot matmul:
+out[n, c] = sum_{t,s} (keys[n,t] == s) * dtable_flat[c, t, s] — votes or
+payload totals fall straight out of the contraction.
 """
 
 from __future__ import annotations
@@ -31,6 +60,19 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.quantize import FixedPoint
+
+LANE = 128   # TPU lane width: last-dim alignment unit for MXU/VPU operands
+
+
+def default_lane() -> int:
+    """Pad-to lane width: 128 on TPU (mandatory MXU/VPU alignment, free in
+    the systolic tile), 8 elsewhere (padding is real FLOPs off-TPU, so only
+    align to the smallest vector-friendly multiple)."""
+    return LANE if jax.default_backend() == "tpu" else 8
+
+
+def round_up_to_lane(n: int, lane: int = LANE) -> int:
+    return -(-n // lane) * lane
 
 
 @jax.tree_util.register_dataclass
@@ -55,6 +97,12 @@ class TableArtifact:
     # svm extras
     pairs: Optional[jax.Array] = None          # (m, 2) class pairs
 
+    # fused single-matmul kernel layout (see finalize_artifact)
+    ftable_flat: Optional[jax.Array] = None    # (F*Bp, Tp) f32
+    vtable_flat: Optional[jax.Array] = None    # (F*Bp, Mp) f32
+    dtable_flat: Optional[jax.Array] = None    # (Co, T, Sp) f32
+    dtable_pad: Optional[jax.Array] = None     # (T, Sp) f32
+
     # scalars used by aggregation
     base_score: float = dataclasses.field(metadata=dict(static=True), default=0.0)
     learning_rate: float = dataclasses.field(metadata=dict(static=True), default=1.0)
@@ -67,3 +115,117 @@ class TableArtifact:
     @property
     def n_trees(self) -> int:
         return 0 if self.ftable is None else self.ftable.shape[2]
+
+    @property
+    def n_bins(self) -> int:
+        """Logical bins per feature (union edge count + 1)."""
+        return self.edges.shape[1] + 1
+
+    @property
+    def pad_meta(self) -> dict:
+        """Padded vs logical shapes — how to slice the logical view back out."""
+        meta = {"b": self.n_bins}
+        if self.ftable_flat is not None:
+            meta.update(b_pad=self.ftable_flat.shape[0] // self.n_features,
+                        t=self.n_trees, t_pad=self.ftable_flat.shape[1],
+                        s=self.dtable_class.shape[1],
+                        s_pad=self.dtable_flat.shape[2])
+        if self.vtable_flat is not None:
+            meta.update(b_pad=self.vtable_flat.shape[0] // self.n_features,
+                        m=self.vtable.q.shape[2],
+                        m_pad=self.vtable_flat.shape[1])
+        return meta
+
+
+# ---------------------------------------------------------------------------
+# fused-kernel table layout
+# ---------------------------------------------------------------------------
+
+def flatten_ftable(ftable, strides, lane: Optional[int] = None) -> jax.Array:
+    """(F, B, T) codes + (T, F) strides -> (F*Bp, Tp) f32, stride-premultiplied.
+
+    Folding the mixed-radix stride into the table turns the whole stage-2
+    key computation into ONE one-hot matmul: keys = blocked_onehot @ flat.
+    code * stride < S <= 2^24, so the product is exact in f32.
+    """
+    lane = lane or default_lane()
+    f, b, t = ftable.shape
+    b_pad = round_up_to_lane(b, lane)
+    t_pad = round_up_to_lane(t, lane)
+    prod = (ftable.astype(jnp.float32)
+            * jnp.transpose(strides).astype(jnp.float32)[:, None, :])  # (F,B,T)
+    flat = jnp.zeros((f, b_pad, t_pad), jnp.float32)
+    flat = flat.at[:, :b, :t].set(prod)
+    return flat.reshape(f * b_pad, t_pad)
+
+
+def flatten_vtable(q, lane: Optional[int] = None) -> jax.Array:
+    """(F, B, M) quantized terms -> (F*Bp, Mp) f32 (exact integer payloads)."""
+    lane = lane or default_lane()
+    f, b, m = q.shape
+    b_pad = round_up_to_lane(b, lane)
+    m_pad = round_up_to_lane(m, lane)
+    flat = jnp.zeros((f, b_pad, m_pad), jnp.float32)
+    flat = flat.at[:, :b, :m].set(q.astype(jnp.float32))
+    return flat.reshape(f * b_pad, m_pad)
+
+
+def build_dtable_flat(dtable, n_classes: int, vote: bool,
+                      lane: Optional[int] = None) -> jax.Array:
+    """(T, S) decision table -> (Co, T, Sp) f32 decision+aggregation table.
+
+    vote: Co = n_classes and flat[c, t, s] = (dtable[t, s] == c) — the
+    match one-hot matmul then counts per-class votes directly.
+    sums: Co = 1 and flat[0, t, s] = dtable[t, s] — the matmul sums the
+    matched payloads across trees.
+
+    Pad entries sit at key indices >= S, which no decision key can take
+    (keys < per-tree size <= S), so zeros there keep the matmul exact.
+    """
+    lane = lane or default_lane()
+    t, s = dtable.shape
+    s_pad = round_up_to_lane(s, lane)
+    if vote:
+        c_iota = jnp.arange(n_classes, dtype=jnp.float32)
+        flat = (dtable.astype(jnp.float32)[None, :, :]
+                == c_iota[:, None, None]).astype(jnp.float32)
+    else:
+        flat = dtable.astype(jnp.float32)[None, :, :]
+    out = jnp.zeros((flat.shape[0], t, s_pad), jnp.float32)
+    return out.at[:, :, :s].set(flat)
+
+
+def pad_dtable(dtable, lane: Optional[int] = None) -> jax.Array:
+    """(T, S) -> (T, Sp) f32 for the compare-select strategy. Pad entries
+    can never match (keys < S), so their value is irrelevant."""
+    lane = lane or default_lane()
+    t, s = dtable.shape
+    s_pad = round_up_to_lane(s, lane)
+    out = jnp.zeros((t, s_pad), jnp.float32)
+    return out.at[:, :s].set(dtable.astype(jnp.float32))
+
+
+def finalize_artifact(art: TableArtifact,
+                      lane: Optional[int] = None) -> TableArtifact:
+    """Attach the fused single-matmul kernel layout (idempotent).
+
+    Runs control-plane side, once per table load — the runtime hot path only
+    ever consumes the pre-flattened arrays.
+    """
+    lane = lane or default_lane()
+    if art.ftable is not None:
+        if art.ftable_flat is not None:
+            return art
+        vote = art.agg == "vote"
+        dtable = art.dtable_class if vote else art.dtable_value.q
+        return dataclasses.replace(
+            art,
+            ftable_flat=flatten_ftable(art.ftable, art.strides, lane),
+            dtable_flat=build_dtable_flat(dtable, art.n_classes, vote, lane),
+            dtable_pad=pad_dtable(dtable, lane))
+    if art.vtable is not None:
+        if art.vtable_flat is not None:
+            return art
+        return dataclasses.replace(
+            art, vtable_flat=flatten_vtable(art.vtable.q, lane))
+    return art

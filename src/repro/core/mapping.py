@@ -18,7 +18,7 @@ from __future__ import annotations
 import numpy as np
 import jax.numpy as jnp
 
-from repro.core.artifact import TableArtifact
+from repro.core.artifact import TableArtifact, finalize_artifact
 from repro.core.quantize import quantize_fixed
 from repro.ml.trees import TreeEnsemble
 from repro.ml.svm import LinearSVM
@@ -137,13 +137,13 @@ def map_tree_ensemble(ens: TreeEnsemble, n_features: int, *,
 
     agg = {"dt": "vote", "rf": "vote", "xgb": "wsum_sigmoid",
            "iforest": "iforest"}[ens.kind]
-    return TableArtifact(
+    return finalize_artifact(TableArtifact(
         edges=jnp.asarray(edges), agg=agg, n_classes=ens.n_classes,
         ftable=jnp.asarray(ftable),
         strides=jnp.asarray(strides.astype(np.int32)),
         dtable_class=jnp.asarray(dtable_class),
         dtable_value=quantize_fixed(dtable_value, action_bits),
-        base_score=ens.base_score, learning_rate=ens.learning_rate)
+        base_score=ens.base_score, learning_rate=ens.learning_rate))
 
 
 # ---------------------------------------------------------------------------
@@ -203,11 +203,11 @@ def map_svm(model: LinearSVM, x_train, *, n_bins=64,
         vtable[f, :, :] = reps_std[:, None] * w[:, f][None, :]
     pad = np.full((f_dim, n_bins - 1), np.inf, np.float32)
     pad[:, :edges.shape[1]] = edges
-    return TableArtifact(
+    return finalize_artifact(TableArtifact(
         edges=jnp.asarray(pad), agg="svm_ovo", n_classes=model.n_classes,
         vtable=quantize_fixed(vtable, action_bits),
         consts=jnp.asarray(np.asarray(model.bias)),
-        pairs=model.pairs)
+        pairs=model.pairs))
 
 
 def map_naive_bayes(model: GaussianNB, x_train, *, n_bins=64,
@@ -231,10 +231,10 @@ def map_naive_bayes(model: GaussianNB, x_train, *, n_bins=64,
             np.log(2 * np.pi * var[None, :, f]) + d * d / var[None, :, f])
     pad = np.full((f_dim, n_bins - 1), np.inf, np.float32)
     pad[:, :edges.shape[1]] = edges
-    return TableArtifact(
+    return finalize_artifact(TableArtifact(
         edges=jnp.asarray(pad), agg="nb_log", n_classes=c_dim,
         vtable=quantize_fixed(vtable, action_bits),
-        consts=jnp.asarray(np.asarray(model.log_prior)))
+        consts=jnp.asarray(np.asarray(model.log_prior))))
 
 
 def map_kmeans(model: KMeansModel, x_train, *, n_bins=64,
@@ -252,8 +252,8 @@ def map_kmeans(model: KMeansModel, x_train, *, n_bins=64,
         vtable[f, :, :] = d * d
     pad = np.full((f_dim, n_bins - 1), np.inf, np.float32)
     pad[:, :edges.shape[1]] = edges
-    return TableArtifact(
+    return finalize_artifact(TableArtifact(
         edges=jnp.asarray(pad), agg="kmeans",
         n_classes=(n_classes or k_dim),
         vtable=quantize_fixed(vtable, action_bits),
-        consts=jnp.asarray(np.zeros(k_dim, np.float32)))
+        consts=jnp.asarray(np.zeros(k_dim, np.float32))))

@@ -23,6 +23,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.tuning import resolve_interpret
+
 TILE_N = 256
 EDGE_CHUNK = 32
 
@@ -41,23 +43,26 @@ def _bucketize_kernel(x_ref, edges_ref, out_ref, *, u_total: int):
 
 
 def bucketize_pallas(x: jax.Array, edges: jax.Array, *,
-                     interpret: bool = True) -> jax.Array:
+                     interpret=None, tile_n=None) -> jax.Array:
     """x (N, F) float32, edges (F, U) float32 (+inf padded) -> (N, F) int32.
 
-    N must be a multiple of TILE_N (ops.py pads).
+    N must be a multiple of tile_n (ops.py pads). interpret=None
+    auto-detects the backend (compiled on TPU, interpreter elsewhere).
     """
+    interpret = resolve_interpret(interpret)
+    tile_n = tile_n or TILE_N
     n, f = x.shape
     u = edges.shape[1]
-    assert n % TILE_N == 0, n
+    assert n % tile_n == 0, (n, tile_n)
     kernel = functools.partial(_bucketize_kernel, u_total=u)
     return pl.pallas_call(
         kernel,
-        grid=(n // TILE_N,),
+        grid=(n // tile_n,),
         in_specs=[
-            pl.BlockSpec((TILE_N, f), lambda i: (i, 0)),
+            pl.BlockSpec((tile_n, f), lambda i: (i, 0)),
             pl.BlockSpec((f, u), lambda i: (0, 0)),
         ],
-        out_specs=pl.BlockSpec((TILE_N, f), lambda i: (i, 0)),
+        out_specs=pl.BlockSpec((tile_n, f), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((n, f), jnp.int32),
         interpret=interpret,
     )(x, edges)

@@ -5,6 +5,10 @@ ride as exact f32), backend routing (Pallas on TPU, interpret-mode on CPU for
 validation, or the XLA gather reference for speed), and the scalar epilogues
 that turn kernel outputs into (pred, confidence).
 
+The fused path consumes the artifact's pre-flattened single-matmul layout
+(core.artifact.finalize_artifact); artifacts built by hand without it are
+flattened on the fly, so every TableArtifact works.
+
 VMEM fit check: the switch-SRAM analog. A model whose tables exceed the
 budget is rejected for the fused kernel — same failure mode as a model that
 doesn't fit the switch pipeline in the paper — and falls back to the XLA
@@ -19,11 +23,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.artifact import TableArtifact
+from repro.core.artifact import (TableArtifact, build_dtable_flat,
+                                 default_lane, flatten_ftable,
+                                 flatten_vtable, pad_dtable,
+                                 round_up_to_lane)
 from repro.kernels import bucketize as _bk
 from repro.kernels import ensemble_lookup as _ek
 from repro.kernels import classical_lookup as _ck
 from repro.kernels import ref as _ref
+from repro.kernels.tuning import DEFAULT_TILES, TileConfig
 
 VMEM_BUDGET_BYTES = 8 * 1024 * 1024   # half of a v5e core's ~16MB VMEM
 
@@ -33,10 +41,19 @@ def _on_tpu() -> bool:
 
 
 def _pad_batch(x, tile):
+    """Pad N up to a tile multiple by replicating the last valid row.
+
+    Replication (not zeros) keeps every padded lane on a real sample: a
+    zero row is out-of-distribution for the tables and, in fused serving
+    paths that compute telemetry before slicing, could perturb confidence
+    statistics. A replicated row classifies identically to its source and
+    is sliced off by [:n] like any pad.
+    """
     n = x.shape[0]
     pad = (-n) % tile
     if pad:
-        x = jnp.concatenate([x, jnp.zeros((pad,) + x.shape[1:], x.dtype)])
+        fill = jnp.broadcast_to(x[n - 1:n], (pad,) + x.shape[1:])
+        x = jnp.concatenate([x, fill])
     return x, n
 
 
@@ -47,20 +64,61 @@ def bucketize(x, edges, *, use_pallas=None):
     if not use_pallas:
         return _ref.bucketize_ref(x, edges)
     xp, n = _pad_batch(jnp.asarray(x, jnp.float32), _bk.TILE_N)
-    return _bk.bucketize_pallas(xp, edges, interpret=not _on_tpu())[:n]
+    return _bk.bucketize_pallas(xp, edges)[:n]
+
+
+def _flat_tree_tables(art: TableArtifact, vote: bool):
+    """Pre-flattened tables from the artifact, or on-the-fly fallback."""
+    if art.ftable_flat is not None:
+        return art.ftable_flat, art.dtable_flat, art.dtable_pad
+    dtable = art.dtable_class if vote else art.dtable_value.q
+    return (flatten_ftable(art.ftable, art.strides),
+            build_dtable_flat(dtable, art.n_classes, vote),
+            pad_dtable(dtable))
+
+
+def _flat_vtable(art: TableArtifact):
+    if art.vtable_flat is not None:
+        return art.vtable_flat
+    return flatten_vtable(art.vtable.q)
 
 
 def tree_tables_vmem_bytes(art: TableArtifact) -> int:
+    """Bytes the fused kernel will actually hold in VMEM — i.e. the
+    lane-padded flat layout, whether it is pre-built on the artifact or
+    about to be flattened on the fly. Only one decision table (flat or
+    pad) is a kernel operand, chosen by the same crossover as
+    select='auto' — mirror it so large-table models that would run the
+    compare strategy are not rejected for the matmul table they'd never
+    load."""
     e = art.edges.size * 4
-    f = art.ftable.size * 4
-    s = art.strides.size * 4
-    d = art.dtable_class.size * 4
-    return e + f + s + d
+    if art.ftable_flat is not None:
+        f = art.ftable_flat.size * 4
+        cout, t, s_pad = art.dtable_flat.shape
+    else:
+        lane = default_lane()
+        fdim, b, t = art.ftable.shape
+        s_pad = round_up_to_lane(art.dtable_class.shape[1], lane)
+        cout = art.n_classes if art.agg == "vote" else 1
+        f = (fdim * round_up_to_lane(b, lane)
+             * round_up_to_lane(t, lane) * 4)
+    matmul_select = t * s_pad * cout <= _ek.SELECT_MATMUL_MAX
+    d = (cout if matmul_select else 1) * t * s_pad * 4
+    return e + f + d
+
+
+def _vtable_vmem_bytes(art: TableArtifact) -> int:
+    if art.vtable_flat is not None:
+        return art.vtable_flat.size * 4
+    lane = default_lane()
+    fdim, b, m = art.vtable.q.shape
+    return fdim * round_up_to_lane(b, lane) * round_up_to_lane(m, lane) * 4
 
 
 def fits_vmem(art: TableArtifact) -> bool:
     if art.ftable is None:
-        return (art.edges.size + art.vtable.q.size) * 4 <= VMEM_BUDGET_BYTES
+        return (art.edges.size * 4 + _vtable_vmem_bytes(art)
+                <= VMEM_BUDGET_BYTES)
     return tree_tables_vmem_bytes(art) <= VMEM_BUDGET_BYTES
 
 
@@ -112,38 +170,43 @@ def _classical_epilogue(art: TableArtifact, out):
 
 
 def fused_classify(art: TableArtifact, x, *, use_pallas=None,
-                   interpret=None):
+                   interpret=None, tiles: TileConfig = None):
     """(pred, confidence) through the fused kernel path.
 
     use_pallas=None auto-routes: Pallas on TPU, XLA reference otherwise.
     Pass use_pallas=True on CPU to exercise interpret mode (tests do).
+    tiles overrides the kernel tile sizes (see kernels.tuning.autotune_tiles).
     """
     if use_pallas is None:
         use_pallas = _on_tpu()
-    if interpret is None:
-        interpret = not _on_tpu()
+    tiles = tiles or DEFAULT_TILES
     x = jnp.asarray(x, jnp.float32)
 
     if art.ftable is not None:
         vote = art.agg == "vote"
-        dtable = (art.dtable_class if vote else art.dtable_value.q)
-        dtable = dtable.astype(jnp.float32)
         if use_pallas and fits_vmem(art):
-            xp, n = _pad_batch(x, _ek.TILE_N)
-            out = _ek.ensemble_lookup_pallas(
-                xp, art.edges, art.ftable, art.strides, dtable,
-                n_classes=art.n_classes, vote=vote, interpret=interpret)[:n]
+            ftable_flat, dtable_flat, dtable_pad = _flat_tree_tables(art, vote)
+            xp, n = _pad_batch(x, tiles.tile_n)
+            out = _ek.ensemble_lookup_fused(
+                xp, art.edges, ftable_flat, dtable_flat, dtable_pad,
+                interpret=interpret, tile_n=tiles.tile_n,
+                edge_chunk=tiles.edge_chunk,
+                dtable_chunk=tiles.dtable_chunk,
+                select=tiles.select)[:n]
         else:
+            dtable = (art.dtable_class if vote else art.dtable_value.q)
             out = _ref.ensemble_lookup_ref(
-                x, art.edges, art.ftable, art.strides, dtable,
+                x, art.edges, art.ftable, art.strides,
+                dtable.astype(jnp.float32),
                 n_classes=art.n_classes, vote=vote)
         return _tree_epilogue(art, out)
 
+    m = art.vtable.q.shape[2]
     if use_pallas and fits_vmem(art):
-        xp, n = _pad_batch(x, _ck.TILE_N)
-        out = _ck.classical_lookup_pallas(
-            xp, art.edges, art.vtable.q.astype(jnp.float32),
-            interpret=interpret)[:n]
+        xp, n = _pad_batch(x, tiles.tile_n)
+        out = _ck.classical_lookup_fused(
+            xp, art.edges, _flat_vtable(art), interpret=interpret,
+            tile_n=tiles.tile_n, edge_chunk=tiles.edge_chunk)[:n, :m]
     else:
         out = _ref.classical_lookup_ref(x, art.edges,
                                         art.vtable.q.astype(jnp.float32))

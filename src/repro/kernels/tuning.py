@@ -1,0 +1,121 @@
+"""Tile-size selection for the fused lookup kernels.
+
+The fused kernels take three tile knobs:
+
+  tile_n        batch rows per grid step (VMEM tile height)
+  edge_chunk    edges compared per sweep step in the range match
+  dtable_chunk  decision entries compared per TCAM step
+
+The best settings depend on the artifact shape (F, U, T/M, S) and the
+backend (MXU tiles on TPU vs the interpret-mode grid overhead on CPU), so
+``autotune_tiles`` times a small candidate sweep on synthetic data and
+caches the winner per (artifact shape, backend). Serving calls it once at
+server init (opt-in); everything else uses ``DEFAULT_TILES``.
+
+``resolve_interpret`` is the backend auto-detect shared by every raw kernel
+entry point: Pallas compiled on TPU, interpreter elsewhere — so direct
+callers never run the interpreter on a real accelerator by accident.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class TileConfig:
+    tile_n: int = 128
+    edge_chunk: int = 32
+    dtable_chunk: int = 512
+    select: str = "auto"     # decision-select strategy: matmul|compare|auto
+
+
+DEFAULT_TILES = TileConfig()
+
+_TILE_CACHE: dict = {}
+
+
+def resolve_interpret(interpret: Optional[bool]) -> bool:
+    """None -> interpreter off on TPU, on everywhere else."""
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return bool(interpret)
+
+
+def clear_tile_cache() -> None:
+    _TILE_CACHE.clear()
+
+
+def _artifact_key(art) -> tuple:
+    if art.ftable is not None:
+        return ("tree", art.agg, tuple(art.ftable.shape),
+                tuple(art.dtable_class.shape))
+    return ("classical", art.agg, tuple(art.vtable.q.shape))
+
+
+def _time_config(art, x, tiles: TileConfig, reps: int) -> float:
+    from repro.kernels import ops as _ops
+
+    @functools.partial(jax.jit, static_argnames=("tiles",))
+    def run(art, x, tiles):
+        return _ops.fused_classify(art, x, use_pallas=True, tiles=tiles)[0]
+
+    run(art, x, tiles).block_until_ready()          # compile / first trace
+    best = float("inf")                             # min: load-spike robust
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        run(art, x, tiles).block_until_ready()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def candidate_tiles(batch: int) -> list:
+    """Small sweep: grid granularity × chunking × select strategy."""
+    cands = []
+    for tile_n in (128, 512):
+        if tile_n > batch:
+            continue
+        for dtable_chunk in (256, 1024):
+            for select in ("matmul", "compare"):
+                cands.append(TileConfig(tile_n=tile_n, edge_chunk=32,
+                                        dtable_chunk=dtable_chunk,
+                                        select=select))
+    return cands or [DEFAULT_TILES]
+
+
+def autotune_tiles(art, *, batch: int = 2048, reps: int = 2,
+                   candidates=None, seed: int = 0,
+                   verbose: bool = False) -> TileConfig:
+    """Pick the fastest TileConfig for this artifact shape on this backend.
+
+    Cached per (artifact shape, backend); the sweep runs on synthetic rows
+    drawn around the edge range so the compare sweeps see realistic bins.
+    """
+    key = (_artifact_key(art), jax.default_backend(), batch)
+    hit = _TILE_CACHE.get(key)
+    if hit is not None:
+        return hit
+    edges = jnp.where(jnp.isfinite(art.edges), art.edges, 0.0)
+    lo, hi = float(edges.min()), float(edges.max())
+    span = max(hi - lo, 1.0)
+    x = jax.random.uniform(jax.random.PRNGKey(seed),
+                           (batch, art.n_features), jnp.float32,
+                           lo - 0.1 * span, hi + 0.1 * span)
+    best, best_dt = DEFAULT_TILES, float("inf")
+    for tiles in (candidates or candidate_tiles(batch)):
+        try:
+            dt = _time_config(art, x, tiles, reps)
+        except Exception:                           # config unsupported: skip
+            continue
+        if verbose:
+            print(f"autotune {tiles} -> {dt * 1e3:.2f} ms")
+        if dt < best_dt:
+            best, best_dt = tiles, dt
+    _TILE_CACHE[key] = best
+    return best

@@ -91,8 +91,11 @@ def main(argv=None):
             logits, _ = M.prefill(params, cfg, {"tokens": toks})
             return (logits[:, 0] > logits[:, 1]).astype(jnp.int32)
 
+    # the ensemble backend reads per-batch side-channels (idx/full_rows on
+    # the function object): it must not be traced into the fused step
     server = HybridServer(art, backend_fn, threshold=args.threshold,
-                          capacity=args.capacity)
+                          capacity=args.capacity,
+                          fuse=False if args.backend == "ensemble" else None)
 
     n = xsw_te.shape[0]
     preds = []
@@ -102,10 +105,15 @@ def main(argv=None):
         if args.backend == "ensemble":
             backend_fn.full_rows = jnp.asarray(xte[lo:lo + args.batch])
             # dispatch indices are produced inside classify; recompute here
-            sw_pred, conf = fused_classify(art, rows)
+            # with the SAME switch realization the server uses
+            # (use_pallas=False default) so idx matches bit for bit —
+            # a different kernel path could order the dispatch differently
+            # and silently score the wrong full-feature rows
+            sw_pred, conf = fused_classify(art, rows, use_pallas=False)
             from repro.core.hybrid import dispatch
             fwd = conf < args.threshold
-            buf, idx, valid = dispatch(jnp.asarray(rows), fwd, args.capacity)
+            buf, idx, valid = dispatch(jnp.asarray(rows, jnp.float32), fwd,
+                                       args.capacity)
             backend_fn.idx = idx
         pred, stats = server.classify(rows)
         preds.append(np.asarray(pred))

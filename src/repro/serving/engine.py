@@ -31,9 +31,11 @@ class ServeEngine:
         self.cache_dtype = cache_dtype
         self._prefill = jax.jit(
             functools.partial(M.prefill, cfg=cfg))
+        # decode() passes caches by keyword, so donation must be by name —
+        # donate_argnums silently never fired, leaving a cache copy per step
         self._decode = jax.jit(
             functools.partial(M.decode_step, cfg=cfg),
-            donate_argnums=(3,))
+            donate_argnames=("caches",))
 
     def prefill(self, batch_dict):
         logits, caches = self._prefill(self.params, batch=batch_dict)

@@ -13,63 +13,175 @@ Request path:
      reduction, in batch-size form: the expensive model runs on
      capacity-many rows, not on the full batch.
 
-The per-batch telemetry (fraction handled, backend batch occupancy)
-matches Figs 10-11's sweep quantities.
+Zero-sync single-dispatch path: switch classify + dispatch + backend +
+combine are ONE jitted, buffer-donating function, so a classify() is a
+single device dispatch with no host round-trips in between. Telemetry
+(fraction handled, backend occupancy — Figs 10-11's sweep quantities)
+returns as device arrays wrapped in a lazy HybridStats: nothing blocks on
+a float()/int() host sync unless the caller actually reads a statistic.
+
+Backends that cannot be traced (e.g. they call into a foreign runtime)
+are detected on the first classify and served by a two-phase fallback:
+jitted switch+dispatch, host backend call, jitted combine — still one
+host hop fewer than the pre-refactor path.
 """
 
 from __future__ import annotations
 
-import dataclasses
 from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.artifact import TableArtifact
+from repro.core.artifact import TableArtifact, finalize_artifact
 from repro.core.hybrid import combine, dispatch
 from repro.kernels.ops import fused_classify
+from repro.kernels.tuning import DEFAULT_TILES, TileConfig, autotune_tiles
 
 
-@dataclasses.dataclass
 class HybridStats:
-    fraction_handled: float
-    backend_rows: int
-    capacity: int
+    """Per-batch telemetry holding device arrays; converts lazily.
+
+    Reading .fraction_handled / .backend_rows is the only point that
+    blocks on the device — constructing or returning HybridStats never
+    does, which keeps classify() fully asynchronous.
+    """
+
+    __slots__ = ("_fraction_handled", "_backend_rows", "capacity")
+
+    def __init__(self, fraction_handled, backend_rows, capacity: int):
+        self._fraction_handled = fraction_handled
+        self._backend_rows = backend_rows
+        self.capacity = capacity
+
+    @property
+    def fraction_handled(self) -> float:
+        return float(self._fraction_handled)
+
+    @property
+    def backend_rows(self) -> int:
+        return int(self._backend_rows)
+
+    def as_arrays(self):
+        """(fraction_handled, backend_rows) as device arrays — no sync."""
+        return self._fraction_handled, self._backend_rows
+
+    def __repr__(self):
+        return (f"HybridStats(fraction_handled={self.fraction_handled:.3f}, "
+                f"backend_rows={self.backend_rows}, "
+                f"capacity={self.capacity})")
 
 
 class HybridServer:
     def __init__(self, artifact: TableArtifact, backend_fn: Callable,
                  *, threshold: float = 0.7, capacity: int = 256,
-                 use_pallas: bool = False):
-        """backend_fn: (rows (capacity, F)) -> class predictions (capacity,)."""
-        self.artifact = artifact
-        self.backend_fn = backend_fn
+                 use_pallas: bool = False, autotune: bool = False,
+                 donate: bool = False, tiles: Optional[TileConfig] = None,
+                 fuse: Optional[bool] = None):
+        """backend_fn: (rows (capacity, F)) -> class predictions (capacity,).
+
+        autotune=True sweeps kernel tile sizes once for this artifact shape
+        (cached per shape+backend; only meaningful — and only run — when
+        use_pallas=True, since the XLA reference path ignores tile
+        configs). donate=True marks the input batch
+        donatable to the fused step; with the current step outputs (pred
+        (N,) i32 + scalar telemetry) nothing can alias an (N, F) f32 input,
+        so this is off by default — enable it if you extend the step to
+        return row-shaped outputs. A caller that passes an already-float32
+        jax.Array then cedes that buffer (standard donation semantics).
+
+        fuse: None probes on the first classify whether backend_fn traces
+        into the single-dispatch step; False forces the two-phase path.
+        Backends that *appear* traceable but read mutable side-channels
+        (per-batch state on the function object) MUST pass fuse=False —
+        tracing would bake the first batch's state in as a constant.
+        """
+        self.artifact = finalize_artifact(artifact)
+        # capacity and backend_fn are baked into the jitted step: frozen.
+        # threshold is a *traced* argument, so it stays tunable per call
+        # (sweeping tau never recompiles).
+        self._backend_fn = backend_fn
+        self._capacity = capacity
         self.threshold = threshold
-        self.capacity = capacity
         self.use_pallas = use_pallas
-        self._switch = jax.jit(
-            lambda art, x: fused_classify(art, x, use_pallas=use_pallas))
+        # tiles only steer the Pallas kernels; sweeping them for the XLA
+        # reference path would be pure init latency
+        self.tiles = tiles or (autotune_tiles(self.artifact)
+                               if autotune and use_pallas else DEFAULT_TILES)
+        self._fused_ok = fuse                   # None = not yet probed
+
+        def step(art, x, threshold):
+            sw_pred, conf = fused_classify(art, x, use_pallas=use_pallas,
+                                           tiles=self.tiles)
+            fwd = conf < threshold
+            buf, idx, valid = dispatch(x, fwd, capacity)
+            be_pred = jnp.asarray(backend_fn(buf))
+            pred = combine(sw_pred, be_pred, idx, valid)
+            frac = 1.0 - jnp.mean(fwd.astype(jnp.float32))
+            rows = jnp.sum(valid.astype(jnp.int32))
+            return pred, frac, rows
+
+        self._step = jax.jit(step, donate_argnums=(1,) if donate else ())
+
+        def switch_only(art, x, threshold):
+            sw_pred, conf = fused_classify(art, x, use_pallas=use_pallas,
+                                           tiles=self.tiles)
+            fwd = conf < threshold
+            buf, idx, valid = dispatch(x, fwd, capacity)
+            frac = 1.0 - jnp.mean(fwd.astype(jnp.float32))
+            rows = jnp.sum(valid.astype(jnp.int32))
+            return sw_pred, buf, idx, valid, frac, rows
+
+        self._switch_only = jax.jit(switch_only)
+        self._combine = jax.jit(combine)
+
+    @property
+    def capacity(self) -> int:
+        """Backend buffer size. Frozen: it fixes the compiled shapes —
+        build a new server to change it."""
+        return self._capacity
+
+    @property
+    def backend_fn(self):
+        """Frozen: traced into the fused step at construction."""
+        return self._backend_fn
 
     def classify(self, x):
-        """x (N, F) -> (pred (N,), stats)."""
-        sw_pred, conf = self._switch(self.artifact, x)
-        fwd = conf < self.threshold
-        buf, idx, valid = dispatch(jnp.asarray(x, jnp.float32), fwd,
-                                   self.capacity)
-        be_pred = self.backend_fn(buf)
-        pred = combine(sw_pred, jnp.asarray(be_pred), idx, valid)
-        stats = HybridStats(
-            fraction_handled=float(1.0 - jnp.mean(fwd.astype(jnp.float32))),
-            backend_rows=int(jnp.sum(valid)),
-            capacity=self.capacity)
-        return pred, stats
+        """x (N, F) -> (pred (N,), HybridStats). Fully async: nothing here
+        blocks on the device; read the stats (or the preds) to sync."""
+        x = jnp.asarray(x, jnp.float32)
+        tau = jnp.float32(self.threshold)
+        if self._fused_ok is None:
+            try:
+                pred, frac, rows = self._step(self.artifact, x, tau)
+                self._fused_ok = True
+                return pred, HybridStats(frac, rows, self.capacity)
+            except (jax.errors.JAXTypeError, TypeError):
+                # backend_fn is not traceable; tracing failed before any
+                # execution, so x was not consumed by the donation
+                self._fused_ok = False
+        if self._fused_ok:
+            pred, frac, rows = self._step(self.artifact, x, tau)
+            return pred, HybridStats(frac, rows, self.capacity)
+        # two-phase fallback: untraceable backend runs on host between
+        # the jitted switch half and the jitted combine
+        sw_pred, buf, idx, valid, frac, rows = self._switch_only(
+            self.artifact, x, tau)
+        be_pred = jnp.asarray(self.backend_fn(buf))
+        pred = self._combine(sw_pred, be_pred, idx, valid)
+        return pred, HybridStats(frac, rows, self.capacity)
 
     def update_tables(self, artifact: TableArtifact):
         """§4.4: retraining swaps table *contents*; nothing recompiles as
         long as shapes (the model constraints) are unchanged."""
-        same = jax.tree.map(lambda a, b: a.shape == b.shape,
-                            self.artifact, artifact)
-        if not all(jax.tree.leaves(same)):
+        artifact = finalize_artifact(artifact)
+        try:
+            same = jax.tree.map(lambda a, b: a.shape == b.shape,
+                                self.artifact, artifact)
+            ok = all(jax.tree.leaves(same))
+        except ValueError:                      # tree structure mismatch
+            ok = False
+        if not ok:
             raise ValueError("table shapes changed: constraints violated "
                              "(paper §4.4 requires fixed model constraints)")
         self.artifact = artifact

@@ -77,6 +77,52 @@ def test_hybrid_server_update_tables(hybrid_setup):
         assert p2.shape == p1.shape
 
 
+def test_padded_rows_never_perturb_telemetry(hybrid_setup):
+    """Ragged batches run through kernel tile padding (replicated last row,
+    never zero rows) and must report exactly the telemetry of the logical
+    rows — Figs 10-11 quantities can't drift with batch alignment."""
+    art, small, big, xte, yte = hybrid_setup
+    tau, cap = 0.9, 64
+    srv = HybridServer(art, lambda r: predict_tree_ensemble(big, r),
+                       threshold=tau, capacity=cap, use_pallas=True)
+    for n in (130, 256, 301):                   # ragged and aligned
+        pred, stats = srv.classify(xte[:n])
+        _, conf = table_predict(art, xte[:n])
+        fwd = np.asarray(conf) < tau
+        assert pred.shape == (n,)
+        assert stats.fraction_handled == pytest.approx(1.0 - fwd.mean())
+        assert stats.backend_rows == min(int(fwd.sum()), cap)
+
+
+def test_classify_stats_are_lazy_device_arrays(hybrid_setup):
+    """classify() returns without host syncs: telemetry stays on device
+    until a statistic is actually read."""
+    art, small, big, xte, yte = hybrid_setup
+    srv = HybridServer(art, lambda r: predict_tree_ensemble(big, r),
+                       threshold=0.7, capacity=128)
+    pred, stats = srv.classify(xte[:256])
+    frac, rows = stats.as_arrays()
+    assert isinstance(frac, jax.Array) and isinstance(rows, jax.Array)
+    assert isinstance(stats.fraction_handled, float)
+    assert isinstance(stats.backend_rows, int)
+    assert 0.0 <= stats.fraction_handled <= 1.0
+
+
+def test_hybrid_server_untraceable_backend_falls_back(hybrid_setup):
+    """A numpy-only backend can't fuse into the jitted step; the server
+    must detect that on first classify and serve via the two-phase path."""
+    art, small, big, xte, yte = hybrid_setup
+
+    def np_backend(rows):
+        return np.zeros(np.asarray(rows).shape[0], np.int32)
+
+    srv = HybridServer(art, np_backend, threshold=2.0, capacity=32)
+    pred, stats = srv.classify(xte[:100])
+    assert srv._fused_ok is False
+    assert pred.shape == (100,)
+    assert stats.backend_rows == 32             # tau=2.0 forwards everything
+
+
 def test_greedy_generate_deterministic():
     from repro.configs import get_smoke_config
     from repro.models import model as M
