@@ -1,0 +1,126 @@
+"""Streaming serving microbenchmark: packets/sec vs window size.
+
+``python -m benchmarks.stream_bench`` drives the StreamingHybridServer
+over a synthetic packet trace at several window sizes and reports
+sustained packets/sec for the full fused step (register update -> flow
+feature read-out -> switch classify -> capacity-bounded backend ->
+combine -> telemetry). Windows are pre-materialized so the timed loop
+measures the serving path, not host-side trace slicing; the loop never
+syncs — one block_until_ready at the end, matching the zero-sync serving
+contract.
+
+Before any timing, the equivalence oracle runs: streaming the trace over
+W windows must reproduce the batch ``flow_features`` table bit for bit
+(a speedup from drifted registers is not a speedup).
+
+Results go to ``BENCH_stream.json`` (schema "bench-v1", DESIGN.md §7).
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import print_table, write_bench_json
+from repro.core.mapping import map_tree_ensemble
+from repro.ml.trees import fit_random_forest, predict_tree_ensemble
+from repro.netsim.features import flow_features
+from repro.netsim.packets import synth_trace
+from repro.netsim.stream import iter_windows, stream_flow_features
+from repro.serving.stream_serving import StreamingHybridServer
+
+
+def _models(trace, n_buckets):
+    """Train the switch-size RF + backend RF on batch flow features."""
+    b, table = flow_features(trace, n_buckets=n_buckets)
+    first_idx = np.unique(np.asarray(trace.flow_id), return_index=True)[1]
+    rows = np.asarray(table)[np.asarray(b)[first_idx]].astype(np.float32)
+    labels = trace.flow_label
+    small = fit_random_forest(rows, labels, n_classes=2, n_trees=4,
+                              max_depth=3, seed=0)
+    big = fit_random_forest(rows, labels, n_classes=2, n_trees=16,
+                            max_depth=6, seed=1)
+    art = map_tree_ensemble(small, rows.shape[1])
+    return art, (lambda r: predict_tree_ensemble(big, r))
+
+
+def run(n_flows=4000, windows=(256, 1024, 4096), n_buckets=1 << 13,
+        threshold=0.9, capacity=64, repeats=3, seed=0,
+        out="BENCH_stream.json"):
+    t_suite = time.time()
+    trace = synth_trace(n_flows=n_flows, seed=seed)
+    _, batch_table = flow_features(trace, n_buckets=n_buckets)
+
+    art, backend = _models(trace, n_buckets)
+    rows = []
+    for w_size in windows:
+        # equivalence oracle per window size: streaming at THIS chunking
+        # must reproduce the batch flow table before its numbers count
+        _, stream_table = stream_flow_features(trace, n_buckets=n_buckets,
+                                               window=w_size)
+        np.testing.assert_array_equal(np.asarray(stream_table),
+                                      np.asarray(batch_table))
+        srv = StreamingHybridServer(art, backend, n_buckets=n_buckets,
+                                    window=w_size, threshold=threshold,
+                                    capacity=capacity)
+        ws = list(iter_windows(trace, w_size, n_buckets))
+        # warm pass: compile + backend probe
+        for w in ws:
+            pred, _ = srv.step(w)
+        jax.block_until_ready(pred)
+        best = float("inf")
+        for _ in range(repeats):
+            srv.reset()
+            t0 = time.perf_counter()
+            for w in ws:
+                pred, _ = srv.step(w)
+            jax.block_until_ready(pred)        # single end-of-stream sync
+            best = min(best, time.perf_counter() - t0)
+        stats = srv.stats
+        rows.append({
+            "window": w_size,
+            "n_packets": trace.n_packets,
+            "n_windows": len(ws),
+            "wall_s": round(best, 4),
+            "pkts_per_s": round(trace.n_packets / best, 1),
+            "fraction_handled": round(stats.fraction_handled, 4),
+            "backend_rows": stats.total_backend_rows,
+            "bit_consistent": True,
+        })
+
+    print_table("Streaming hybrid serving — packets/sec vs window size",
+                ["window", "pkts", "windows", "wall_s", "pkts/s",
+                 "frac_handled", "backend_rows"],
+                [[r["window"], r["n_packets"], r["n_windows"], r["wall_s"],
+                  r["pkts_per_s"], r["fraction_handled"], r["backend_rows"]]
+                 for r in rows])
+
+    benches = [{"name": "stream_serving",
+                "paper_ref": "§5 challenge (ii) / pForest",
+                "ok": True, "rows": rows,
+                "wall_s": round(time.time() - t_suite, 3)}]
+    if out:
+        write_bench_json(out, "stream", benches,
+                         config={"n_flows": n_flows, "windows": list(windows),
+                                 "n_buckets": n_buckets,
+                                 "threshold": threshold,
+                                 "capacity": capacity, "repeats": repeats})
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--out", default="BENCH_stream.json")
+    args = ap.parse_args(argv)
+    if args.quick:
+        run(n_flows=1200, windows=(256, 1024), repeats=2, out=args.out)
+    else:
+        run(out=args.out)
+
+
+if __name__ == "__main__":
+    main()

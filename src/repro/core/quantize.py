@@ -30,7 +30,9 @@ def quantize_fixed(v, bits: int) -> FixedPoint:
     max_abs = max(max_abs, 1e-12)
     qmax = float(2 ** (bits - 1) - 1)
     scale = qmax / max_abs
-    q = np.clip(np.round(v * scale), -qmax - 1, qmax).astype(np.int32)
+    # symmetric clip: the code -qmax-1 exists in two's complement but
+    # dequantizes past max_abs, breaking the symmetric contract above
+    q = np.clip(np.round(v * scale), -qmax, qmax).astype(np.int32)
     return FixedPoint(q=jnp.asarray(q), scale=jnp.float32(scale), bits=bits)
 
 

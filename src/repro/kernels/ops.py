@@ -57,6 +57,27 @@ def _pad_batch(x, tile):
     return x, n
 
 
+def pad_window(cols, tile: int):
+    """Tile-pad per-packet columns to a multiple of ``tile``.
+
+    ``cols`` is a pytree of arrays sharing leading length W0; returns
+    (padded_cols, valid (Wp,) bool, n). Pad lanes replicate the last packet
+    — in-distribution, the same discipline as ``_pad_batch`` — and carry
+    valid=False, so streaming register updates and telemetry mask them out
+    exactly. This is the streaming entry point: every window enters the
+    jitted step at one static shape (``tile`` = the window size), so a
+    ragged final window never recompiles and never perturbs flow state.
+    """
+    leaves = jax.tree.leaves(cols)
+    n = leaves[0].shape[0]
+    pad = (-n) % tile
+    if pad:
+        cols = jax.tree.map(
+            lambda a: _pad_batch(jnp.asarray(a), tile)[0], cols)
+    valid = jnp.arange(n + pad) < n
+    return cols, valid, n
+
+
 def bucketize(x, edges, *, use_pallas=None):
     """Public bucketize. x (N, F), edges (F, U) -> (N, F) int32."""
     if use_pallas is None:

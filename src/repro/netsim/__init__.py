@@ -5,6 +5,9 @@ packet-level features are pure maps, flow-level features are hash + segment
 reductions (the register-per-flow analog), aggregate features reduce over
 flow groups, and file-level features parse payload byte arrays (the paper's
 fixed-width csv demonstration, incl. features split across packets).
+
+``stream`` is the always-on deployment shape: the same flow registers
+carried as a FlowTableState and updated incrementally per packet window.
 """
 
 from repro.netsim.packets import synth_trace, PacketTrace
@@ -16,4 +19,15 @@ from repro.netsim.features import (
     stitch_split_payload,
     encode_csv_payload,
     fnv1a_hash,
+    rebase_ts,
+    table_from_registers,
+)
+from repro.netsim.stream import (
+    FlowTableState,
+    PacketWindow,
+    init_flow_table,
+    update_flow_table,
+    flow_table_readout,
+    iter_windows,
+    stream_flow_features,
 )

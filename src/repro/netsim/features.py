@@ -17,6 +17,51 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
+
+
+def rebase_ts(ts, t0=None) -> jax.Array:
+    """Rebase raw timestamps to ``t0``-relative seconds, then cast to f32.
+
+    At epoch scale (~1.7e9 s) float32 resolution is ~256 s, which wipes out
+    every duration / inter-arrival feature — the subtraction must happen in
+    float64 *before* the cast. Host-side on purpose: traces are numpy
+    struct-of-arrays, and the data plane analog is the switch's relative
+    packet clock, not wall time. t0 defaults to the minimum timestamp;
+    the streaming path passes its latched stream epoch instead. This is
+    the single definition both paths share — the streaming-vs-batch
+    bit-consistency contract depends on the rebase never diverging.
+    """
+    return jnp.asarray(rebase_ts_np(ts, t0))
+
+
+def rebase_ts_np(ts, t0=None) -> "np.ndarray":
+    """Host-side core of ``rebase_ts`` -> float32 numpy array.
+
+    The streaming window iterator uses this directly so trace ingest never
+    round-trips the full timestamp column through the device.
+    """
+    ts64 = np.asarray(ts, np.float64)
+    if t0 is None:
+        t0 = ts64.min() if ts64.size else 0.0
+    return (ts64 - t0).astype(np.float32)
+
+
+def table_from_registers(cnt, byt, t_min, t_max, fwd_pkts, rev_pkts,
+                         fwd_bytes, rev_bytes) -> jax.Array:
+    """Derive the 8-column flow-feature table from raw registers.
+
+    Shared by the one-shot path (`flow_features`) and the streaming path
+    (`netsim.stream.flow_table_readout`) so both derive duration / mean-IAT
+    identically — the streaming-vs-batch bit-consistency contract hinges on
+    this being the single definition. Untouched buckets carry
+    t_min=+inf / t_max=-inf (the segment_min/max identities); the cnt>0
+    guard maps them to zero.
+    """
+    dur = jnp.where(cnt > 0, t_max - t_min, 0.0)
+    iat = jnp.where(cnt > 1, dur / jnp.maximum(cnt - 1, 1), 0.0)
+    return jnp.stack([cnt, byt, dur, iat, fwd_pkts, rev_pkts,
+                      fwd_bytes, rev_bytes], axis=1)
 
 
 def fnv1a_hash(*cols, n_buckets: int) -> jax.Array:
@@ -57,7 +102,7 @@ def flow_features(trace, n_buckets=4096):
     """
     b = fnv1a_hash(trace.src_ip, trace.dst_ip, trace.sport, trace.dport,
                    trace.proto, n_buckets=n_buckets)
-    ts = jnp.asarray(trace.ts, jnp.float32)
+    ts = rebase_ts(trace.ts)
     ln = jnp.asarray(trace.length, jnp.float32)
     fwd = (jnp.asarray(trace.direction) == 0).astype(jnp.float32)
 
@@ -66,12 +111,9 @@ def flow_features(trace, n_buckets=4096):
     byt = seg(ln)
     t_min = jax.ops.segment_min(ts, b, num_segments=n_buckets)
     t_max = jax.ops.segment_max(ts, b, num_segments=n_buckets)
-    dur = jnp.where(cnt > 0, t_max - t_min, 0.0)
-    iat = jnp.where(cnt > 1, dur / jnp.maximum(cnt - 1, 1), 0.0)
-    table = jnp.stack([
-        cnt, byt, dur, iat,
-        seg(fwd), seg(1.0 - fwd), seg(ln * fwd), seg(ln * (1.0 - fwd)),
-    ], axis=1)
+    table = table_from_registers(
+        cnt, byt, t_min, t_max,
+        seg(fwd), seg(1.0 - fwd), seg(ln * fwd), seg(ln * (1.0 - fwd)))
     return b, table
 
 
@@ -85,7 +127,7 @@ def aggregate_features(trace, *, key: str = "dport", n_buckets=1024):
     col = jnp.asarray(getattr(trace, key))
     g = (col.astype(jnp.int32) % n_buckets)
     ln = jnp.asarray(trace.length, jnp.float32)
-    ts = jnp.asarray(trace.ts, jnp.float32)
+    ts = rebase_ts(trace.ts)
     cnt = jax.ops.segment_sum(jnp.ones_like(ln), g, num_segments=n_buckets)
     byt = jax.ops.segment_sum(ln, g, num_segments=n_buckets)
     dur = jnp.where(
@@ -100,18 +142,30 @@ def aggregate_features(trace, *, key: str = "dport", n_buckets=1024):
 # file-level (§5.3): fixed-width csv payloads, fields split across packets
 # ---------------------------------------------------------------------------
 
+def _format_fixed(v: float, width: int) -> str:
+    """Format ``v`` into exactly ``width`` ASCII chars, dropping fractional
+    digits to fit. Right-truncating an over-wide rendering (the old
+    behavior) silently produced a *different number* — "12345.678" cut to
+    "12345.67"; here precision shrinks until the string fits, so every
+    retained digit is a correctly rounded one.
+    """
+    for prec in range(3, -1, -1):
+        s = f"{v:.{prec}f}"
+        if len(s) <= width:
+            return s.rjust(width)
+    raise ValueError(f"value {v!r} does not fit in {width} ASCII chars")
+
+
 def encode_csv_payload(values, width=8):
     """Encode float rows as fixed-width ASCII columns (the paper's
     reformatted Jane Street file: "columns of eight characters").
 
     values (R, C) -> uint8 bytes (R, C*width).
     """
-    import numpy as np
     r, c = values.shape
     out = np.zeros((r, c * width), np.uint8)
     for i in range(r):
-        row = "".join(f"{float(v):{width}.3f}"[:width].rjust(width)
-                      for v in values[i])
+        row = "".join(_format_fixed(float(v), width) for v in values[i])
         out[i] = np.frombuffer(row.encode("ascii"), np.uint8)
     return out
 

@@ -1,0 +1,201 @@
+"""Streaming flow-table tier: per-flow registers updated window by window.
+
+The paper's challenge (ii) is extracting features *on the data plane*,
+where packets arrive continuously and per-flow registers are updated
+incrementally — a switch never sees the whole trace at once. This module
+is that deployment shape (pForest's per-flow state across packet windows):
+
+  register file   -> ``FlowTableState``: one array per switch register
+                     (pkt/byte counts, first/last ts, fwd/rev splits)
+  per-packet ALU  -> ``update_flow_table``: segment-scatter ops folding a
+                     ``PacketWindow`` into the registers, jit/donation
+                     friendly (all-array dataclasses)
+  register readout-> ``flow_table_readout``: derives the same 8 feature
+                     columns as the one-shot ``features.flow_features``
+  recirculation   -> ``iter_windows``: chunks a PacketTrace into
+                     fixed-size packet windows (tile-padded via
+                     ``kernels.ops.pad_window`` so shapes stay static)
+
+Bit-consistency contract (asserted by tests and the stream benchmark):
+streaming over W windows reproduces the batch ``flow_features`` table on
+the concatenated trace *bit for bit*, because
+
+  * count/byte registers are integer-valued f32 sums — exact in any
+    association order while magnitudes stay below 2^24 (≈16.7 MB per
+    bucket; an eviction/aging policy is the ROADMAP follow-on);
+  * first/last-timestamp registers are min/max — associative and exact;
+  * duration / mean-IAT are *derived at readout* through the shared
+    ``features.table_from_registers``, never accumulated.
+
+Timestamps are rebased to the stream epoch ``t0`` (first packet seen) in
+float64 before the f32 cast, matching ``features.rebase_ts``; packets are
+assumed to arrive in time order, so the first packet carries the minimum.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.ops import pad_window
+from repro.netsim.features import (fnv1a_hash, rebase_ts_np,
+                                   table_from_registers)
+
+FLOW_FEATURES = 8      # columns of the readout table == features.flow_features
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class FlowTableState:
+    """Register-file carry: one (n_buckets,) f32 array per switch register.
+
+    t_min/t_max start at the segment_min/max identities (±inf) so an
+    untouched bucket reads out exactly like one the batch path never saw.
+    """
+    pkt_count: jax.Array
+    byte_count: jax.Array
+    t_min: jax.Array
+    t_max: jax.Array
+    fwd_pkts: jax.Array
+    rev_pkts: jax.Array
+    fwd_bytes: jax.Array
+    rev_bytes: jax.Array
+
+    @property
+    def n_buckets(self) -> int:
+        return self.pkt_count.shape[0]
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class PacketWindow:
+    """One fixed-size chunk of the packet stream, ready for the jitted step.
+
+    ts is rebased f32 (see module docstring); is_fwd is 1.0 for forward
+    direction; valid masks tile-pad lanes out of every register update.
+    """
+    bucket: jax.Array    # (W,) int32 flow-hash bucket ids
+    ts: jax.Array        # (W,) f32 rebased seconds
+    length: jax.Array    # (W,) f32 packet bytes
+    is_fwd: jax.Array    # (W,) f32 1.0 = forward
+    valid: jax.Array     # (W,) bool
+
+    @property
+    def size(self) -> int:
+        return self.bucket.shape[0]
+
+
+def init_flow_table(n_buckets: int) -> FlowTableState:
+    # distinct buffers per register: donated steps may not alias arguments
+    z = lambda: jnp.zeros((n_buckets,), jnp.float32)
+    return FlowTableState(
+        pkt_count=z(), byte_count=z(),
+        t_min=jnp.full((n_buckets,), jnp.inf, jnp.float32),
+        t_max=jnp.full((n_buckets,), -jnp.inf, jnp.float32),
+        fwd_pkts=z(), rev_pkts=z(), fwd_bytes=z(), rev_bytes=z())
+
+
+def update_flow_table(state: FlowTableState,
+                      window: PacketWindow) -> FlowTableState:
+    """Fold one window into the register file (pure; jit/donation safe).
+
+    Sums ride masked segment_sum; first/last ts ride segment_min/max with
+    invalid lanes pinned to the identity, then merge into the carry with
+    elementwise min/max — the exact streaming decomposition of the batch
+    segment reductions.
+    """
+    b, n = window.bucket, state.n_buckets
+    w = window.valid.astype(jnp.float32)
+    seg = lambda v: jax.ops.segment_sum(v, b, num_segments=n)
+    inf = jnp.float32(jnp.inf)
+    w_min = jax.ops.segment_min(jnp.where(window.valid, window.ts, inf),
+                                b, num_segments=n)
+    w_max = jax.ops.segment_max(jnp.where(window.valid, window.ts, -inf),
+                                b, num_segments=n)
+    ln, fwd = window.length, window.is_fwd
+    return FlowTableState(
+        pkt_count=state.pkt_count + seg(w),
+        byte_count=state.byte_count + seg(ln * w),
+        t_min=jnp.minimum(state.t_min, w_min),
+        t_max=jnp.maximum(state.t_max, w_max),
+        fwd_pkts=state.fwd_pkts + seg(fwd * w),
+        rev_pkts=state.rev_pkts + seg((1.0 - fwd) * w),
+        fwd_bytes=state.fwd_bytes + seg(ln * fwd * w),
+        rev_bytes=state.rev_bytes + seg(ln * (1.0 - fwd) * w))
+
+
+def flow_table_readout(state: FlowTableState,
+                       bucket: Optional[jax.Array] = None) -> jax.Array:
+    """Feature table from the registers — same columns as flow_features.
+
+    bucket=None reads out every bucket -> (n_buckets, 8). Passing bucket
+    ids gathers the 8 register vectors *first* and derives features on
+    the gathered rows -> (len(bucket), 8): bit-identical (the derivation
+    is elementwise) but ~n_buckets/len(bucket) less work — the serving
+    step uses this to read out only the window's touched flows.
+    """
+    regs = (state.pkt_count, state.byte_count, state.t_min, state.t_max,
+            state.fwd_pkts, state.rev_pkts, state.fwd_bytes,
+            state.rev_bytes)
+    if bucket is not None:
+        regs = tuple(r[bucket] for r in regs)
+    return table_from_registers(*regs)
+
+
+def iter_windows(trace, window: int, n_buckets: int, *,
+                 t0: Optional[float] = None, bucket=None,
+                 pad: bool = True) -> Iterator[PacketWindow]:
+    """Chunk a PacketTrace into fixed-size PacketWindows.
+
+    Hashing is elementwise (order-free), so per-window bucket ids equal
+    the batch path's; pass ``bucket`` to reuse an already-computed full-
+    trace hash. t0 defaults to the first packet's timestamp — the stream
+    epoch a switch would latch; pass the concatenated trace's minimum
+    explicitly if packets are out of order. pad=True tile-pads the final
+    ragged window to ``window`` lanes (valid=False) so every window
+    presents one static shape to jitted consumers.
+    """
+    ts64 = np.asarray(trace.ts, np.float64)
+    if t0 is None:
+        t0 = float(ts64[0]) if ts64.size else 0.0
+    rel = rebase_ts_np(ts64, t0)
+    if bucket is None:
+        bucket = fnv1a_hash(
+            trace.src_ip, trace.dst_ip, trace.sport, trace.dport,
+            trace.proto, n_buckets=n_buckets)
+    bucket = np.asarray(bucket)
+    length = np.asarray(trace.length, np.float32)
+    is_fwd = (np.asarray(trace.direction) == 0).astype(np.float32)
+    for s in range(0, len(rel), window):
+        sl = slice(s, s + window)
+        cols = dict(bucket=jnp.asarray(bucket[sl]), ts=jnp.asarray(rel[sl]),
+                    length=jnp.asarray(length[sl]),
+                    is_fwd=jnp.asarray(is_fwd[sl]))
+        if pad:
+            cols, valid, _ = pad_window(cols, window)
+        else:
+            valid = jnp.ones(cols["bucket"].shape[0], bool)
+        yield PacketWindow(valid=valid, **cols)
+
+
+# module-level so repeated stream_flow_features calls share the jit cache
+_update_flow_table_jit = jax.jit(update_flow_table, donate_argnums=0)
+
+
+def stream_flow_features(trace, n_buckets=4096, window=1024):
+    """One-shot convenience: stream the whole trace window by window.
+
+    Returns (bucket_ids (P,), flow_table (n_buckets, 8)) — bit-consistent
+    with ``features.flow_features`` on the same trace (the equivalence
+    oracle used by tests and benchmarks/stream_bench.py).
+    """
+    b = fnv1a_hash(trace.src_ip, trace.dst_ip, trace.sport, trace.dport,
+                   trace.proto, n_buckets=n_buckets)
+    state = init_flow_table(n_buckets)
+    for w in iter_windows(trace, window, n_buckets, bucket=b):
+        state = _update_flow_table_jit(state, w)
+    return b, flow_table_readout(state)

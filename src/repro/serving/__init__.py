@@ -1,4 +1,6 @@
-"""Serving runtime: cache plumbing, prefill/decode engine, hybrid tier."""
+"""Serving runtime: cache plumbing, prefill/decode engine, hybrid tier
+(batch and streaming)."""
 
 from repro.serving.engine import ServeEngine, greedy_generate
 from repro.serving.hybrid_serving import HybridServer
+from repro.serving.stream_serving import StreamingHybridServer, StreamStats

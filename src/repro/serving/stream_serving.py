@@ -1,0 +1,228 @@
+"""Streaming hybrid serving: the always-on switch, one window at a time.
+
+``StreamingHybridServer`` extends the zero-sync ``HybridServer`` with the
+register-file carry of ``netsim.stream``: each ``step(window)`` is ONE
+jitted, buffer-donating device dispatch that fuses
+
+  register update        (segment-scatter into the donated FlowTableState)
+  feature read-out       (gather the updated table rows for the window's
+                          touched flows — per-packet, as a switch
+                          classifies each arriving packet with its flow's
+                          registers)
+  fused switch classify  (the single-matmul kernel pipeline)
+  capacity-bounded dispatch -> backend -> combine
+  telemetry accumulation (StreamStats carried as donated device arrays)
+
+Nothing in ``step`` touches the host: state and running statistics are
+device arrays donated back in, per-window telemetry returns as a lazy
+``HybridStats``, and predictions stay on device until the caller reads
+them. Donation discipline (also DESIGN.md §5): the register file and the
+stats carry are consumed every step and replaced by the returned pytrees —
+callers must never hold a reference to a previous state.
+
+Backends that cannot trace fall back to the same two-phase shape as
+``HybridServer``: jitted update+switch+dispatch (still donating state),
+host backend call, jitted combine+stats (donating the stats carry).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.artifact import TableArtifact
+from repro.core.hybrid import combine, dispatch
+from repro.kernels.ops import fused_classify
+from repro.kernels.tuning import TileConfig
+from repro.netsim.stream import (FlowTableState, PacketWindow,
+                                 flow_table_readout, init_flow_table,
+                                 iter_windows, update_flow_table)
+from repro.serving.hybrid_serving import HybridServer, HybridStats
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class StreamStats:
+    """Running telemetry over all windows served — scalar device arrays.
+
+    Constructed and updated entirely on device (the carry is donated into
+    every step); reading any python-typed property below is the only point
+    that syncs, mirroring HybridStats' laziness.
+    """
+    windows: jax.Array        # i32: windows served
+    packets: jax.Array        # i32: valid packets seen
+    handled: jax.Array        # i32: answered at the switch tier
+    backend_rows: jax.Array   # i32: rows the backend actually served
+
+    @classmethod
+    def zero(cls) -> "StreamStats":
+        z = lambda: jnp.zeros((), jnp.int32)
+        return cls(windows=z(), packets=z(), handled=z(), backend_rows=z())
+
+    @property
+    def n_windows(self) -> int:
+        return int(self.windows)
+
+    @property
+    def n_packets(self) -> int:
+        return int(self.packets)
+
+    @property
+    def fraction_handled(self) -> float:
+        n = int(self.packets)
+        return float(self.handled) / n if n else 0.0
+
+    @property
+    def total_backend_rows(self) -> int:
+        return int(self.backend_rows)
+
+    def __repr__(self):
+        return (f"StreamStats(windows={self.n_windows}, "
+                f"packets={self.n_packets}, "
+                f"fraction_handled={self.fraction_handled:.3f}, "
+                f"backend_rows={self.total_backend_rows})")
+
+
+class StreamingHybridServer(HybridServer):
+    """HybridServer over a packet stream with per-flow register state.
+
+    window is the static packet chunk size (the compiled step shape);
+    n_buckets sizes the flow register file. The batch ``classify`` of the
+    parent stays available (tests use it as the one-shot oracle).
+    """
+
+    def __init__(self, artifact: TableArtifact, backend_fn: Callable, *,
+                 n_buckets: int = 4096, window: int = 512,
+                 threshold: float = 0.7, capacity: int = 64,
+                 use_pallas: bool = False, autotune: bool = False,
+                 tiles: Optional[TileConfig] = None,
+                 fuse: Optional[bool] = None):
+        super().__init__(artifact, backend_fn, threshold=threshold,
+                         capacity=capacity, use_pallas=use_pallas,
+                         autotune=autotune, tiles=tiles, fuse=fuse)
+        self.n_buckets = n_buckets
+        self.window = window
+        self._state = init_flow_table(n_buckets)
+        self._stats = StreamStats.zero()
+
+        def _switch_half(art, state, w: PacketWindow, threshold):
+            """update registers -> read out touched flows -> classify ->
+            dispatch; shared by the fused and two-phase paths."""
+            state = update_flow_table(state, w)
+            x = flow_table_readout(state, w.bucket)          # (W, 8)
+            sw_pred, conf = fused_classify(art, x, use_pallas=use_pallas,
+                                           tiles=self.tiles)
+            fwd = (conf < threshold) & w.valid
+            buf, idx, valid = dispatch(x, fwd, capacity)
+            return state, x, sw_pred, fwd, buf, idx, valid
+
+        def _epilogue(stats, w, sw_pred, be_pred, idx, valid, fwd):
+            pred = combine(sw_pred, be_pred, idx, valid)
+            pred = jnp.where(w.valid, pred, -1)              # pad lanes
+            n_valid = jnp.sum(w.valid.astype(jnp.int32))
+            n_handled = jnp.sum((w.valid & ~fwd).astype(jnp.int32))
+            rows = jnp.sum(valid.astype(jnp.int32))
+            frac = (n_handled.astype(jnp.float32)
+                    / jnp.maximum(n_valid, 1).astype(jnp.float32))
+            stats = StreamStats(windows=stats.windows + 1,
+                                packets=stats.packets + n_valid,
+                                handled=stats.handled + n_handled,
+                                backend_rows=stats.backend_rows + rows)
+            return stats, pred, frac, rows
+
+        def stream_step(art, state, stats, w: PacketWindow, threshold):
+            state, x, sw_pred, fwd, buf, idx, valid = _switch_half(
+                art, state, w, threshold)
+            be_pred = jnp.asarray(backend_fn(buf))
+            stats, pred, frac, rows = _epilogue(stats, w, sw_pred, be_pred,
+                                                idx, valid, fwd)
+            return state, stats, pred, frac, rows
+
+        self._stream_step = jax.jit(stream_step, donate_argnums=(1, 2))
+
+        def stream_switch(art, state, w: PacketWindow, threshold):
+            state, x, sw_pred, fwd, buf, idx, valid = _switch_half(
+                art, state, w, threshold)
+            return state, sw_pred, fwd, buf, idx, valid
+
+        self._stream_switch = jax.jit(stream_switch, donate_argnums=(1,))
+
+        def stream_epilogue(stats, w, sw_pred, be_pred, idx, valid, fwd):
+            return _epilogue(stats, w, sw_pred, be_pred, idx, valid, fwd)
+
+        self._stream_epilogue = jax.jit(stream_epilogue, donate_argnums=(0,))
+
+    # -- streaming state ----------------------------------------------------
+
+    @property
+    def state(self) -> FlowTableState:
+        """Current register file. Donated into every step: read, don't keep."""
+        return self._state
+
+    @property
+    def stats(self) -> StreamStats:
+        return self._stats
+
+    def flow_table(self) -> jax.Array:
+        """(n_buckets, 8) feature table from the current registers."""
+        return flow_table_readout(self._state)
+
+    def reset(self):
+        """Fresh register file + telemetry (a new stream epoch)."""
+        self._state = init_flow_table(self.n_buckets)
+        self._stats = StreamStats.zero()
+
+    # -- serving ------------------------------------------------------------
+
+    def step(self, w: PacketWindow):
+        """Serve one window. -> (pred (W,), HybridStats for this window).
+
+        Single device dispatch on the fused path; pad lanes report -1.
+        Fully async — nothing here blocks on the device.
+
+        NOT retry-safe: the register file advances (and the old state is
+        donated) before the backend runs, so on the two-phase path a
+        backend exception leaves the window already folded in — calling
+        step(w) again double-counts it. Recover by reset() or by skipping
+        the failed window, never by replaying it.
+        """
+        tau = jnp.float32(self.threshold)
+        if self._fused_ok is None:
+            try:
+                self._state, self._stats, pred, frac, rows = \
+                    self._stream_step(self.artifact, self._state,
+                                      self._stats, w, tau)
+                self._fused_ok = True
+                return pred, HybridStats(frac, rows, self.capacity)
+            except (jax.errors.JAXTypeError, TypeError):
+                # tracing failed before execution: neither the state nor
+                # the stats carry was consumed by the donation
+                self._fused_ok = False
+        if self._fused_ok:
+            self._state, self._stats, pred, frac, rows = self._stream_step(
+                self.artifact, self._state, self._stats, w, tau)
+            return pred, HybridStats(frac, rows, self.capacity)
+        self._state, sw_pred, fwd, buf, idx, valid = self._stream_switch(
+            self.artifact, self._state, w, tau)
+        be_pred = jnp.asarray(self.backend_fn(buf))
+        self._stats, pred, frac, rows = self._stream_epilogue(
+            self._stats, w, sw_pred, be_pred, idx, valid, fwd)
+        return pred, HybridStats(frac, rows, self.capacity)
+
+    def serve_trace(self, trace, *, t0: Optional[float] = None):
+        """Stream a whole PacketTrace through step(). -> (pred (P,), stats).
+
+        Per-packet predictions concatenated in arrival order (pad lanes
+        stripped); the only host sync is the final concatenation.
+        """
+        preds = []
+        for w in iter_windows(trace, self.window, self.n_buckets, t0=t0):
+            pred, _ = self.step(w)
+            preds.append(pred)
+        flat = (np.concatenate([np.asarray(p) for p in preds])
+                [:trace.n_packets] if preds else np.zeros((0,), np.int32))
+        return jnp.asarray(flat), self._stats

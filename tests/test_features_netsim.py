@@ -40,6 +40,34 @@ def test_flow_features_counts_match_ground_truth():
     assert dur >= 0
 
 
+def test_flow_features_epoch_scale_timestamps():
+    """Epoch-offset traces (ts ~ 1.7e9 s) must yield the same durations as
+    trace-relative ones: f32 resolution at epoch scale is ~256 s, so the
+    rebase has to happen in float64 *before* the cast (regression)."""
+    tr = synth_trace(n_flows=150, seed=4)
+    _, base = flow_features(tr, n_buckets=2048)
+    tr.ts = tr.ts + 1.7e9
+    _, offset = flow_features(tr, n_buckets=2048)
+    base, offset = np.asarray(base), np.asarray(offset)
+    # duration / mean-IAT columns survive the epoch offset
+    np.testing.assert_allclose(offset[:, 2], base[:, 2], rtol=0, atol=1e-4)
+    np.testing.assert_allclose(offset[:, 3], base[:, 3], rtol=0, atol=1e-4)
+    assert (base[:, 2] > 0).any() and (offset[:, 2] > 0).any()
+    # count/byte columns are exact regardless
+    np.testing.assert_array_equal(offset[:, [0, 1, 4, 5, 6, 7]],
+                                  base[:, [0, 1, 4, 5, 6, 7]])
+
+
+def test_aggregate_features_epoch_scale_rate():
+    """aggregate_features rates likewise rebase before the f32 cast."""
+    tr = synth_trace(n_flows=150, seed=4)
+    _, base = aggregate_features(tr, key="dport", n_buckets=1024)
+    tr.ts = tr.ts + 1.7e9
+    _, offset = aggregate_features(tr, key="dport", n_buckets=1024)
+    np.testing.assert_allclose(np.asarray(offset)[:, 2],
+                               np.asarray(base)[:, 2], rtol=1e-3, atol=1e-3)
+
+
 def test_aggregate_features_group_sums():
     tr = synth_trace(n_flows=100, seed=2)
     g, agg = aggregate_features(tr, key="dport", n_buckets=1024)
@@ -53,6 +81,29 @@ def test_csv_parse_roundtrip():
     payload = encode_csv_payload(vals, width=8)
     out = file_features_csv(jnp.asarray(payload), [0, 1, 2, 3], width=8)
     np.testing.assert_allclose(np.asarray(out), vals, rtol=2e-3, atol=2e-3)
+
+
+def test_csv_encode_wide_values_roundtrip():
+    """Values wider than the field drop fractional digits instead of being
+    right-truncated to a different number (regression: "12345.678" cut to
+    "12345.67"; correct is "12345.68"). Round-trip through the switch
+    parser stays within the precision of the retained digits."""
+    vals = np.asarray([[12345.678, -9999.995, 1234567.0, 0.125],
+                       [-123456.7, 99999.99, -1.0, 8888.888]], np.float32)
+    payload = encode_csv_payload(vals, width=8)
+    out = np.asarray(file_features_csv(jnp.asarray(payload),
+                                       [0, 1, 2, 3], width=8))
+    np.testing.assert_allclose(out, vals, rtol=1e-3)
+    # the headline case keeps rounded (not truncated) digits
+    field0 = payload[0, :8].tobytes().decode("ascii")
+    assert field0.strip() == "12345.68"
+
+
+def test_csv_encode_overflow_raises():
+    """A value whose integer part alone exceeds the field is an error,
+    never a silently different number."""
+    with np.testing.assert_raises(ValueError):
+        encode_csv_payload(np.asarray([[123456789.0]], np.float32), width=8)
 
 
 def test_split_payload_stitch():

@@ -118,6 +118,25 @@ def test_action_bits_monotone(anomaly_data):
     assert all(errs[i] >= errs[i + 1] for i in range(len(errs) - 1))
 
 
+def test_quantize_symmetric_contract():
+    """|dequantize(q)| <= max|v| for every code — the most-negative code
+    -qmax-1 must never be emitted (deterministic twin of the hypothesis
+    property; runs even without hypothesis installed)."""
+    from repro.core.quantize import dequantize, quantize_fixed
+    rng = np.random.default_rng(3)
+    for bits in (4, 8, 12, 16):
+        qmax = 2 ** (bits - 1) - 1
+        for v in (rng.normal(0, 5, 300).astype(np.float32),
+                  np.asarray([-1.0, 1.0], np.float32),
+                  np.asarray([-7.25], np.float32),
+                  np.linspace(-3, 3, 101, dtype=np.float32)):
+            fp = quantize_fixed(v, bits)
+            assert int(np.asarray(fp.q).min()) >= -qmax
+            max_abs = float(np.abs(v).max())
+            deq = np.abs(np.asarray(dequantize(fp)))
+            assert float(deq.max()) <= max_abs * (1 + 1e-6)
+
+
 def test_decision_table_cap():
     """Unmappable (too-deep/too-wide) ensembles raise, like a switch
     rejecting a model that does not fit (paper §4.2 pruning)."""

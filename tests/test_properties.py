@@ -56,6 +56,23 @@ def test_quantize_bounded_error(vals, bits):
     assert np.all(np.abs(deq - v) <= bound * 1.0001)
 
 
+@given(st.lists(st.floats(-1e4, 1e4, allow_nan=False, width=32,
+                          allow_subnormal=False), min_size=1, max_size=200),
+       st.sampled_from([4, 8, 12, 16]))
+def test_quantize_symmetric_range(vals, bits):
+    """Symmetric fixed point never dequantizes past max|v|: the clip is
+    ±qmax, not [-qmax-1, qmax] (regression — the extra negative code
+    broke the module's symmetric contract)."""
+    v = np.asarray(vals, np.float32)
+    fp = quantize_fixed(v, bits)
+    qmax = 2 ** (bits - 1) - 1
+    assert int(np.asarray(fp.q).min()) >= -qmax
+    assert int(np.asarray(fp.q).max()) <= qmax
+    max_abs = max(float(np.abs(v).max()), 1e-12)
+    assert float(np.abs(np.asarray(dequantize(fp))).max()) \
+        <= max_abs * (1 + 1e-6)
+
+
 @given(st.integers(2, 64), st.integers(1, 8), st.integers(0, 3))
 def test_quantize_integer_sum_exact(n, m, seed):
     """Summing in the integer domain then dequantizing == summing

@@ -1,0 +1,184 @@
+"""Streaming flow-table tier: window-carry equivalence with the batch path.
+
+The contract under test (DESIGN.md §5): streaming a trace over W windows
+reproduces the one-shot ``flow_features`` table bit for bit, and each
+window's hybrid predictions equal the one-shot HybridServer run on the
+same prefix-derived features.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.hybrid import combine, dispatch
+from repro.core.mapping import map_tree_ensemble
+from repro.ml.trees import fit_random_forest, predict_tree_ensemble
+from repro.netsim.features import flow_features
+from repro.netsim.packets import synth_trace
+from repro.netsim.stream import (flow_table_readout, init_flow_table,
+                                 iter_windows, stream_flow_features,
+                                 update_flow_table)
+from repro.serving.hybrid_serving import HybridServer
+from repro.serving.stream_serving import StreamingHybridServer
+
+
+N_BUCKETS = 1 << 12
+
+
+def _trim(trace, n):
+    """First n packets of a trace (flow_label is per-flow: kept whole)."""
+    return dataclasses.replace(trace, **{
+        f.name: getattr(trace, f.name)[:n]
+        for f in dataclasses.fields(trace) if f.name != "flow_label"})
+
+
+@pytest.fixture(scope="module")
+def stream_setup():
+    trace = synth_trace(n_flows=400, seed=3)
+    b, table = flow_features(trace, n_buckets=N_BUCKETS)
+    first_idx = np.unique(np.asarray(trace.flow_id), return_index=True)[1]
+    rows = np.asarray(table)[np.asarray(b)[first_idx]].astype(np.float32)
+    small = fit_random_forest(rows, trace.flow_label, n_classes=2,
+                              n_trees=4, max_depth=3, seed=0)
+    big = fit_random_forest(rows, trace.flow_label, n_classes=2,
+                            n_trees=12, max_depth=5, seed=1)
+    art = map_tree_ensemble(small, rows.shape[1])
+    return trace, art, (lambda r: predict_tree_ensemble(big, r))
+
+
+def test_stream_flow_table_bit_equals_batch():
+    """Windowed update_flow_table over W windows == one-shot flow_features,
+    bitwise, at several window sizes (incl. ragged finals and W > P)."""
+    tr = synth_trace(n_flows=300, seed=5)
+    b, batch_table = flow_features(tr, n_buckets=2048)
+    for w in (64, 257, 1000, tr.n_packets + 5):
+        sb, stream_table = stream_flow_features(tr, n_buckets=2048, window=w)
+        np.testing.assert_array_equal(np.asarray(stream_table),
+                                      np.asarray(batch_table))
+        np.testing.assert_array_equal(np.asarray(sb), np.asarray(b))
+
+
+def test_stream_flow_table_epoch_timestamps():
+    """Bit-consistency survives epoch-scale timestamps (the f32-rebase
+    regression class): both paths rebase in float64 before the cast."""
+    tr = synth_trace(n_flows=200, seed=7)
+    tr.ts = tr.ts + 1.7e9
+    _, batch_table = flow_features(tr, n_buckets=2048)
+    _, stream_table = stream_flow_features(tr, n_buckets=2048, window=300)
+    np.testing.assert_array_equal(np.asarray(stream_table),
+                                  np.asarray(batch_table))
+    dur = np.asarray(batch_table)[:, 2]
+    assert (dur > 0).any()            # durations survived the epoch offset
+
+
+def test_update_flow_table_masks_pad_lanes():
+    """Invalid lanes contribute nothing: a window padded to 4x its length
+    leaves the registers exactly as the unpadded window does."""
+    tr = _trim(synth_trace(n_flows=40, seed=11), 100)
+    (w_pad,) = iter_windows(tr, 400, 512)
+    (w_raw,) = iter_windows(tr, 400, 512, pad=False)
+    assert w_pad.size == 400 and w_raw.size == 100
+    s_pad = update_flow_table(init_flow_table(512), w_pad)
+    s_raw = update_flow_table(init_flow_table(512), w_raw)
+    np.testing.assert_array_equal(np.asarray(flow_table_readout(s_pad)),
+                                  np.asarray(flow_table_readout(s_raw)))
+
+
+def test_streaming_hybrid_matches_oneshot(stream_setup):
+    """End-to-end: each streamed window's predictions + telemetry equal the
+    one-shot HybridServer on batch features of the prefix trace."""
+    trace, art, backend = stream_setup
+    w_size, cap, tau = 256, 32, 0.9
+    p = (trace.n_packets // w_size) * w_size      # full windows only
+    trim = _trim(trace, p)
+    srv = StreamingHybridServer(art, backend, n_buckets=N_BUCKETS,
+                                window=w_size, threshold=tau, capacity=cap)
+    oracle = HybridServer(art, backend, threshold=tau, capacity=cap)
+    t0 = float(trace.ts[0])
+    for k, w in enumerate(iter_windows(trim, w_size, N_BUCKETS, t0=t0)):
+        pred, stats = srv.step(w)
+        prefix = _trim(trace, (k + 1) * w_size)
+        _, tp = flow_features(prefix, n_buckets=N_BUCKETS)
+        x_ref = np.asarray(tp)[np.asarray(w.bucket)]
+        pred_ref, stats_ref = oracle.classify(x_ref)
+        np.testing.assert_array_equal(np.asarray(pred), np.asarray(pred_ref))
+        assert stats.fraction_handled == stats_ref.fraction_handled
+        assert stats.backend_rows == stats_ref.backend_rows
+    assert srv._fused_ok is True                  # single-dispatch path ran
+    np.testing.assert_array_equal(
+        np.asarray(srv.flow_table()),
+        np.asarray(flow_features(trim, n_buckets=N_BUCKETS)[1]))
+
+
+def test_streaming_stats_accumulate_on_device(stream_setup):
+    """StreamStats is carried as device arrays and only syncs on read."""
+    trace, art, backend = stream_setup
+    srv = StreamingHybridServer(art, backend, n_buckets=N_BUCKETS,
+                                window=512, threshold=0.9, capacity=32)
+    preds, stats = srv.serve_trace(trace)
+    assert isinstance(stats.windows, jax.Array)
+    assert isinstance(stats.packets, jax.Array)
+    assert preds.shape == (trace.n_packets,)
+    assert stats.n_packets == trace.n_packets
+    assert stats.n_windows == -(-trace.n_packets // 512)
+    assert 0.0 <= stats.fraction_handled <= 1.0
+    assert stats.total_backend_rows <= stats.n_windows * 32
+
+
+def test_streaming_untraceable_backend_falls_back(stream_setup):
+    """numpy-only backends stream through the two-phase path; telemetry
+    still accumulates and the register carry still bit-matches batch."""
+    trace, art, _ = stream_setup
+
+    def np_backend(rows):
+        return np.zeros(np.asarray(rows).shape[0], np.int32)
+
+    srv = StreamingHybridServer(art, np_backend, n_buckets=N_BUCKETS,
+                                window=512, threshold=2.0, capacity=16)
+    preds, stats = srv.serve_trace(trace)
+    assert srv._fused_ok is False
+    assert preds.shape == (trace.n_packets,)
+    # tau=2.0 forwards everything: every window fills its backend buffer
+    assert stats.total_backend_rows == stats.n_windows * 16
+    np.testing.assert_array_equal(
+        np.asarray(srv.flow_table()),
+        np.asarray(flow_features(trace, n_buckets=N_BUCKETS)[1]))
+
+
+def test_dispatch_combine_under_capacity():
+    """n_forwarded < capacity: every forwarded row gets the backend
+    answer, untouched rows keep the switch answer, and the spare buffer
+    lanes are invalid."""
+    n, cap = 16, 8
+    x = np.arange(n * 2, dtype=np.float32).reshape(n, 2)
+    mask = np.zeros(n, bool)
+    mask[[1, 5, 11]] = True
+    buf, idx, valid = dispatch(jnp.asarray(x), jnp.asarray(mask), cap)
+    assert int(valid.sum()) == 3
+    be = jnp.full((cap,), 9, jnp.int32)
+    out = np.asarray(combine(jnp.zeros(n, jnp.int32), be, idx, valid))
+    np.testing.assert_array_equal(np.nonzero(out == 9)[0], [1, 5, 11])
+    assert (out[~mask] == 0).all()
+
+
+def test_dispatch_combine_over_capacity():
+    """n_forwarded > capacity: exactly the first ``capacity`` forwarded
+    rows (stable order) are served; overflow keeps the switch answer —
+    the paper §7.1.2 congestion trade-off."""
+    n, cap = 16, 4
+    x = np.arange(n * 2, dtype=np.float32).reshape(n, 2)
+    fwd_rows = [0, 2, 3, 7, 9, 10, 14]
+    mask = np.zeros(n, bool)
+    mask[fwd_rows] = True
+    buf, idx, valid = dispatch(jnp.asarray(x), jnp.asarray(mask), cap)
+    assert int(valid.sum()) == cap
+    np.testing.assert_array_equal(np.sort(np.asarray(idx)), fwd_rows[:cap])
+    np.testing.assert_array_equal(np.asarray(buf),
+                                  x[np.asarray(idx)])
+    be = jnp.full((cap,), 9, jnp.int32)
+    out = np.asarray(combine(jnp.zeros(n, jnp.int32), be, idx, valid))
+    np.testing.assert_array_equal(np.nonzero(out == 9)[0], fwd_rows[:cap])
+    assert (out[fwd_rows[cap:]] == 0).all()       # overflow stays switch
