@@ -1,14 +1,16 @@
 """Run every paper-table benchmark: ``python -m benchmarks.run``.
 
-One module per paper table/figure (see DESIGN.md §8). Pass --quick for
+One module per paper table/figure (see DESIGN.md §9). Pass --quick for
 reduced sample sizes (CI), --only <name> for a single benchmark.
 
 Besides the printed tables, the suite writes machine-readable
-``BENCH_benchmarks.json`` (schema "bench-v1", see DESIGN.md §7): one row
+``BENCH_benchmarks.json`` (schema "bench-v1", see DESIGN.md §8): one row
 per benchmark with its wall time and whatever its run() returned, so the
-perf trajectory of the repo is tracked run over run. The kernel
-microbenchmark (``python -m benchmarks.kernel_microbench``) writes
-``BENCH_kernels.json`` in the same schema.
+perf trajectory of the repo is tracked run over run. The other bench-v1
+emitters — ``kernel_microbench`` (BENCH_kernels.json), ``stream_bench``
+(BENCH_stream.json) and ``shard_stream_bench`` (BENCH_shard.json) — are
+separate entry points with their own gating oracles; ``--all-suites``
+runs them here too, so one command refreshes the whole trajectory.
 """
 
 from __future__ import annotations
@@ -38,6 +40,10 @@ def main(argv=None):
     ap.add_argument("--only", default=None)
     ap.add_argument("--out", default="BENCH_benchmarks.json",
                     help="machine-readable results file (bench-v1 schema)")
+    ap.add_argument("--all-suites", action="store_true",
+                    help="also run the kernel, streaming and sharded-"
+                         "streaming benches (BENCH_kernels/stream/shard"
+                         ".json)")
     args = ap.parse_args(argv)
 
     n = 6000 if args.quick else 20000
@@ -70,6 +76,21 @@ def main(argv=None):
         write_bench_json(args.out, "benchmarks", results,
                          config={"n": n, "quick": args.quick,
                                  "only": args.only})
+    if args.all_suites:
+        # fresh subprocesses, not in-process main() calls: jax is already
+        # initialized here, and shard_stream_bench must force its
+        # multi-device host platform *before* the first jax import —
+        # in-process it would silently degrade to a 1-device scaling axis
+        import subprocess
+        extra = ("kernel_microbench", "stream_bench", "shard_stream_bench")
+        for mod_name in extra:
+            print(f"\n{'=' * 70}\nbenchmarks.{mod_name}\n{'=' * 70}",
+                  flush=True)
+            cmd = [sys.executable, "-m", f"benchmarks.{mod_name}"]
+            if args.quick:
+                cmd.append("--quick")
+            if subprocess.run(cmd).returncode:
+                failures.append(mod_name)
     print(f"\ntotal: {time.time() - t_all:.1f}s; "
           f"{len(failures)} failures {failures or ''}")
     sys.exit(1 if failures else 0)

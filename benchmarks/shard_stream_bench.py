@@ -1,0 +1,182 @@
+"""Sharded streaming benchmark: packets/sec vs device count.
+
+``python -m benchmarks.shard_stream_bench`` drives the
+``ShardedStreamingServer`` over a synthetic packet trace on 1/2/4-device
+('shard',) meshes and reports sustained packets/sec for the full
+shard_mapped step (per-shard register update -> owner-masked readout ->
+fused classify -> psum merges -> capacity-bounded backend -> combine ->
+telemetry). Run standalone it forces a 4-device CPU host platform
+(``--xla_force_host_platform_device_count``) unless XLA_FLAGS is already
+set, so the scaling axis exists even on a single-CPU box.
+
+Before any timing, the equivalence oracle runs per device count: the
+sharded flow table must reproduce the batch ``flow_features`` table bit
+for bit AND the sharded predictions must equal the single-device
+``StreamingHybridServer`` on the same trace — a speedup that drifts the
+registers or the answers is not a speedup. A second (non-oracle) entry
+exercises the eviction/aging sweep and records lifecycle telemetry.
+
+Results go to ``BENCH_shard.json`` (schema "bench-v1", DESIGN.md §8).
+
+Caveat on the recorded curve: forced host-platform devices all share one
+physical CPU, so the multi-"device" rows pay the partitioning overhead
+without any extra silicon — speedup_vs_1dev < 1 is expected there. The
+point of the bench is the *axis* (and the oracle gating it); on a real
+multi-chip mesh the same rows measure real scaling.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import time
+
+
+def run(n_flows=4000, window=1024, n_buckets=1 << 13, device_counts=None,
+        threshold=0.9, capacity=64, repeats=3, seed=0, evict_age=2.0,
+        out="BENCH_shard.json"):
+    # imports deferred so main() can force the host device count first
+    import jax
+    import numpy as np
+
+    from benchmarks.common import print_table, write_bench_json
+    from benchmarks.stream_bench import _models
+    from repro.distributed.sharding import flow_shard_mesh
+    from repro.netsim.features import flow_features
+    from repro.netsim.packets import synth_trace
+    from repro.netsim.shard_stream import stream_sharded_flow_features
+    from repro.netsim.stream import iter_windows
+    from repro.serving.shard_serving import ShardedStreamingServer
+    from repro.serving.stream_serving import StreamingHybridServer
+
+    t_suite = time.time()
+    avail = jax.local_device_count()
+    if device_counts is None:
+        device_counts = [d for d in (1, 2, 4, 8) if d <= avail]
+    trace = synth_trace(n_flows=n_flows, seed=seed)
+    _, batch_table = flow_features(trace, n_buckets=n_buckets)
+    art, backend = _models(trace, n_buckets)
+
+    # single-device reference: the bit-consistency oracle's answer key
+    ref = StreamingHybridServer(art, backend, n_buckets=n_buckets,
+                                window=window, threshold=threshold,
+                                capacity=capacity)
+    ref_pred, _ = ref.serve_trace(trace)
+    ref_pred = np.asarray(ref_pred)
+
+    ws = list(iter_windows(trace, window, n_buckets))
+    rows, base_pkts_s = [], None
+    for d in device_counts:
+        mesh = flow_shard_mesh(d)
+        # oracle 1: sharded register carry == batch flow table, bitwise
+        _, sh_table = stream_sharded_flow_features(
+            trace, n_buckets=n_buckets, window=window, mesh=mesh)
+        np.testing.assert_array_equal(np.asarray(sh_table),
+                                      np.asarray(batch_table))
+        srv = ShardedStreamingServer(art, backend, n_buckets=n_buckets,
+                                     window=window, threshold=threshold,
+                                     capacity=capacity, mesh=mesh)
+        # oracle 2 (+ warm pass: compile + fuse probe): sharded serving
+        # == single-device serving, bitwise
+        sh_pred, _ = srv.serve_trace(trace)
+        np.testing.assert_array_equal(np.asarray(sh_pred), ref_pred)
+
+        best = float("inf")
+        for _ in range(repeats):
+            srv.reset()
+            t0 = time.perf_counter()
+            for w in ws:
+                pred, _ = srv.step(w)
+            jax.block_until_ready(pred)        # single end-of-stream sync
+            best = min(best, time.perf_counter() - t0)
+        stats = srv.stats
+        pkts_s = trace.n_packets / best
+        if base_pkts_s is None:
+            base_pkts_s = pkts_s
+        rows.append({
+            "devices": d,
+            "window": window,
+            "n_packets": trace.n_packets,
+            "n_buckets": n_buckets,
+            "wall_s": round(best, 4),
+            "pkts_per_s": round(pkts_s, 1),
+            "speedup_vs_1dev": round(pkts_s / base_pkts_s, 3),
+            "fraction_handled": round(stats.fraction_handled, 4),
+            "backend_rows": stats.total_backend_rows,
+            "bit_consistent": True,
+        })
+
+    print_table("Sharded streaming — packets/sec vs device count",
+                ["devices", "pkts", "wall_s", "pkts/s", "speedup",
+                 "frac_handled", "backend_rows"],
+                [[r["devices"], r["n_packets"], r["wall_s"],
+                  r["pkts_per_s"], r["speedup_vs_1dev"],
+                  r["fraction_handled"], r["backend_rows"]] for r in rows])
+
+    # lifecycle entry: aging sweep on, telemetry recorded (not oracle-
+    # gated against batch — eviction intentionally diverges the table)
+    d = device_counts[-1]
+    srv = ShardedStreamingServer(art, backend, n_buckets=n_buckets,
+                                 window=window, threshold=threshold,
+                                 capacity=capacity,
+                                 mesh=flow_shard_mesh(d),
+                                 evict_age=evict_age)
+    t0 = time.perf_counter()
+    _, stats = srv.serve_trace(trace)
+    stats_wall = time.perf_counter() - t0
+    evict_rows = [{
+        "devices": d, "evict_age_s": evict_age,
+        "n_packets": trace.n_packets, "wall_s": round(stats_wall, 4),
+        "evicted": stats.n_evicted, "overflow": stats.n_overflow,
+        "fraction_handled": round(stats.fraction_handled, 4),
+    }]
+    print_table("Sharded streaming — eviction/aging sweep",
+                ["devices", "evict_age_s", "evicted", "overflow",
+                 "frac_handled"],
+                [[r["devices"], r["evict_age_s"], r["evicted"],
+                  r["overflow"], r["fraction_handled"]]
+                 for r in evict_rows])
+
+    benches = [
+        {"name": "shard_stream", "paper_ref": "§5 challenge (ii) / pForest",
+         "ok": True, "rows": rows,
+         "wall_s": round(time.time() - t_suite, 3)},
+        {"name": "shard_eviction", "paper_ref": "pForest window aging",
+         "ok": True, "rows": evict_rows, "wall_s": round(stats_wall, 3)},
+    ]
+    if out:
+        write_bench_json(out, "shard", benches,
+                         config={"n_flows": n_flows, "window": window,
+                                 "n_buckets": n_buckets,
+                                 "device_counts": list(device_counts),
+                                 "threshold": threshold,
+                                 "capacity": capacity, "repeats": repeats,
+                                 "evict_age": evict_age})
+    return rows + evict_rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--devices", type=int, default=4,
+                    help="host-platform device count to force when jax is "
+                         "not yet configured (ignored if XLA_FLAGS is set)")
+    ap.add_argument("--out", default="BENCH_shard.json")
+    args = ap.parse_args(argv)
+    # must happen before the first jax import in this process
+    if "jax" not in __import__("sys").modules and \
+            "--xla_force_host_platform_device_count" not in \
+            os.environ.get("XLA_FLAGS", ""):
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "")
+            + f" --xla_force_host_platform_device_count={args.devices}"
+        ).strip()
+    if args.quick:
+        run(n_flows=1200, window=512, n_buckets=1 << 12, repeats=2,
+            out=args.out)
+    else:
+        run(out=args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -6,4 +6,6 @@ from repro.distributed.sharding import (
     cache_specs,
     opt_state_specs,
     named_sharding_tree,
+    flow_shard_mesh,
+    flow_table_sharding,
 )

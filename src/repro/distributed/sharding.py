@@ -172,6 +172,36 @@ def named_sharding_tree(mesh: Mesh, spec_tree):
         is_leaf=lambda x: isinstance(x, P))
 
 
+# ---------------------------------------------------------------------------
+# flow-table shard mesh (streaming tier)
+# ---------------------------------------------------------------------------
+
+def flow_shard_mesh(n_shards: Optional[int] = None) -> Mesh:
+    """1D ('shard',) mesh for the sharded flow-table tier.
+
+    Defaults to every local device — on a CPU host-platform run that is
+    whatever ``--xla_force_host_platform_device_count`` provided. The
+    flow-table axis is deliberately separate from the ('data','model')
+    training axes: bucket shards are storage partitions, not batch or
+    tensor parallelism.
+    """
+    n = n_shards or jax.local_device_count()
+    return jax.make_mesh((n,), ("shard",))
+
+
+def flow_table_sharding(mesh: Mesh, state_tree):
+    """NamedSharding tree placing a sharded flow-table pytree on ``mesh``.
+
+    Every leaf shards its leading (n_shards) dim over 'shard' and
+    replicates the rest — registers are (n_shards, n_local), the epoch
+    register is (n_shards,); both derive from ndim, so the rule survives
+    new registers being added to the state.
+    """
+    spec = jax.tree.map(
+        lambda a: P("shard", *([None] * (a.ndim - 1))), state_tree)
+    return named_sharding_tree(mesh, spec)
+
+
 def shard_hint(x, *spec):
     """Best-effort with_sharding_constraint: a no-op when traced outside a
     mesh context (single-device tests), a GSPMD hint inside one (dry-run /

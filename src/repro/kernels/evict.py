@@ -1,0 +1,58 @@
+"""Pallas TPU kernel: masked register reset (the eviction sweep's scatter).
+
+The aging sweep recycles idle flow buckets by writing each register's
+init identity back over the evicted slots — on the switch this is the
+control plane's register clear, here it is a masked scatter over the
+whole register file. The registers are stacked to one (R, N) tile so the
+sweep is a single VPU pass: one mask row broadcast against R register
+rows, one fill scalar per register.
+
+Tiling: the bucket axis is blocked into (R, TILE_B) VMEM tiles; the mask
+rides as a (1, TILE_B) row and the fills as an (R, 1) column, both
+broadcast inside the tile. R (the register count) is small and static —
+the whole register file height fits one tile.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.tuning import resolve_interpret
+
+TILE_B = 1024
+
+
+def _evict_fill_kernel(mask_ref, regs_ref, fills_ref, out_ref):
+    m = mask_ref[...]                                  # (1, TILE_B) int32
+    r = regs_ref[...]                                  # (R, TILE_B)
+    f = fills_ref[...]                                 # (R, 1)
+    out_ref[...] = jnp.where(m != 0, f, r)
+
+
+def evict_fill_pallas(regs: jax.Array, mask: jax.Array, fills: jax.Array,
+                      *, interpret=None, tile_b=None) -> jax.Array:
+    """regs (R, N) f32, mask (N,) int32 (1 = evict), fills (R,) f32
+    -> (R, N) with evicted columns reset to their fill identities.
+
+    N must be a multiple of tile_b (ops.py pads with mask=0, so pad
+    columns pass through untouched). interpret=None auto-detects the
+    backend (compiled on TPU, interpreter elsewhere).
+    """
+    interpret = resolve_interpret(interpret)
+    tile_b = tile_b or TILE_B
+    r, n = regs.shape
+    assert n % tile_b == 0, (n, tile_b)
+    return pl.pallas_call(
+        _evict_fill_kernel,
+        grid=(n // tile_b,),
+        in_specs=[
+            pl.BlockSpec((1, tile_b), lambda i: (0, i)),
+            pl.BlockSpec((r, tile_b), lambda i: (0, i)),
+            pl.BlockSpec((r, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((r, tile_b), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((r, n), jnp.float32),
+        interpret=interpret,
+    )(mask[None, :].astype(jnp.int32), regs, fills[:, None])

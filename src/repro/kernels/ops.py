@@ -29,6 +29,7 @@ from repro.core.artifact import (TableArtifact, build_dtable_flat,
                                  round_up_to_lane)
 from repro.kernels import bucketize as _bk
 from repro.kernels import ensemble_lookup as _ek
+from repro.kernels import evict as _ev
 from repro.kernels import classical_lookup as _ck
 from repro.kernels import ref as _ref
 from repro.kernels.tuning import DEFAULT_TILES, TileConfig
@@ -76,6 +77,32 @@ def pad_window(cols, tile: int):
             lambda a: _pad_batch(jnp.asarray(a), tile)[0], cols)
     valid = jnp.arange(n + pad) < n
     return cols, valid, n
+
+
+def evict_fill(regs, mask, fills, *, use_pallas=None, interpret=None):
+    """Masked register reset: the eviction sweep's scatter.
+
+    regs (R, N) f32 stacked register file, mask (N,) bool (True = evict),
+    fills (R,) per-register reset identities -> (R, N). Evicted columns
+    take their fill value, surviving columns pass through bit for bit.
+    Pallas on TPU (``kernels.evict``), jnp.where elsewhere — the XLA form
+    is what runs inside the shard_mapped streaming step on CPU meshes.
+    """
+    regs = jnp.asarray(regs, jnp.float32)
+    fills = jnp.asarray(fills, jnp.float32)
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if not use_pallas:
+        return jnp.where(mask[None, :], fills[:, None], regs)
+    r, n = regs.shape
+    tile = min(_ev.TILE_B, n) if n % _ev.TILE_B else _ev.TILE_B
+    pad = (-n) % tile
+    if pad:
+        regs = jnp.pad(regs, ((0, 0), (0, pad)))
+        mask = jnp.pad(mask, (0, pad))       # pad columns: never evicted
+    out = _ev.evict_fill_pallas(regs, mask, fills, interpret=interpret,
+                                tile_b=tile)
+    return out[:, :n]
 
 
 def bucketize(x, edges, *, use_pallas=None):

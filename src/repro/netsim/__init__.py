@@ -30,4 +30,13 @@ from repro.netsim.stream import (
     flow_table_readout,
     iter_windows,
     stream_flow_features,
+    age_out,
+    saturate_counts,
+    lifecycle_sweep,
+)
+from repro.netsim.shard_stream import (
+    ShardedFlowTable,
+    init_sharded_table,
+    sharded_flow_table,
+    stream_sharded_flow_features,
 )

@@ -27,9 +27,22 @@ the concatenated trace *bit for bit*, because
   * duration / mean-IAT are *derived at readout* through the shared
     ``features.table_from_registers``, never accumulated.
 
-Timestamps are rebased to the stream epoch ``t0`` (first packet seen) in
-float64 before the f32 cast, matching ``features.rebase_ts``; packets are
-assumed to arrive in time order, so the first packet carries the minimum.
+Timestamps are rebased to the stream epoch ``t0`` in float64 before the
+f32 cast, matching ``features.rebase_ts``. ``t0`` defaults to the trace's
+*minimum* timestamp (the batch path's epoch), not the first packet seen —
+a reordered first window would otherwise silently shift every rebased
+value by the f32 rounding of a different base. Callers serving an
+open-ended stream (who cannot pre-scan for the minimum) pass an explicit
+provisional ``t0``; the sharded tier additionally carries the true epoch
+as a min-merged register (``shard_stream``) so a mis-latched base is
+corrected at readout.
+
+Flow lifecycle (pForest-style aging) lives in the same register file:
+``age_out`` resets buckets idle since before a cutoff back to the init
+identities (via the masked-scatter ``kernels.ops.evict_fill``), and
+``saturate_counts`` clamps count/byte registers at the 2^24 f32
+integer-exactness envelope, returning a telemetry count so envelope
+violations are visible instead of silently inexact.
 """
 
 from __future__ import annotations
@@ -41,11 +54,23 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels.ops import pad_window
+from repro.kernels.ops import evict_fill, pad_window
 from repro.netsim.features import (fnv1a_hash, rebase_ts_np,
                                    table_from_registers)
 
 FLOW_FEATURES = 8      # columns of the readout table == features.flow_features
+
+# f32 integer-exactness envelope: count/byte registers are integer-valued
+# f32 sums, exact only below 2^24. saturate_counts clamps here.
+OVERFLOW_LIMIT = float(1 << 24)
+
+# per-register init/evict identities, in FlowTableState field order
+REGISTER_FIELDS = ("pkt_count", "byte_count", "t_min", "t_max",
+                   "fwd_pkts", "rev_pkts", "fwd_bytes", "rev_bytes")
+EVICT_FILLS = (0.0, 0.0, float("inf"), float("-inf"), 0.0, 0.0, 0.0, 0.0)
+# registers under the 2^24 envelope (monotone f32 integer accumulators)
+COUNT_FIELDS = ("pkt_count", "byte_count", "fwd_pkts", "rev_pkts",
+                "fwd_bytes", "rev_bytes")
 
 
 @jax.tree_util.register_dataclass
@@ -128,6 +153,78 @@ def update_flow_table(state: FlowTableState,
         rev_bytes=state.rev_bytes + seg(ln * (1.0 - fwd) * w))
 
 
+def age_out(state: FlowTableState, evict_before,
+            *, use_pallas=None) -> tuple:
+    """LRU/timeout eviction sweep: recycle buckets idle too long.
+
+    A bucket whose last-seen timestamp (t_max) predates ``evict_before``
+    is reset to the init identities — bit-identical to a bucket the
+    stream never touched, so an evicted-then-reborn flow reads out
+    exactly like a fresh one (``table_from_registers`` cannot tell them
+    apart; tests assert this). Surviving buckets pass through untouched
+    bit for bit. Returns (state, n_evicted i32).
+
+    The reset rides ``kernels.ops.evict_fill`` — a masked scatter over
+    the stacked register file (Pallas on TPU, jnp.where elsewhere) — so
+    the sweep folds into the same jitted step as the window update.
+    """
+    evict = (state.pkt_count > 0) & (state.t_max
+                                     < jnp.float32(evict_before))
+    regs = jnp.stack([getattr(state, f) for f in REGISTER_FIELDS])
+    fills = jnp.asarray(EVICT_FILLS, jnp.float32)
+    out = evict_fill(regs, evict, fills, use_pallas=use_pallas)
+    new = FlowTableState(**{f: out[i]
+                            for i, f in enumerate(REGISTER_FIELDS)})
+    return new, jnp.sum(evict.astype(jnp.int32))
+
+
+def saturate_counts(state: FlowTableState,
+                    *, limit: float = OVERFLOW_LIMIT) -> tuple:
+    """Overflow guard for the f32 integer-exactness envelope.
+
+    Count/byte registers are integer-valued f32 accumulators — exact
+    below 2^24, silently lossy above. Clamping at the limit is a bitwise
+    no-op for every in-envelope register, so the guard can stay on in
+    serving paths without perturbing the streaming-vs-batch equality;
+    the returned i32 counts register slots at the limit (cumulative in
+    ``StreamStats.overflow``) so a saturated stream is *visible*
+    telemetry instead of a silent wrong count. Returns (state, n_at_limit).
+    """
+    lim = jnp.float32(limit)
+    n_over = jnp.zeros((), jnp.int32)
+    upd = {}
+    for f in COUNT_FIELDS:
+        r = getattr(state, f)
+        n_over = n_over + jnp.sum((r >= lim).astype(jnp.int32))
+        upd[f] = jnp.minimum(r, lim)
+    return dataclasses.replace(state, **upd), n_over
+
+
+def lifecycle_sweep(state: FlowTableState, w: "PacketWindow",
+                    evict_age: Optional[float], saturate: bool) -> tuple:
+    """Aging sweep + overflow guard for one served window.
+
+    The single definition shared by the single-device and sharded serving
+    steps — the sharded-vs-single-device bit-identity contract depends on
+    the cutoff semantics never diverging between them. The eviction
+    cutoff is ``min(now - evict_age, window_min_ts)``: strictly no later
+    than every timestamp in this window, so a flow seen in this window
+    always survives it by construction, even when the window's time span
+    exceeds ``evict_age``. Returns (state, n_evicted, n_overflow) — both
+    counters zero when the corresponding feature is off.
+    """
+    n_ev = jnp.zeros((), jnp.int32)
+    n_ov = jnp.zeros((), jnp.int32)
+    if evict_age is not None:
+        now = jnp.max(jnp.where(w.valid, w.ts, -jnp.inf))
+        w_min = jnp.min(jnp.where(w.valid, w.ts, jnp.inf))
+        cutoff = jnp.minimum(now - jnp.float32(evict_age), w_min)
+        state, n_ev = age_out(state, cutoff)
+    if saturate:
+        state, n_ov = saturate_counts(state)
+    return state, n_ev, n_ov
+
+
 def flow_table_readout(state: FlowTableState,
                        bucket: Optional[jax.Array] = None) -> jax.Array:
     """Feature table from the registers — same columns as flow_features.
@@ -153,15 +250,19 @@ def iter_windows(trace, window: int, n_buckets: int, *,
 
     Hashing is elementwise (order-free), so per-window bucket ids equal
     the batch path's; pass ``bucket`` to reuse an already-computed full-
-    trace hash. t0 defaults to the first packet's timestamp — the stream
-    epoch a switch would latch; pass the concatenated trace's minimum
-    explicitly if packets are out of order. pad=True tile-pads the final
-    ragged window to ``window`` lanes (valid=False) so every window
-    presents one static shape to jitted consumers.
+    trace hash. t0 is the stream epoch every window rebases against; it
+    defaults to the trace's *minimum* timestamp — the batch path's epoch,
+    so reordered packets rebase identically to ``flow_features`` (latching
+    the first packet instead shifted every f32 rounding when the stream
+    opened out of order). Callers that cannot pre-scan an open-ended
+    stream pass an explicit provisional t0; the sharded tier min-merges
+    the true epoch as a register and corrects at readout. pad=True
+    tile-pads the final ragged window to ``window`` lanes (valid=False)
+    so every window presents one static shape to jitted consumers.
     """
     ts64 = np.asarray(trace.ts, np.float64)
     if t0 is None:
-        t0 = float(ts64[0]) if ts64.size else 0.0
+        t0 = float(ts64.min()) if ts64.size else 0.0
     rel = rebase_ts_np(ts64, t0)
     if bucket is None:
         bucket = fnv1a_hash(
@@ -186,16 +287,19 @@ def iter_windows(trace, window: int, n_buckets: int, *,
 _update_flow_table_jit = jax.jit(update_flow_table, donate_argnums=0)
 
 
-def stream_flow_features(trace, n_buckets=4096, window=1024):
+def stream_flow_features(trace, n_buckets=4096, window=1024, *,
+                         t0: Optional[float] = None):
     """One-shot convenience: stream the whole trace window by window.
 
     Returns (bucket_ids (P,), flow_table (n_buckets, 8)) — bit-consistent
     with ``features.flow_features`` on the same trace (the equivalence
-    oracle used by tests and benchmarks/stream_bench.py).
+    oracle used by tests and benchmarks/stream_bench.py). t0 overrides
+    the stream epoch (default: trace minimum, matching the batch path
+    even when packets arrive out of order).
     """
     b = fnv1a_hash(trace.src_ip, trace.dst_ip, trace.sport, trace.dport,
                    trace.proto, n_buckets=n_buckets)
     state = init_flow_table(n_buckets)
-    for w in iter_windows(trace, window, n_buckets, bucket=b):
+    for w in iter_windows(trace, window, n_buckets, bucket=b, t0=t0):
         state = _update_flow_table_jit(state, w)
     return b, flow_table_readout(state)

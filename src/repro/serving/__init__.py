@@ -4,3 +4,4 @@
 from repro.serving.engine import ServeEngine, greedy_generate
 from repro.serving.hybrid_serving import HybridServer
 from repro.serving.stream_serving import StreamingHybridServer, StreamStats
+from repro.serving.shard_serving import ShardedStreamingServer

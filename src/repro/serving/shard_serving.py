@@ -1,0 +1,157 @@
+"""Sharded streaming hybrid serving: the flow table scaled out over a mesh.
+
+``ShardedStreamingServer`` is the ``StreamingHybridServer`` with its
+register file partitioned across a 1D ('shard',) device mesh
+(``netsim.shard_stream``): each ``step(window)`` is still ONE jitted,
+state-donating dispatch, but the register update runs under ``shard_map``
+— every shard folds only the buckets it owns (bucket % n_shards), so the
+table capacity and the scatter bandwidth scale with the mesh while the
+step keeps the parent's exact shape:
+
+  shard_map:  per-shard register update (+ aging sweep + overflow guard)
+              -> owner-masked touched-flow readout -> fused classify
+              -> psum-merge predictions / confidences
+              -> capacity-bounded dispatch -> psum-merge backend buffer
+  jit level:  backend -> combine -> StreamStats accumulation (the same
+              ``accumulate_stream_stats`` the single-device tier uses)
+
+Cross-device traffic is only the small merges: per-window (W,) prediction
+and confidence vectors, the (capacity, F) backend buffer, and the i32
+telemetry counters — never the register file itself (per-bucket
+independence is what makes the flow table shardable at all).
+
+Contract (tests + benchmarks/shard_stream_bench.py): with eviction
+disabled, the sharded server is bit-identical to the single-device
+``StreamingHybridServer`` on in-order traces — same predictions, same
+telemetry, same ``flow_table()`` readout — at every mesh size. Non-owner
+psum contributions are exact zeros, so the merges add nothing but the
+owner's value.
+
+Out-of-order arrivals (including a reordered first window) are tolerated
+because every register is an associative reduction and every feature an
+epoch-invariant difference; the min-merged ``epoch`` register replaces
+the host-side latch as the record of the stream's true time origin
+(``.epoch`` telemetry). The same donation discipline as the parent
+applies — state and stats carries are consumed every step.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core.artifact import TableArtifact
+from repro.core.hybrid import dispatch
+from repro.distributed.sharding import flow_shard_mesh
+from repro.kernels.ops import fused_classify
+from repro.kernels.tuning import TileConfig
+from repro.netsim.shard_stream import (ShardedFlowTable, init_sharded_table,
+                                       n_local_buckets, shard_window_update,
+                                       sharded_flow_table, stream_epoch)
+from repro.netsim.stream import PacketWindow
+from repro.serving.stream_serving import (StreamingHybridServer,
+                                          accumulate_stream_stats)
+
+
+class ShardedStreamingServer(StreamingHybridServer):
+    """StreamingHybridServer over a bucket-sharded register file.
+
+    mesh (or n_shards) picks the 1D 'shard' mesh — default every local
+    device. n_buckets is the *global* table size and must divide evenly
+    over the shards. All parent knobs (threshold, capacity, evict_age,
+    saturate, tiles, fuse) keep their meaning; ``step``/``serve_trace``/
+    ``reset`` are inherited — only the jitted closures and the state
+    layout differ.
+    """
+
+    def __init__(self, artifact: TableArtifact, backend_fn: Callable, *,
+                 n_buckets: int = 4096, window: int = 512,
+                 threshold: float = 0.7, capacity: int = 64,
+                 evict_age: Optional[float] = None, saturate: bool = True,
+                 mesh: Optional[Mesh] = None, n_shards: Optional[int] = None,
+                 use_pallas: bool = False, autotune: bool = False,
+                 tiles: Optional[TileConfig] = None,
+                 fuse: Optional[bool] = None):
+        # mesh before super().__init__: the parent allocates the register
+        # file through the _make_state hook, which needs it
+        self.mesh = mesh if mesh is not None else flow_shard_mesh(n_shards)
+        n_sh = self.n_shards = self.mesh.shape["shard"]
+        n_local_buckets(n_buckets, n_sh)          # validate divisibility
+        super().__init__(artifact, backend_fn, n_buckets=n_buckets,
+                         window=window, threshold=threshold,
+                         capacity=capacity, evict_age=evict_age,
+                         saturate=saturate, use_pallas=use_pallas,
+                         autotune=autotune, tiles=tiles, fuse=fuse)
+
+        def _shard_body(regs, epoch, art, w: PacketWindow, threshold):
+            """Per-shard half of the step (runs under shard_map; regs
+            leaves arrive as this shard's (1, n_local) block)."""
+            sq = jax.tree.map(lambda a: a[0], regs)
+            d = jax.lax.axis_index("shard")
+            sq, e, own, x, n_ev, n_ov = shard_window_update(
+                sq, w, n_sh, d, evict_age=evict_age, saturate=saturate)
+            sw_pred, conf = fused_classify(art, x, use_pallas=use_pallas,
+                                           tiles=self.tiles)
+            # exact merges: exactly one shard contributes a nonzero lane
+            sw_pred = jax.lax.psum(jnp.where(own, sw_pred, 0), "shard")
+            conf = jax.lax.psum(jnp.where(own, conf, 0.0), "shard")
+            fwd = (conf < threshold) & w.valid
+            buf, idx, valid = dispatch(x, fwd, capacity)
+            buf = jax.lax.psum(buf, "shard")
+            counts = (jax.lax.psum(n_ev, "shard"),
+                      jax.lax.psum(n_ov, "shard"))
+            return (jax.tree.map(lambda a: a[None], sq),
+                    jnp.minimum(epoch, e),
+                    sw_pred, fwd, buf, idx, valid, counts)
+
+        shard_half = shard_map(
+            _shard_body, mesh=self.mesh,
+            in_specs=(P("shard", None), P("shard"), P(), P(), P()),
+            out_specs=(P("shard", None), P("shard"),
+                       P(), P(), P(), P(), P(), P()))
+
+        def _switch_half(art, state: ShardedFlowTable, w, threshold):
+            (regs, epoch, sw_pred, fwd, buf, idx, valid,
+             counts) = shard_half(state.regs, state.epoch, art, w,
+                                  threshold)
+            return (ShardedFlowTable(regs=regs, epoch=epoch),
+                    sw_pred, fwd, buf, idx, valid, counts)
+
+        def stream_step(art, state, stats, w: PacketWindow, threshold):
+            state, sw_pred, fwd, buf, idx, valid, counts = _switch_half(
+                art, state, w, threshold)
+            be_pred = jnp.asarray(backend_fn(buf))
+            stats, pred, frac, rows = accumulate_stream_stats(
+                stats, w, sw_pred, be_pred, idx, valid, fwd, *counts)
+            return state, stats, pred, frac, rows
+
+        self._stream_step = jax.jit(stream_step, donate_argnums=(1, 2))
+
+        def stream_switch(art, state, w: PacketWindow, threshold):
+            return _switch_half(art, state, w, threshold)
+
+        self._stream_switch = jax.jit(stream_switch, donate_argnums=(1,))
+        # the epilogue (accumulate_stream_stats) is inherited as-is
+
+    # -- streaming state ----------------------------------------------------
+
+    def _make_state(self) -> ShardedFlowTable:
+        """Mesh-placed sharded register file (parent init/reset hook)."""
+        return init_sharded_table(self.n_buckets, mesh=self.mesh)
+
+    def flow_table(self) -> jax.Array:
+        """(n_buckets, 8) canonical-bucket-order table, gathered across
+        shards (a telemetry/test readout, not a hot path). Timestamps in
+        the underlying registers stay in the provisional rebased frame —
+        combine with ``.epoch`` for wall-clock flow times."""
+        return sharded_flow_table(self._state)
+
+    @property
+    def epoch(self) -> float:
+        """True observed stream start (min-merged register), in the
+        provisional rebased frame; 0.0 for an in-order stream."""
+        return float(stream_epoch(self._state))

@@ -40,7 +40,8 @@ from repro.kernels.ops import fused_classify
 from repro.kernels.tuning import TileConfig
 from repro.netsim.stream import (FlowTableState, PacketWindow,
                                  flow_table_readout, init_flow_table,
-                                 iter_windows, update_flow_table)
+                                 iter_windows, lifecycle_sweep,
+                                 update_flow_table)
 from repro.serving.hybrid_serving import HybridServer, HybridStats
 
 
@@ -57,11 +58,14 @@ class StreamStats:
     packets: jax.Array        # i32: valid packets seen
     handled: jax.Array        # i32: answered at the switch tier
     backend_rows: jax.Array   # i32: rows the backend actually served
+    evicted: jax.Array        # i32: buckets recycled by the aging sweep
+    overflow: jax.Array       # i32: register slots clamped at 2^24
 
     @classmethod
     def zero(cls) -> "StreamStats":
         z = lambda: jnp.zeros((), jnp.int32)
-        return cls(windows=z(), packets=z(), handled=z(), backend_rows=z())
+        return cls(windows=z(), packets=z(), handled=z(), backend_rows=z(),
+                   evicted=z(), overflow=z())
 
     @property
     def n_windows(self) -> int:
@@ -80,11 +84,47 @@ class StreamStats:
     def total_backend_rows(self) -> int:
         return int(self.backend_rows)
 
+    @property
+    def n_evicted(self) -> int:
+        """Buckets recycled by the aging sweep (0 when eviction is off)."""
+        return int(self.evicted)
+
+    @property
+    def n_overflow(self) -> int:
+        """Register slots that hit the 2^24 exactness envelope; nonzero
+        means count features saturated and the stream needs eviction (or
+        more buckets) — the guard makes that visible, not silent."""
+        return int(self.overflow)
+
     def __repr__(self):
         return (f"StreamStats(windows={self.n_windows}, "
                 f"packets={self.n_packets}, "
                 f"fraction_handled={self.fraction_handled:.3f}, "
-                f"backend_rows={self.total_backend_rows})")
+                f"backend_rows={self.total_backend_rows}, "
+                f"evicted={self.n_evicted}, overflow={self.n_overflow})")
+
+
+def accumulate_stream_stats(stats: StreamStats, w: PacketWindow, sw_pred,
+                            be_pred, idx, valid, fwd, n_evicted, n_overflow):
+    """Shared jit-traceable epilogue: combine backend answers, mask pad
+    lanes, fold this window into the running StreamStats. Used by both the
+    single-device and the sharded step (the sharded one passes psummed
+    inputs — already replicated, so the fold is identical per device).
+    Returns (stats, pred, frac_handled, backend_rows)."""
+    pred = combine(sw_pred, be_pred, idx, valid)
+    pred = jnp.where(w.valid, pred, -1)                  # pad lanes
+    n_valid = jnp.sum(w.valid.astype(jnp.int32))
+    n_handled = jnp.sum((w.valid & ~fwd).astype(jnp.int32))
+    rows = jnp.sum(valid.astype(jnp.int32))
+    frac = (n_handled.astype(jnp.float32)
+            / jnp.maximum(n_valid, 1).astype(jnp.float32))
+    stats = StreamStats(windows=stats.windows + 1,
+                        packets=stats.packets + n_valid,
+                        handled=stats.handled + n_handled,
+                        backend_rows=stats.backend_rows + rows,
+                        evicted=stats.evicted + n_evicted,
+                        overflow=stats.overflow + n_overflow)
+    return stats, pred, frac, rows
 
 
 class StreamingHybridServer(HybridServer):
@@ -98,65 +138,72 @@ class StreamingHybridServer(HybridServer):
     def __init__(self, artifact: TableArtifact, backend_fn: Callable, *,
                  n_buckets: int = 4096, window: int = 512,
                  threshold: float = 0.7, capacity: int = 64,
+                 evict_age: Optional[float] = None, saturate: bool = True,
                  use_pallas: bool = False, autotune: bool = False,
                  tiles: Optional[TileConfig] = None,
                  fuse: Optional[bool] = None):
+        """evict_age: recycle a flow bucket once it has been idle for this
+        many (rebased) seconds — the aging sweep runs inside every step
+        (``netsim.stream.lifecycle_sweep``) with its cutoff clamped to the
+        window's oldest timestamp, so a flow seen in this window survives
+        it by construction even when the window spans more than
+        evict_age. None disables eviction (bit-exact contract with the
+        batch path). saturate keeps the 2^24 overflow
+        guard on; clamping is a bitwise no-op below the envelope, so it
+        only changes behavior for streams that were already silently
+        inexact — now counted in StreamStats.overflow instead.
+        """
         super().__init__(artifact, backend_fn, threshold=threshold,
                          capacity=capacity, use_pallas=use_pallas,
                          autotune=autotune, tiles=tiles, fuse=fuse)
         self.n_buckets = n_buckets
         self.window = window
-        self._state = init_flow_table(n_buckets)
+        self.evict_age = evict_age
+        self.saturate = saturate
+        self._state = self._make_state()
         self._stats = StreamStats.zero()
 
         def _switch_half(art, state, w: PacketWindow, threshold):
-            """update registers -> read out touched flows -> classify ->
-            dispatch; shared by the fused and two-phase paths."""
+            """update registers -> aging sweep -> overflow guard -> read
+            out touched flows -> classify -> dispatch; shared by the fused
+            and two-phase paths."""
             state = update_flow_table(state, w)
+            state, n_ev, n_ov = lifecycle_sweep(state, w, evict_age,
+                                                saturate)
             x = flow_table_readout(state, w.bucket)          # (W, 8)
             sw_pred, conf = fused_classify(art, x, use_pallas=use_pallas,
                                            tiles=self.tiles)
             fwd = (conf < threshold) & w.valid
             buf, idx, valid = dispatch(x, fwd, capacity)
-            return state, x, sw_pred, fwd, buf, idx, valid
-
-        def _epilogue(stats, w, sw_pred, be_pred, idx, valid, fwd):
-            pred = combine(sw_pred, be_pred, idx, valid)
-            pred = jnp.where(w.valid, pred, -1)              # pad lanes
-            n_valid = jnp.sum(w.valid.astype(jnp.int32))
-            n_handled = jnp.sum((w.valid & ~fwd).astype(jnp.int32))
-            rows = jnp.sum(valid.astype(jnp.int32))
-            frac = (n_handled.astype(jnp.float32)
-                    / jnp.maximum(n_valid, 1).astype(jnp.float32))
-            stats = StreamStats(windows=stats.windows + 1,
-                                packets=stats.packets + n_valid,
-                                handled=stats.handled + n_handled,
-                                backend_rows=stats.backend_rows + rows)
-            return stats, pred, frac, rows
+            return state, x, sw_pred, fwd, buf, idx, valid, (n_ev, n_ov)
 
         def stream_step(art, state, stats, w: PacketWindow, threshold):
-            state, x, sw_pred, fwd, buf, idx, valid = _switch_half(
+            state, x, sw_pred, fwd, buf, idx, valid, counts = _switch_half(
                 art, state, w, threshold)
             be_pred = jnp.asarray(backend_fn(buf))
-            stats, pred, frac, rows = _epilogue(stats, w, sw_pred, be_pred,
-                                                idx, valid, fwd)
+            stats, pred, frac, rows = accumulate_stream_stats(
+                stats, w, sw_pred, be_pred, idx, valid, fwd, *counts)
             return state, stats, pred, frac, rows
 
         self._stream_step = jax.jit(stream_step, donate_argnums=(1, 2))
 
         def stream_switch(art, state, w: PacketWindow, threshold):
-            state, x, sw_pred, fwd, buf, idx, valid = _switch_half(
+            state, x, sw_pred, fwd, buf, idx, valid, counts = _switch_half(
                 art, state, w, threshold)
-            return state, sw_pred, fwd, buf, idx, valid
+            return state, sw_pred, fwd, buf, idx, valid, counts
 
         self._stream_switch = jax.jit(stream_switch, donate_argnums=(1,))
 
-        def stream_epilogue(stats, w, sw_pred, be_pred, idx, valid, fwd):
-            return _epilogue(stats, w, sw_pred, be_pred, idx, valid, fwd)
-
-        self._stream_epilogue = jax.jit(stream_epilogue, donate_argnums=(0,))
+        self._stream_epilogue = jax.jit(accumulate_stream_stats,
+                                        donate_argnums=(0,))
 
     # -- streaming state ----------------------------------------------------
+
+    def _make_state(self):
+        """Fresh register file — the state-layout hook subclasses override
+        (the sharded tier allocates its mesh-placed table here instead of
+        a dead single-device one)."""
+        return init_flow_table(self.n_buckets)
 
     @property
     def state(self) -> FlowTableState:
@@ -173,7 +220,7 @@ class StreamingHybridServer(HybridServer):
 
     def reset(self):
         """Fresh register file + telemetry (a new stream epoch)."""
-        self._state = init_flow_table(self.n_buckets)
+        self._state = self._make_state()
         self._stats = StreamStats.zero()
 
     # -- serving ------------------------------------------------------------
@@ -206,11 +253,11 @@ class StreamingHybridServer(HybridServer):
             self._state, self._stats, pred, frac, rows = self._stream_step(
                 self.artifact, self._state, self._stats, w, tau)
             return pred, HybridStats(frac, rows, self.capacity)
-        self._state, sw_pred, fwd, buf, idx, valid = self._stream_switch(
-            self.artifact, self._state, w, tau)
+        (self._state, sw_pred, fwd, buf, idx, valid,
+         counts) = self._stream_switch(self.artifact, self._state, w, tau)
         be_pred = jnp.asarray(self.backend_fn(buf))
         self._stats, pred, frac, rows = self._stream_epilogue(
-            self._stats, w, sw_pred, be_pred, idx, valid, fwd)
+            self._stats, w, sw_pred, be_pred, idx, valid, fwd, *counts)
         return pred, HybridStats(frac, rows, self.capacity)
 
     def serve_trace(self, trace, *, t0: Optional[float] = None):

@@ -1,0 +1,309 @@
+"""Sharded flow-table subsystem: multi-device streaming contracts.
+
+The contracts under test (DESIGN.md §6):
+
+* sharded streaming (shard_map over the 'shard' mesh) is bit-identical
+  to the batch flow table AND to the single-device StreamingHybridServer
+  on in-order traces with eviction disabled, at every mesh size;
+* the aging sweep recycles idle buckets to the init identities — an
+  evicted-then-reborn flow is indistinguishable from a fresh one — and
+  is a bitwise no-op on surviving buckets;
+* the 2^24 overflow guard saturates count registers and counts the hits;
+* the stream epoch is a min-merged register, so an out-of-order start
+  (reordered first window) is tolerated without a host-side min latch.
+
+Runs on whatever devices exist: mesh sizes are the divisors of
+``jax.device_count()`` capped at 4 — a plain single-device session
+exercises the D=1 shard_map path; the CI multi-device step
+(XLA_FLAGS=--xla_force_host_platform_device_count=4) exercises 1/2/4.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.mapping import map_tree_ensemble
+from repro.ml.trees import fit_random_forest, predict_tree_ensemble
+from repro.netsim.features import flow_features
+from repro.netsim.packets import synth_trace
+from repro.netsim.shard_stream import (init_sharded_table,
+                                       stream_sharded_flow_features)
+from repro.netsim.stream import (OVERFLOW_LIMIT, PacketWindow, age_out,
+                                 flow_table_readout, init_flow_table,
+                                 iter_windows, saturate_counts,
+                                 update_flow_table)
+from repro.serving.shard_serving import ShardedStreamingServer
+from repro.serving.stream_serving import StreamingHybridServer
+
+N_BUCKETS = 1 << 11
+
+DEVICE_COUNTS = [d for d in (1, 2, 4) if jax.device_count() % d == 0
+                 and d <= jax.device_count()]
+
+
+def _reorder_head(trace, n, seed=0):
+    """Permute the first n packets in place-order (a reordered opening)."""
+    perm = np.arange(trace.n_packets)
+    perm[:n] = np.random.default_rng(seed).permutation(n)
+    return dataclasses.replace(trace, **{
+        f.name: getattr(trace, f.name)[perm]
+        for f in dataclasses.fields(trace) if f.name != "flow_label"})
+
+
+@pytest.fixture(scope="module")
+def shard_setup():
+    trace = synth_trace(n_flows=300, seed=3)
+    b, table = flow_features(trace, n_buckets=N_BUCKETS)
+    first_idx = np.unique(np.asarray(trace.flow_id), return_index=True)[1]
+    rows = np.asarray(table)[np.asarray(b)[first_idx]].astype(np.float32)
+    small = fit_random_forest(rows, trace.flow_label, n_classes=2,
+                              n_trees=4, max_depth=3, seed=0)
+    big = fit_random_forest(rows, trace.flow_label, n_classes=2,
+                            n_trees=12, max_depth=5, seed=1)
+    art = map_tree_ensemble(small, rows.shape[1])
+    return trace, art, (lambda r: predict_tree_ensemble(big, r))
+
+
+# ---------------------------------------------------------------------------
+# sharded register carry
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n_shards", DEVICE_COUNTS)
+def test_sharded_table_bit_equals_batch(n_shards):
+    """shard_map'd window updates over every mesh size reproduce the
+    one-shot flow_features table bit for bit (incl. ragged final window)."""
+    tr = synth_trace(n_flows=250, seed=5)
+    _, batch_table = flow_features(tr, n_buckets=N_BUCKETS)
+    _, sh_table = stream_sharded_flow_features(
+        tr, n_buckets=N_BUCKETS, window=257, n_shards=n_shards)
+    np.testing.assert_array_equal(np.asarray(sh_table),
+                                  np.asarray(batch_table))
+
+
+def test_sharded_table_rejects_indivisible_buckets():
+    with pytest.raises(ValueError):
+        init_sharded_table(N_BUCKETS + 1, n_shards=2)
+
+
+# ---------------------------------------------------------------------------
+# sharded serving
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n_shards", DEVICE_COUNTS)
+def test_sharded_serving_bit_identical_to_single_device(shard_setup,
+                                                        n_shards):
+    """The acceptance contract: same predictions, same telemetry, same
+    flow-table readout as StreamingHybridServer, eviction disabled."""
+    trace, art, backend = shard_setup
+    kw = dict(n_buckets=N_BUCKETS, window=256, threshold=0.9, capacity=32)
+    ref = StreamingHybridServer(art, backend, **kw)
+    p_ref, s_ref = ref.serve_trace(trace)
+    srv = ShardedStreamingServer(art, backend, n_shards=n_shards, **kw)
+    p, s = srv.serve_trace(trace)
+    assert srv._fused_ok is True                  # single-dispatch path ran
+    np.testing.assert_array_equal(np.asarray(p), np.asarray(p_ref))
+    assert s.n_packets == s_ref.n_packets
+    assert s.fraction_handled == s_ref.fraction_handled
+    assert s.total_backend_rows == s_ref.total_backend_rows
+    assert s.n_evicted == 0 and s.n_overflow == 0
+    np.testing.assert_array_equal(np.asarray(srv.flow_table()),
+                                  np.asarray(ref.flow_table()))
+    assert srv.epoch == 0.0                       # in-order stream
+
+
+def test_sharded_serving_untraceable_backend_falls_back(shard_setup):
+    trace, art, _ = shard_setup
+
+    def np_backend(rows):
+        return np.zeros(np.asarray(rows).shape[0], np.int32)
+
+    srv = ShardedStreamingServer(art, np_backend, n_buckets=N_BUCKETS,
+                                 window=256, threshold=2.0, capacity=16,
+                                 n_shards=DEVICE_COUNTS[-1])
+    preds, stats = srv.serve_trace(trace)
+    assert srv._fused_ok is False
+    assert preds.shape == (trace.n_packets,)
+    # tau=2.0 forwards everything: every window fills its backend buffer
+    assert stats.total_backend_rows == stats.n_windows * 16
+    np.testing.assert_array_equal(
+        np.asarray(srv.flow_table()),
+        np.asarray(flow_features(trace, n_buckets=N_BUCKETS)[1]))
+
+
+# ---------------------------------------------------------------------------
+# eviction / aging
+# ---------------------------------------------------------------------------
+
+def _one_flow_state(ts_list, n_buckets=64, bucket=7, length=100.0):
+    """Fold packets of a single flow (given rebased ts) into a fresh table."""
+    state = init_flow_table(n_buckets)
+    n = len(ts_list)
+    win = PacketWindow(
+        bucket=jnp.full((n,), bucket, jnp.int32),
+        ts=jnp.asarray(ts_list, jnp.float32),
+        length=jnp.full((n,), length, jnp.float32),
+        is_fwd=jnp.ones((n,), jnp.float32),
+        valid=jnp.ones((n,), bool))
+    return update_flow_table(state, win)
+
+
+def test_evicted_then_reborn_flow_matches_fresh():
+    """Eviction resets a bucket to the init identities: a flow reborn in
+    an evicted bucket reads out bit-for-bit like a fresh flow."""
+    old = _one_flow_state([0.5, 1.0, 1.5])
+    evicted, n_ev = age_out(old, 10.0)            # cutoff after last-seen
+    assert int(n_ev) == 1
+    reborn = _one_flow_state([20.0, 21.0])        # same bucket, new life
+    win = PacketWindow(bucket=jnp.full((2,), 7, jnp.int32),
+                       ts=jnp.asarray([20.0, 21.0], jnp.float32),
+                       length=jnp.full((2,), 100.0, jnp.float32),
+                       is_fwd=jnp.ones((2,), jnp.float32),
+                       valid=jnp.ones((2,), bool))
+    reborn_after_evict = update_flow_table(evicted, win)
+    np.testing.assert_array_equal(
+        np.asarray(flow_table_readout(reborn_after_evict)),
+        np.asarray(flow_table_readout(reborn)))
+
+
+def test_aging_sweep_noop_on_survivors():
+    """A sweep on an idle table leaves surviving buckets bit-unchanged
+    and resets only the stale ones."""
+    tr = synth_trace(n_flows=100, seed=11)
+    state = init_flow_table(512)
+    for w in iter_windows(tr, 4096, 512):
+        state = update_flow_table(state, w)
+    cutoff = 0.0                                  # before every packet
+    swept, n_ev = age_out(state, cutoff)
+    assert int(n_ev) == 0                         # nothing predates t=0
+    np.testing.assert_array_equal(np.asarray(flow_table_readout(swept)),
+                                  np.asarray(flow_table_readout(state)))
+    # now a cutoff that splits: early flows evicted, late flows untouched
+    mid = float(np.median(np.asarray(state.t_max)[
+        np.asarray(state.pkt_count) > 0]))
+    swept, n_ev = age_out(state, mid)
+    survivors = np.asarray((state.pkt_count > 0) & (state.t_max >= mid))
+    assert 0 < int(n_ev) < int(np.sum(np.asarray(state.pkt_count) > 0))
+    for f in ("pkt_count", "byte_count", "t_min", "t_max"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(swept, f))[survivors],
+            np.asarray(getattr(state, f))[survivors])
+    evicted_rows = np.asarray(flow_table_readout(swept))[
+        np.asarray((state.pkt_count > 0) & (state.t_max < mid))]
+    np.testing.assert_array_equal(evicted_rows,
+                                  np.zeros_like(evicted_rows))
+
+
+def test_lifecycle_sweep_cutoff_clamped_to_window_min():
+    """A window whose time span exceeds evict_age must not evict flows
+    seen in (or alive at the start of) that window: the cutoff clamps to
+    the window's oldest timestamp, so only buckets idle since *before*
+    this window can be recycled."""
+    from repro.netsim.stream import lifecycle_sweep
+    state = _one_flow_state([0.2])                # last seen at t=0.2
+    # window spans [0.1, 10.0]: now - evict_age = 9.5 would evict t=0.2,
+    # but the clamp to window-min 0.1 keeps it alive
+    win = PacketWindow(bucket=jnp.full((2,), 9, jnp.int32),
+                       ts=jnp.asarray([0.1, 10.0], jnp.float32),
+                       length=jnp.full((2,), 10.0, jnp.float32),
+                       is_fwd=jnp.ones((2,), jnp.float32),
+                       valid=jnp.ones((2,), bool))
+    state = update_flow_table(state, win)
+    swept, n_ev, _ = lifecycle_sweep(state, win, 0.5, True)
+    assert int(n_ev) == 0
+    np.testing.assert_array_equal(np.asarray(flow_table_readout(swept)),
+                                  np.asarray(flow_table_readout(state)))
+    # a bucket idle since before the window IS evicted by the same sweep
+    stale = _one_flow_state([0.05])               # predates window-min
+    stale = update_flow_table(stale, win)
+    _, n_ev, _ = lifecycle_sweep(stale, win, 0.01, True)
+    assert int(n_ev) == 1
+
+
+def test_sharded_eviction_recycles_buckets(shard_setup):
+    """End-to-end: an aggressive evict_age recycles buckets and reports
+    them in StreamStats; serving still completes."""
+    trace, art, backend = shard_setup
+    srv = ShardedStreamingServer(art, backend, n_buckets=N_BUCKETS,
+                                 window=256, threshold=0.9, capacity=32,
+                                 n_shards=DEVICE_COUNTS[-1], evict_age=0.5)
+    preds, stats = srv.serve_trace(trace)
+    assert preds.shape == (trace.n_packets,)
+    assert stats.n_evicted > 0
+
+
+# ---------------------------------------------------------------------------
+# overflow guard
+# ---------------------------------------------------------------------------
+
+def test_overflow_guard_saturates_and_counts():
+    state = init_flow_table(32)
+    near = OVERFLOW_LIMIT - 2.0
+    state = dataclasses.replace(
+        state,
+        pkt_count=state.pkt_count.at[3].set(near),
+        byte_count=state.byte_count.at[3].set(OVERFLOW_LIMIT + 512.0))
+    out, n_over = saturate_counts(state)
+    assert int(n_over) == 1                       # only byte_count tripped
+    assert float(out.byte_count[3]) == OVERFLOW_LIMIT
+    assert float(out.pkt_count[3]) == near        # below the limit: exact
+    # idempotent on an already-clamped table, and now counted
+    out2, n_over2 = saturate_counts(out)
+    assert int(n_over2) == 1
+    np.testing.assert_array_equal(np.asarray(out2.byte_count),
+                                  np.asarray(out.byte_count))
+
+
+def test_overflow_guard_bitwise_noop_in_envelope():
+    """The serving default (saturate=True) must not perturb in-envelope
+    streams: clamping below 2^24 is the identity."""
+    tr = synth_trace(n_flows=150, seed=7)
+    state = init_flow_table(1024)
+    for w in iter_windows(tr, 2048, 1024):
+        state = update_flow_table(state, w)
+    out, n_over = saturate_counts(state)
+    assert int(n_over) == 0
+    for f in ("pkt_count", "byte_count", "fwd_pkts", "rev_pkts",
+              "fwd_bytes", "rev_bytes"):
+        np.testing.assert_array_equal(np.asarray(getattr(out, f)),
+                                      np.asarray(getattr(state, f)))
+
+
+# ---------------------------------------------------------------------------
+# out-of-order tolerance: epoch as a min-merged register
+# ---------------------------------------------------------------------------
+
+def test_out_of_order_start_tolerated_under_provisional_t0():
+    """A stream whose true start arrives late, rebased against the first
+    packet (the provisional latch) instead of the min: registers are
+    associative reductions and features epoch-invariant differences, so
+    the sharded readout still bit-matches the batch table. Timestamps are
+    2^-10-grained so both rebases are exact in f32 and the contract is
+    bitwise, not approximate."""
+    tr = synth_trace(n_flows=200, seed=13)
+    tr.ts = np.round(tr.ts * 1024.0) / 1024.0     # f32-exact grid
+    tr = _reorder_head(tr, min(300, tr.n_packets), seed=1)
+    assert float(tr.ts[0]) > float(tr.ts.min())   # true min arrives late
+    _, batch_table = flow_features(tr, n_buckets=1024)
+    t0_prov = float(tr.ts[0])                     # what a switch latches
+    _, sh_table = stream_sharded_flow_features(
+        tr, n_buckets=1024, window=128,
+        n_shards=DEVICE_COUNTS[-1], t0=t0_prov)
+    np.testing.assert_array_equal(np.asarray(sh_table),
+                                  np.asarray(batch_table))
+
+
+def test_sharded_server_epoch_min_merges(shard_setup):
+    """Server-level: the epoch register converges to the true observed
+    minimum even when the provisional t0 missed it."""
+    trace, art, backend = shard_setup
+    tr = _reorder_head(trace, 300, seed=2)
+    t0_prov = float(tr.ts[0])
+    srv = ShardedStreamingServer(art, backend, n_buckets=N_BUCKETS,
+                                 window=256, threshold=0.9, capacity=32,
+                                 n_shards=DEVICE_COUNTS[-1])
+    srv.serve_trace(tr, t0=t0_prov)
+    expect = np.float32(np.float64(tr.ts.min()) - t0_prov)
+    assert srv.epoch == pytest.approx(float(expect), abs=0.0)

@@ -74,6 +74,30 @@ def test_stream_flow_table_epoch_timestamps():
     assert (dur > 0).any()            # durations survived the epoch offset
 
 
+def test_stream_reordered_first_window_bit_equals_batch():
+    """Regression (t0 latching): iter_windows defaults the stream epoch to
+    the trace *minimum*, not the first packet — so a reordered opening
+    window (true start arriving late) rebases identically to the batch
+    path and the bit-equality contract holds. Latching ts[0] shifted every
+    f32 rounding by a different base and silently broke it."""
+    tr = synth_trace(n_flows=200, seed=13)
+    perm = np.arange(tr.n_packets)
+    perm[:250] = np.random.default_rng(1).permutation(250)
+    tr = dataclasses.replace(tr, **{
+        f.name: getattr(tr, f.name)[perm]
+        for f in dataclasses.fields(tr) if f.name != "flow_label"})
+    assert float(tr.ts[0]) > float(tr.ts.min())   # epoch arrives late
+    _, batch_table = flow_features(tr, n_buckets=2048)
+    _, stream_table = stream_flow_features(tr, n_buckets=2048, window=128)
+    np.testing.assert_array_equal(np.asarray(stream_table),
+                                  np.asarray(batch_table))
+    # explicit t0 override still honored
+    _, t0_table = stream_flow_features(tr, n_buckets=2048, window=128,
+                                       t0=float(tr.ts.min()))
+    np.testing.assert_array_equal(np.asarray(t0_table),
+                                  np.asarray(batch_table))
+
+
 def test_update_flow_table_masks_pad_lanes():
     """Invalid lanes contribute nothing: a window padded to 4x its length
     leaves the registers exactly as the unpadded window does."""
