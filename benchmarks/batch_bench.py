@@ -1,0 +1,125 @@
+"""Cross-window backend batching benchmark: flush_every vs throughput.
+
+``python -m benchmarks.batch_bench`` drives the StreamingHybridServer
+over a synthetic packet trace at several ``flush_every`` settings and
+reports sustained packets/sec plus the backend-invocation count. The
+deferral buffer trades per-row latency (deferred rows wait up to
+``flush_every`` windows for their backend answer) for throughput (the
+backend runs once per flush at ``flush_every``-times the occupancy) —
+the hybrid-deployment knob DESIGN.md §7 documents.
+
+Before any timing, two oracles gate the rows:
+
+* final predictions at every ``flush_every`` must equal the
+  ``flush_every=1`` baseline bit for bit (the backend is row-wise, so
+  cross-window batching must not change a single answer), and the flow
+  table / backend-row / deferred accounting must match;
+* at ``flush_every >= 4`` the backend-invocation count must drop by at
+  least 2x versus the per-window baseline — the acceptance bar for the
+  subsystem (a "batching" path that still invokes per window is a bug).
+
+Results go to ``BENCH_batch.json`` (schema "bench-v1", DESIGN.md §9).
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import print_table, write_bench_json
+from benchmarks.stream_bench import _models
+from repro.netsim.packets import synth_trace
+from repro.netsim.stream import iter_windows
+from repro.serving.stream_serving import StreamingHybridServer
+
+
+def run(n_flows=4000, flush_every=(1, 2, 4, 8), window=512,
+        n_buckets=1 << 13, threshold=0.9, capacity=64, repeats=3, seed=0,
+        out="BENCH_batch.json"):
+    t_suite = time.time()
+    trace = synth_trace(n_flows=n_flows, seed=seed)
+    art, backend = _models(trace, n_buckets)
+    ws = list(iter_windows(trace, window, n_buckets))
+
+    def serve(k):
+        srv = StreamingHybridServer(art, backend, n_buckets=n_buckets,
+                                    window=window, threshold=threshold,
+                                    capacity=capacity, flush_every=k)
+        pred, stats = srv.serve_trace(trace)
+        return srv, np.asarray(pred), stats
+
+    _, p_base, s_base = serve(1)
+    rows = []
+    for k in flush_every:
+        srv, p, s = serve(k)
+        # oracle 1: deferred dispatch must not change a single prediction
+        np.testing.assert_array_equal(p, p_base)
+        assert s.total_backend_rows == s_base.total_backend_rows
+        assert s.n_deferred == s_base.n_deferred
+        assert s.n_flushes == -(-s.n_windows // k)
+        # oracle 2 (acceptance): >= 2x fewer backend invocations at k >= 4
+        if k >= 4:
+            assert 2 * s.n_flushes <= s_base.n_flushes, (
+                f"flush_every={k}: {s.n_flushes} backend invocations vs "
+                f"baseline {s_base.n_flushes} — expected >= 2x reduction")
+
+        # timed passes: step every window, end-of-stream flush, one sync
+        best = float("inf")
+        for _ in range(repeats):
+            srv.reset()
+            t0 = time.perf_counter()
+            for w in ws:
+                pred, _ = srv.step(w)
+                srv.consume_flush()
+            srv.flush()
+            jax.block_until_ready(srv.stats.windows)
+            best = min(best, time.perf_counter() - t0)
+        rows.append({
+            "flush_every": k,
+            "n_packets": trace.n_packets,
+            "n_windows": len(ws),
+            "wall_s": round(best, 4),
+            "pkts_per_s": round(trace.n_packets / best, 1),
+            "backend_invocations": s.n_flushes,
+            "backend_rows": s.total_backend_rows,
+            "deferred": s.n_deferred,
+            "bit_consistent": True,
+        })
+
+    print_table("Cross-window backend batching — pkts/sec vs flush_every",
+                ["flush_every", "pkts", "windows", "wall_s", "pkts/s",
+                 "backend_invocations", "backend_rows", "deferred"],
+                [[r["flush_every"], r["n_packets"], r["n_windows"],
+                  r["wall_s"], r["pkts_per_s"], r["backend_invocations"],
+                  r["backend_rows"], r["deferred"]] for r in rows])
+
+    benches = [{"name": "batch_serving",
+                "paper_ref": "§2.2.1 hybrid / backend load reduction",
+                "ok": True, "rows": rows,
+                "wall_s": round(time.time() - t_suite, 3)}]
+    if out:
+        write_bench_json(out, "batch", benches,
+                         config={"n_flows": n_flows,
+                                 "flush_every": list(flush_every),
+                                 "window": window, "n_buckets": n_buckets,
+                                 "threshold": threshold,
+                                 "capacity": capacity, "repeats": repeats})
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--out", default="BENCH_batch.json")
+    args = ap.parse_args(argv)
+    if args.quick:
+        run(n_flows=1200, flush_every=(1, 2, 4), repeats=2, out=args.out)
+    else:
+        run(out=args.out)
+
+
+if __name__ == "__main__":
+    main()

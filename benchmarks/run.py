@@ -1,16 +1,19 @@
 """Run every paper-table benchmark: ``python -m benchmarks.run``.
 
-One module per paper table/figure (see DESIGN.md §9). Pass --quick for
+One module per paper table/figure (see DESIGN.md §10). Pass --quick for
 reduced sample sizes (CI), --only <name> for a single benchmark.
 
 Besides the printed tables, the suite writes machine-readable
-``BENCH_benchmarks.json`` (schema "bench-v1", see DESIGN.md §8): one row
+``BENCH_benchmarks.json`` (schema "bench-v1", see DESIGN.md §9): one row
 per benchmark with its wall time and whatever its run() returned, so the
 perf trajectory of the repo is tracked run over run. The other bench-v1
 emitters — ``kernel_microbench`` (BENCH_kernels.json), ``stream_bench``
-(BENCH_stream.json) and ``shard_stream_bench`` (BENCH_shard.json) — are
-separate entry points with their own gating oracles; ``--all-suites``
-runs them here too, so one command refreshes the whole trajectory.
+(BENCH_stream.json), ``shard_stream_bench`` (BENCH_shard.json) and
+``batch_bench`` (BENCH_batch.json) — are separate entry points with
+their own gating oracles; ``--all-suites`` runs them here too, so one
+command refreshes the whole trajectory. A failing sub-suite fails the
+whole run immediately (its exit code is propagated), so a broken oracle
+can never leave CI green.
 """
 
 from __future__ import annotations
@@ -33,6 +36,35 @@ BENCHES = [
     ("update_time", "§7.9"),
 ]
 
+# the standalone bench-v1 emitters --all-suites chains after the in-process
+# benches; each must force its own environment (e.g. shard_stream_bench's
+# multi-device host platform) before its first jax import, hence subprocesses
+EXTRA_SUITES = ("kernel_microbench", "stream_bench", "shard_stream_bench",
+                "batch_bench")
+
+
+def run_suites(suite_modules, quick=False):
+    """Run each standalone emitter as ``python -m benchmarks.<mod>``.
+
+    Exits the process with the child's return code on the FIRST failure —
+    the exit codes of these subprocesses used to be swallowed into an
+    end-of-run summary only, so an oracle failure in one suite could
+    leave a caller that only checked "did it finish" green. Fail fast
+    and propagate instead.
+    """
+    import subprocess
+    for mod_name in suite_modules:
+        print(f"\n{'=' * 70}\nbenchmarks.{mod_name}\n{'=' * 70}",
+              flush=True)
+        cmd = [sys.executable, "-m", f"benchmarks.{mod_name}"]
+        if quick:
+            cmd.append("--quick")
+        rc = subprocess.run(cmd).returncode
+        if rc:
+            print(f"benchmarks.{mod_name} FAILED (exit {rc})",
+                  file=sys.stderr, flush=True)
+            sys.exit(rc)
+
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
@@ -41,9 +73,10 @@ def main(argv=None):
     ap.add_argument("--out", default="BENCH_benchmarks.json",
                     help="machine-readable results file (bench-v1 schema)")
     ap.add_argument("--all-suites", action="store_true",
-                    help="also run the kernel, streaming and sharded-"
-                         "streaming benches (BENCH_kernels/stream/shard"
-                         ".json)")
+                    help="also run the kernel, streaming, sharded-"
+                         "streaming and cross-window-batching benches "
+                         "(BENCH_kernels/stream/shard/batch.json); fails "
+                         "fast on the first failing suite")
     args = ap.parse_args(argv)
 
     n = 6000 if args.quick else 20000
@@ -76,24 +109,21 @@ def main(argv=None):
         write_bench_json(args.out, "benchmarks", results,
                          config={"n": n, "quick": args.quick,
                                  "only": args.only})
+    if failures:
+        # fail before launching sub-suites: a broken in-process bench
+        # should not be buried under another suite's output
+        print(f"\ntotal: {time.time() - t_all:.1f}s; "
+              f"{len(failures)} failures {failures}")
+        sys.exit(1)
     if args.all_suites:
         # fresh subprocesses, not in-process main() calls: jax is already
         # initialized here, and shard_stream_bench must force its
         # multi-device host platform *before* the first jax import —
-        # in-process it would silently degrade to a 1-device scaling axis
-        import subprocess
-        extra = ("kernel_microbench", "stream_bench", "shard_stream_bench")
-        for mod_name in extra:
-            print(f"\n{'=' * 70}\nbenchmarks.{mod_name}\n{'=' * 70}",
-                  flush=True)
-            cmd = [sys.executable, "-m", f"benchmarks.{mod_name}"]
-            if args.quick:
-                cmd.append("--quick")
-            if subprocess.run(cmd).returncode:
-                failures.append(mod_name)
-    print(f"\ntotal: {time.time() - t_all:.1f}s; "
-          f"{len(failures)} failures {failures or ''}")
-    sys.exit(1 if failures else 0)
+        # in-process it would silently degrade to a 1-device scaling axis.
+        # run_suites exits nonzero on the first failing child.
+        run_suites(EXTRA_SUITES, quick=args.quick)
+    print(f"\ntotal: {time.time() - t_all:.1f}s; 0 failures")
+    sys.exit(0)
 
 
 if __name__ == "__main__":

@@ -13,7 +13,7 @@ Before any timing, the equivalence oracle runs: streaming the trace over
 W windows must reproduce the batch ``flow_features`` table bit for bit
 (a speedup from drifted registers is not a speedup).
 
-Results go to ``BENCH_stream.json`` (schema "bench-v1", DESIGN.md §8).
+Results go to ``BENCH_stream.json`` (schema "bench-v1", DESIGN.md §9).
 """
 
 from __future__ import annotations

@@ -1,0 +1,107 @@
+"""bench-v1 schema validation for the BENCH_*.json perf trajectory.
+
+``python -m benchmarks.validate_schema [paths...]`` checks every
+``BENCH_*.json`` (all of them in the CWD when no paths are given)
+against the bench-v1 contract of DESIGN.md §9 and exits nonzero on the
+first structural violation — CI runs it after the emitters and before
+the artifact upload, so a malformed emitter fails the workflow instead
+of silently corrupting the diffable time series.
+
+The check is structural (a *malformed* file, not a *failed* bench, is
+the target — each suite already exits nonzero on its own failures):
+top-level keys and types, the exact schema tag, and per-bench
+name/paper_ref/ok/wall_s/rows shapes.
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import sys
+
+SCHEMA = "bench-v1"
+
+# key -> allowed types, shared by every emitter (run / kernel_microbench /
+# stream_bench / shard_stream_bench / batch_bench)
+TOP_KEYS = {
+    "schema": str,
+    "suite": str,
+    "generated_unix": (int, float),
+    "backend": str,
+    "config": dict,
+    "benches": list,
+}
+BENCH_KEYS = {
+    "name": str,
+    "paper_ref": str,
+    "ok": bool,
+    "wall_s": (int, float),
+    # rows is whatever the bench's run() returned (DESIGN.md §9): a row
+    # list, a keyed table dict, or null when the bench failed
+    "rows": (list, dict, type(None)),
+}
+
+
+class SchemaError(ValueError):
+    """A BENCH_*.json payload violates the bench-v1 contract."""
+
+
+def _require(cond, path, msg):
+    if not cond:
+        raise SchemaError(f"{path}: {msg}")
+
+
+def validate_bench_payload(payload, path="<payload>"):
+    """Raise SchemaError unless ``payload`` is a valid bench-v1 document."""
+    _require(isinstance(payload, dict), path,
+             f"top level must be an object, got {type(payload).__name__}")
+    for key, types in TOP_KEYS.items():
+        _require(key in payload, path, f"missing top-level key {key!r}")
+        _require(isinstance(payload[key], types), path,
+                 f"top-level {key!r} must be {types}, "
+                 f"got {type(payload[key]).__name__}")
+    _require(payload["schema"] == SCHEMA, path,
+             f"schema must be {SCHEMA!r}, got {payload['schema']!r}")
+    _require(payload["benches"], path, "benches must be non-empty")
+    for i, bench in enumerate(payload["benches"]):
+        where = f"{path}: benches[{i}]"
+        _require(isinstance(bench, dict), path,
+                 f"benches[{i}] must be an object")
+        for key, types in BENCH_KEYS.items():
+            _require(key in bench, where, f"missing key {key!r}")
+            _require(isinstance(bench[key], types), where,
+                     f"{key!r} must be {types}, "
+                     f"got {type(bench[key]).__name__}")
+
+
+def validate_bench_json(path):
+    """Load one file and validate it; raise SchemaError on violations."""
+    try:
+        with open(path) as f:
+            payload = json.load(f)
+    except json.JSONDecodeError as e:
+        raise SchemaError(f"{path}: not valid JSON ({e})") from e
+    validate_bench_payload(payload, path)
+    return payload
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("paths", nargs="*",
+                    help="files to validate (default: ./BENCH_*.json)")
+    args = ap.parse_args(argv)
+    paths = args.paths or sorted(glob.glob("BENCH_*.json"))
+    if not paths:
+        sys.exit("validate_schema: no BENCH_*.json files found")
+    for path in paths:
+        try:
+            payload = validate_bench_json(path)
+        except SchemaError as e:
+            sys.exit(f"validate_schema: FAIL {e}")
+        print(f"validate_schema: OK {path} (suite={payload['suite']}, "
+              f"{len(payload['benches'])} benches)")
+
+
+if __name__ == "__main__":
+    main()

@@ -13,6 +13,8 @@ from repro.core.inference import (
     tree_vote_predict,
     feature_bins,
 )
-from repro.core.hybrid import hybrid_predict, hybrid_serve, dispatch, combine
+from repro.core.hybrid import (hybrid_predict, hybrid_serve, dispatch,
+                               combine, DeferredDispatch, init_deferred,
+                               defer_window, backpatch_pending)
 from repro.core.quantize import FixedPoint, quantize_fixed, dequantize, relative_error
 from repro.core.resources import artifact_resources, ResourceReport

@@ -63,6 +63,99 @@ def combine(switch_pred: jax.Array, backend_pred_subset: jax.Array,
     return switch_pred.at[idx].set(upd)
 
 
+# ---------------------------------------------------------------------------
+# cross-window deferred dispatch (DESIGN.md §7)
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class DeferredDispatch:
+    """Device-resident deferral buffer for cross-window backend batching.
+
+    Instead of paying one backend invocation per window for at most
+    ``capacity`` rows, serving defers the compacted low-confidence rows of
+    up to ``flush_every`` windows into this buffer and runs the backend
+    once per flush at ``flush_every``-times the occupancy. Each slot keeps
+    its *return address* — ``(window, lane)``: the pending-cycle slot the
+    row came from and its lane within that window — so a flush can
+    back-patch the backend answers into the per-window pending prediction
+    set (``backpatch_pending``).
+
+    ``buf`` is ``(flush_every * capacity, F)`` on a single device, or
+    ``(n_shards, flush_every * capacity, F)`` on the sharded tier, where
+    every shard accumulates the partial rows it owns (non-owner lanes
+    zero) and a flush reduce-scatters complete rows so each shard's
+    backend serves only its slice. Donation discipline matches the other
+    serving carries: the buffer is donated into every defer/flush step —
+    callers never hold a reference to a previous one.
+    """
+    buf: jax.Array       # (k*cap, F) or (n_shards, k*cap, F) deferred rows
+    lane: jax.Array      # (k*cap,) i32 lane within the source window
+    window: jax.Array    # (k*cap,) i32 pending-cycle slot in [0, flush_every)
+    valid: jax.Array     # (k*cap,) bool: slot holds a live deferred row
+
+    @property
+    def slots(self) -> int:
+        return self.lane.shape[0]
+
+
+def init_deferred(flush_every: int, capacity: int, n_features: int, *,
+                  n_shards: int = None) -> DeferredDispatch:
+    """Empty deferral buffer for ``flush_every`` windows of ``capacity``
+    rows each. ``n_shards`` adds the leading shard dim of the sharded
+    tier's partial-row accumulation buffer."""
+    n = flush_every * capacity
+    shape = (n, n_features) if n_shards is None else (n_shards, n, n_features)
+    return DeferredDispatch(
+        buf=jnp.zeros(shape, jnp.float32),
+        lane=jnp.zeros((n,), jnp.int32),
+        window=jnp.zeros((n,), jnp.int32),
+        valid=jnp.zeros((n,), bool))
+
+
+def defer_window(dd: DeferredDispatch, buf: jax.Array, idx: jax.Array,
+                 valid: jax.Array, pos) -> DeferredDispatch:
+    """Append one window's dispatched rows at pending-cycle slot ``pos``.
+
+    ``buf``/``idx``/``valid`` are ``dispatch``'s outputs for the window
+    (the sharded tier passes its per-shard partial ``(n_shards, capacity,
+    F)`` buffer); ``pos`` is a traced i32 scalar, so stepping through the
+    cycle never recompiles. Slot ``pos`` occupies rows
+    ``[pos*capacity, (pos+1)*capacity)``.
+    """
+    cap = idx.shape[0]
+    row0 = pos * cap
+    if dd.buf.ndim == 3:
+        new_buf = jax.lax.dynamic_update_slice(dd.buf, buf, (0, row0, 0))
+    else:
+        new_buf = jax.lax.dynamic_update_slice(dd.buf, buf, (row0, 0))
+    return DeferredDispatch(
+        buf=new_buf,
+        lane=jax.lax.dynamic_update_slice(
+            dd.lane, idx.astype(jnp.int32), (row0,)),
+        window=jax.lax.dynamic_update_slice(
+            dd.window, jnp.full((cap,), pos, jnp.int32), (row0,)),
+        valid=jax.lax.dynamic_update_slice(dd.valid, valid, (row0,)))
+
+
+def backpatch_pending(pending: jax.Array, backend_pred: jax.Array,
+                      dd: DeferredDispatch) -> jax.Array:
+    """Scatter flushed backend answers into the per-window pending set.
+
+    ``pending`` is the ``(flush_every, W)`` prediction buffer holding each
+    pending window's switch answers; every live deferral slot overwrites
+    its ``(window, lane)`` return address with the backend's answer.
+    Dead slots are routed out of bounds and dropped, so a partially
+    filled cycle (the guaranteed end-of-trace flush) patches exactly the
+    rows that were deferred. Live addresses are unique by construction
+    (lanes are distinct within a window, cycle slots distinct across
+    windows), so the scatter is deterministic.
+    """
+    row = jnp.where(dd.valid, dd.window, pending.shape[0])
+    return pending.at[row, dd.lane].set(
+        backend_pred.astype(pending.dtype), mode="drop")
+
+
 def hybrid_serve(art: TableArtifact, backend_fn: Callable, x,
                  threshold: float, capacity: int):
     """Serving-form hybrid with bounded backend batch.

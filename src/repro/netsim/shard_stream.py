@@ -150,8 +150,10 @@ def shard_window_update(regs: FlowTableState, w: PacketWindow,
     which the bit-identity contract depends.
     """
     local, own = localize_window(w, n_shards, shard_idx)
-    regs = update_flow_table(regs, local)
-    regs, n_ev, n_ov = lifecycle_sweep(regs, w, evict_age, saturate)
+    prev = regs                   # pre-update registers: the overflow guard
+    regs = update_flow_table(regs, local)   # counts only newly saturated
+    regs, n_ev, n_ov = lifecycle_sweep(regs, w, evict_age, saturate,
+                                       prev=prev)
     x = None
     if readout:
         x = flow_table_readout(regs, local.bucket)          # (W, 8)

@@ -178,30 +178,47 @@ def age_out(state: FlowTableState, evict_before,
     return new, jnp.sum(evict.astype(jnp.int32))
 
 
-def saturate_counts(state: FlowTableState,
-                    *, limit: float = OVERFLOW_LIMIT) -> tuple:
+def saturate_counts(state: FlowTableState, *, limit: float = OVERFLOW_LIMIT,
+                    prev: Optional[FlowTableState] = None) -> tuple:
     """Overflow guard for the f32 integer-exactness envelope.
 
     Count/byte registers are integer-valued f32 accumulators — exact
     below 2^24, silently lossy above. Clamping at the limit is a bitwise
     no-op for every in-envelope register, so the guard can stay on in
     serving paths without perturbing the streaming-vs-batch equality;
-    the returned i32 counts register slots at the limit (cumulative in
-    ``StreamStats.overflow``) so a saturated stream is *visible*
-    telemetry instead of a silent wrong count. Returns (state, n_at_limit).
+    the returned i32 counts register slots *newly* saturated by this
+    sweep (cumulative in ``StreamStats.overflow``), so the telemetry
+    grows once per saturation event rather than re-counting every
+    already-clamped slot each window (which inflated linearly with
+    stream length). Returns (state, n_newly_saturated).
+
+    ``prev`` is the register file at the start of the window (before
+    ``update_flow_table``): a slot counts iff it reached the limit now
+    but was below it then — exactly once per saturation event. The
+    serving steps always pass it. Without ``prev`` the guard counts
+    slots strictly *above* the limit (the clamp visibly changed them):
+    an idle saturated slot (sitting exactly at the limit) is never
+    re-counted, but one that keeps receiving traffic rises above the
+    limit again each sweep and counts again — a per-sweep clamp-event
+    count, not a once-only one. Pass ``prev`` when you need the latter.
     """
     lim = jnp.float32(limit)
     n_over = jnp.zeros((), jnp.int32)
     upd = {}
     for f in COUNT_FIELDS:
         r = getattr(state, f)
-        n_over = n_over + jnp.sum((r >= lim).astype(jnp.int32))
+        if prev is not None:
+            newly = (r >= lim) & (getattr(prev, f) < lim)
+        else:
+            newly = r > lim
+        n_over = n_over + jnp.sum(newly.astype(jnp.int32))
         upd[f] = jnp.minimum(r, lim)
     return dataclasses.replace(state, **upd), n_over
 
 
 def lifecycle_sweep(state: FlowTableState, w: "PacketWindow",
-                    evict_age: Optional[float], saturate: bool) -> tuple:
+                    evict_age: Optional[float], saturate: bool,
+                    prev: Optional[FlowTableState] = None) -> tuple:
     """Aging sweep + overflow guard for one served window.
 
     The single definition shared by the single-device and sharded serving
@@ -210,8 +227,11 @@ def lifecycle_sweep(state: FlowTableState, w: "PacketWindow",
     cutoff is ``min(now - evict_age, window_min_ts)``: strictly no later
     than every timestamp in this window, so a flow seen in this window
     always survives it by construction, even when the window's time span
-    exceeds ``evict_age``. Returns (state, n_evicted, n_overflow) — both
-    counters zero when the corresponding feature is off.
+    exceeds ``evict_age``. ``prev`` (the register file before this
+    window's update) lets the overflow guard count only *newly* saturated
+    slots — see ``saturate_counts``. Returns (state, n_evicted,
+    n_overflow) — both counters zero when the corresponding feature is
+    off.
     """
     n_ev = jnp.zeros((), jnp.int32)
     n_ov = jnp.zeros((), jnp.int32)
@@ -221,7 +241,7 @@ def lifecycle_sweep(state: FlowTableState, w: "PacketWindow",
         cutoff = jnp.minimum(now - jnp.float32(evict_age), w_min)
         state, n_ev = age_out(state, cutoff)
     if saturate:
-        state, n_ov = saturate_counts(state)
+        state, n_ov = saturate_counts(state, prev=prev)
     return state, n_ev, n_ov
 
 

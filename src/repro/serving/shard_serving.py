@@ -33,28 +33,40 @@ epoch-invariant difference; the min-merged ``epoch`` register replaces
 the host-side latch as the record of the stream's true time origin
 (``.epoch`` telemetry). The same donation discipline as the parent
 applies — state and stats carries are consumed every step.
+
+Cross-window batching is shard-aware (DESIGN.md §7): with
+``flush_every=k`` the per-window psum of the dispatch buffer disappears
+entirely — each shard accumulates the partial rows it owns in its slice
+of the (n_shards, k*capacity, F) deferral buffer, and a flush
+reduce-scatters complete rows so every shard's backend serves only
+k*capacity/n_shards of them. Backend capacity scales with the mesh; the
+flush_every=1 default keeps the per-window replicated-buffer path bit
+for bit.
 """
 
 from __future__ import annotations
 
+import functools
 from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
-from jax.sharding import Mesh, PartitionSpec as P
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.artifact import TableArtifact
-from repro.core.hybrid import dispatch
+from repro.core.hybrid import (DeferredDispatch, backpatch_pending,
+                               dispatch, init_deferred)
 from repro.distributed.sharding import flow_shard_mesh
 from repro.kernels.ops import fused_classify
 from repro.kernels.tuning import TileConfig
 from repro.netsim.shard_stream import (ShardedFlowTable, init_sharded_table,
                                        n_local_buckets, shard_window_update,
                                        sharded_flow_table, stream_epoch)
-from repro.netsim.stream import PacketWindow
+from repro.netsim.stream import FLOW_FEATURES, PacketWindow
 from repro.serving.stream_serving import (StreamingHybridServer,
-                                          accumulate_stream_stats)
+                                          accumulate_stream_stats,
+                                          defer_tail, fold_flush_stats)
 
 
 class ShardedStreamingServer(StreamingHybridServer):
@@ -71,6 +83,7 @@ class ShardedStreamingServer(StreamingHybridServer):
     def __init__(self, artifact: TableArtifact, backend_fn: Callable, *,
                  n_buckets: int = 4096, window: int = 512,
                  threshold: float = 0.7, capacity: int = 64,
+                 flush_every: int = 1,
                  evict_age: Optional[float] = None, saturate: bool = True,
                  mesh: Optional[Mesh] = None, n_shards: Optional[int] = None,
                  use_pallas: bool = False, autotune: bool = False,
@@ -81,15 +94,28 @@ class ShardedStreamingServer(StreamingHybridServer):
         self.mesh = mesh if mesh is not None else flow_shard_mesh(n_shards)
         n_sh = self.n_shards = self.mesh.shape["shard"]
         n_local_buckets(n_buckets, n_sh)          # validate divisibility
+        if flush_every > 1 and (flush_every * capacity) % n_sh:
+            # flush_every == 1 never builds the deferral buffer, so the
+            # per-shard slice constraint does not apply there
+            raise ValueError(
+                f"flush_every*capacity={flush_every * capacity} must divide "
+                f"evenly over {n_sh} shards (each shard's backend serves "
+                f"one slice of the deferral buffer per flush)")
         super().__init__(artifact, backend_fn, n_buckets=n_buckets,
                          window=window, threshold=threshold,
-                         capacity=capacity, evict_age=evict_age,
+                         capacity=capacity, flush_every=flush_every,
+                         evict_age=evict_age,
                          saturate=saturate, use_pallas=use_pallas,
                          autotune=autotune, tiles=tiles, fuse=fuse)
 
-        def _shard_body(regs, epoch, art, w: PacketWindow, threshold):
+        def _shard_body(regs, epoch, art, w: PacketWindow, threshold, *,
+                        merge_buf):
             """Per-shard half of the step (runs under shard_map; regs
-            leaves arrive as this shard's (1, n_local) block)."""
+            leaves arrive as this shard's (1, n_local) block). merge_buf
+            psums the dispatch buffer to a replicated (capacity, F) for
+            the immediate backend; the deferred path skips that merge and
+            keeps each shard's partial rows — they accumulate in the
+            deferral buffer and are reduce-scattered once per flush."""
             sq = jax.tree.map(lambda a: a[0], regs)
             d = jax.lax.axis_index("shard")
             sq, e, own, x, n_ev, n_ov = shard_window_update(
@@ -101,23 +127,29 @@ class ShardedStreamingServer(StreamingHybridServer):
             conf = jax.lax.psum(jnp.where(own, conf, 0.0), "shard")
             fwd = (conf < threshold) & w.valid
             buf, idx, valid = dispatch(x, fwd, capacity)
-            buf = jax.lax.psum(buf, "shard")
+            buf = jax.lax.psum(buf, "shard") if merge_buf else buf[None]
             counts = (jax.lax.psum(n_ev, "shard"),
                       jax.lax.psum(n_ov, "shard"))
             return (jax.tree.map(lambda a: a[None], sq),
                     jnp.minimum(epoch, e),
                     sw_pred, fwd, buf, idx, valid, counts)
 
+        state_specs = (P("shard", None), P("shard"), P(), P(), P())
         shard_half = shard_map(
-            _shard_body, mesh=self.mesh,
-            in_specs=(P("shard", None), P("shard"), P(), P(), P()),
+            functools.partial(_shard_body, merge_buf=True), mesh=self.mesh,
+            in_specs=state_specs,
             out_specs=(P("shard", None), P("shard"),
                        P(), P(), P(), P(), P(), P()))
+        defer_half = shard_map(
+            functools.partial(_shard_body, merge_buf=False), mesh=self.mesh,
+            in_specs=state_specs,
+            out_specs=(P("shard", None), P("shard"),
+                       P(), P(), P("shard", None, None), P(), P(), P()))
 
-        def _switch_half(art, state: ShardedFlowTable, w, threshold):
+        def _switch_half(art, state: ShardedFlowTable, w, threshold, *,
+                         half=shard_half):
             (regs, epoch, sw_pred, fwd, buf, idx, valid,
-             counts) = shard_half(state.regs, state.epoch, art, w,
-                                  threshold)
+             counts) = half(state.regs, state.epoch, art, w, threshold)
             return (ShardedFlowTable(regs=regs, epoch=epoch),
                     sw_pred, fwd, buf, idx, valid, counts)
 
@@ -137,11 +169,67 @@ class ShardedStreamingServer(StreamingHybridServer):
         self._stream_switch = jax.jit(stream_switch, donate_argnums=(1,))
         # the epilogue (accumulate_stream_stats) is inherited as-is
 
+        # -- cross-window deferred dispatch (shard-aware) --------------------
+
+        def defer_step(art, state, stats, dd, pending, w, threshold, pos):
+            """Deferred-path window: the parent's shared tail, but the
+            dispatch buffer stays per-shard partial ((n_shards, capacity,
+            F), the rows each shard owns, zeros elsewhere) — no
+            per-window psum."""
+            state, sw_pred, fwd, buf, idx, valid, counts = _switch_half(
+                art, state, w, threshold, half=defer_half)
+            stats, dd, pending, pred, frac, rows = defer_tail(
+                stats, dd, pending, w, sw_pred, fwd, buf, idx, valid,
+                counts, pos)
+            return state, stats, dd, pending, pred, frac, rows
+
+        self._defer_step = jax.jit(defer_step, donate_argnums=(1, 2, 3, 4))
+
+        def _flush_body(buf):
+            """Per-shard flush half: reduce-scatter the partial deferral
+            buffers so this shard holds complete rows for its slice, run
+            the backend on that slice only. Per-flush device work is
+            slots/n_shards rows — backend capacity scales with the mesh —
+            and the concatenated out_spec reassembles the full (slots,)
+            answer vector in slice order."""
+            sl = jax.lax.psum_scatter(buf[0], "shard", scatter_dimension=0,
+                                      tiled=True)
+            return jnp.asarray(backend_fn(sl)).astype(jnp.int32)
+
+        flush_half = shard_map(_flush_body, mesh=self.mesh,
+                               in_specs=(P("shard", None, None),),
+                               out_specs=P("shard"))
+
+        def flush_fused(stats, dd, pending):
+            be_pred = flush_half(dd.buf)
+            patched = backpatch_pending(pending, be_pred, dd)
+            stats = fold_flush_stats(stats, dd)
+            return (stats, jax.tree.map(jnp.zeros_like, dd), patched,
+                    jnp.full_like(pending, -1))
+
+        self._flush_fused = jax.jit(flush_fused, donate_argnums=(0, 1, 2))
+        # _flush_patch (two-phase: host backend on summed partial rows,
+        # jitted back-patch) is inherited — backpatch/fold are layout-
+        # agnostic and _flush_rows_host sums the shard dim.
+
     # -- streaming state ----------------------------------------------------
 
     def _make_state(self) -> ShardedFlowTable:
         """Mesh-placed sharded register file (parent init/reset hook)."""
         return init_sharded_table(self.n_buckets, mesh=self.mesh)
+
+    def _make_deferred(self) -> DeferredDispatch:
+        """Per-shard partial-row deferral buffer, placed on the mesh:
+        the (n_shards, slots, F) accumulation buffer shards its leading
+        dim; the return addresses are replicated."""
+        dd = init_deferred(self.flush_every, self.capacity, FLOW_FEATURES,
+                           n_shards=self.n_shards)
+        sh = lambda *spec: NamedSharding(self.mesh, P(*spec))
+        return DeferredDispatch(
+            buf=jax.device_put(dd.buf, sh("shard", None, None)),
+            lane=jax.device_put(dd.lane, sh()),
+            window=jax.device_put(dd.window, sh()),
+            valid=jax.device_put(dd.valid, sh()))
 
     def flow_table(self) -> jax.Array:
         """(n_buckets, 8) canonical-bucket-order table, gathered across

@@ -23,6 +23,15 @@ callers must never hold a reference to a previous state.
 Backends that cannot trace fall back to the same two-phase shape as
 ``HybridServer``: jitted update+switch+dispatch (still donating state),
 host backend call, jitted combine+stats (donating the stats carry).
+
+Cross-window backend batching (DESIGN.md §7): ``flush_every=k`` defers
+the dispatched low-confidence rows of up to k windows into a donated
+``core.hybrid.DeferredDispatch`` buffer and runs the backend once per
+flush at k-times the occupancy; the answers back-patch the per-window
+pending prediction set at their recorded (window, lane) return
+addresses. ``flush_every=1`` (default) is the unchanged per-window path
+— the equivalence oracle; final predictions are bit-identical either
+way for row-wise backends.
 """
 
 from __future__ import annotations
@@ -35,10 +44,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.artifact import TableArtifact
-from repro.core.hybrid import combine, dispatch
+from repro.core.hybrid import (DeferredDispatch, backpatch_pending, combine,
+                               defer_window, dispatch, init_deferred)
 from repro.kernels.ops import fused_classify
 from repro.kernels.tuning import TileConfig
-from repro.netsim.stream import (FlowTableState, PacketWindow,
+from repro.netsim.stream import (FLOW_FEATURES, FlowTableState, PacketWindow,
                                  flow_table_readout, init_flow_table,
                                  iter_windows, lifecycle_sweep,
                                  update_flow_table)
@@ -58,14 +68,19 @@ class StreamStats:
     packets: jax.Array        # i32: valid packets seen
     handled: jax.Array        # i32: answered at the switch tier
     backend_rows: jax.Array   # i32: rows the backend actually served
+    deferred: jax.Array       # i32: low-confidence rows past capacity that
+                              #      never reached the backend (switch
+                              #      answer kept — was silent before)
+    flushes: jax.Array        # i32: backend invocations (one per flush;
+                              #      == windows when flush_every == 1)
     evicted: jax.Array        # i32: buckets recycled by the aging sweep
-    overflow: jax.Array       # i32: register slots clamped at 2^24
+    overflow: jax.Array       # i32: register slots newly saturated at 2^24
 
     @classmethod
     def zero(cls) -> "StreamStats":
         z = lambda: jnp.zeros((), jnp.int32)
         return cls(windows=z(), packets=z(), handled=z(), backend_rows=z(),
-                   evicted=z(), overflow=z())
+                   deferred=z(), flushes=z(), evicted=z(), overflow=z())
 
     @property
     def n_windows(self) -> int:
@@ -76,6 +91,11 @@ class StreamStats:
         return int(self.packets)
 
     @property
+    def n_handled(self) -> int:
+        """Packets answered confidently at the switch tier."""
+        return int(self.handled)
+
+    @property
     def fraction_handled(self) -> float:
         n = int(self.packets)
         return float(self.handled) / n if n else 0.0
@@ -83,6 +103,22 @@ class StreamStats:
     @property
     def total_backend_rows(self) -> int:
         return int(self.backend_rows)
+
+    @property
+    def n_deferred(self) -> int:
+        """Low-confidence rows that overflowed the dispatch capacity and
+        kept the (low-confidence) switch answer. Nonzero means the stream
+        wants a larger ``capacity`` or a larger ``flush_every`` — visible
+        accounting for what used to be a silent drop. After the final
+        flush, ``handled + backend_rows + deferred == packets``."""
+        return int(self.deferred)
+
+    @property
+    def n_flushes(self) -> int:
+        """Backend invocations so far: one per window at flush_every=1,
+        one per ``flush_every`` windows (plus the end-of-trace flush)
+        under cross-window batching."""
+        return int(self.flushes)
 
     @property
     def n_evicted(self) -> int:
@@ -101,6 +137,7 @@ class StreamStats:
                 f"packets={self.n_packets}, "
                 f"fraction_handled={self.fraction_handled:.3f}, "
                 f"backend_rows={self.total_backend_rows}, "
+                f"deferred={self.n_deferred}, flushes={self.n_flushes}, "
                 f"evicted={self.n_evicted}, overflow={self.n_overflow})")
 
 
@@ -110,11 +147,15 @@ def accumulate_stream_stats(stats: StreamStats, w: PacketWindow, sw_pred,
     lanes, fold this window into the running StreamStats. Used by both the
     single-device and the sharded step (the sharded one passes psummed
     inputs — already replicated, so the fold is identical per device).
+    The backend ran for this window, so ``flushes`` advances by one;
+    forwarded rows past capacity land in ``deferred`` instead of silently
+    keeping the switch answer uncounted.
     Returns (stats, pred, frac_handled, backend_rows)."""
     pred = combine(sw_pred, be_pred, idx, valid)
     pred = jnp.where(w.valid, pred, -1)                  # pad lanes
     n_valid = jnp.sum(w.valid.astype(jnp.int32))
     n_handled = jnp.sum((w.valid & ~fwd).astype(jnp.int32))
+    n_fwd = jnp.sum(fwd.astype(jnp.int32))
     rows = jnp.sum(valid.astype(jnp.int32))
     frac = (n_handled.astype(jnp.float32)
             / jnp.maximum(n_valid, 1).astype(jnp.float32))
@@ -122,9 +163,54 @@ def accumulate_stream_stats(stats: StreamStats, w: PacketWindow, sw_pred,
                         packets=stats.packets + n_valid,
                         handled=stats.handled + n_handled,
                         backend_rows=stats.backend_rows + rows,
+                        deferred=stats.deferred + (n_fwd - rows),
+                        flushes=stats.flushes + 1,
                         evicted=stats.evicted + n_evicted,
                         overflow=stats.overflow + n_overflow)
     return stats, pred, frac, rows
+
+
+def accumulate_deferred_stats(stats: StreamStats, w: PacketWindow, fwd,
+                              valid, n_evicted, n_overflow):
+    """Per-window stats fold for the deferred-dispatch path: everything
+    *except* the backend accounting, which folds at flush time
+    (``fold_flush_stats``) when the backend actually runs.
+    Returns (stats, frac_handled, rows_deferred_this_window)."""
+    n_valid = jnp.sum(w.valid.astype(jnp.int32))
+    n_handled = jnp.sum((w.valid & ~fwd).astype(jnp.int32))
+    n_fwd = jnp.sum(fwd.astype(jnp.int32))
+    rows = jnp.sum(valid.astype(jnp.int32))
+    frac = (n_handled.astype(jnp.float32)
+            / jnp.maximum(n_valid, 1).astype(jnp.float32))
+    stats = dataclasses.replace(
+        stats, windows=stats.windows + 1, packets=stats.packets + n_valid,
+        handled=stats.handled + n_handled,
+        deferred=stats.deferred + (n_fwd - rows),
+        evicted=stats.evicted + n_evicted,
+        overflow=stats.overflow + n_overflow)
+    return stats, frac, rows
+
+
+def fold_flush_stats(stats: StreamStats, dd: DeferredDispatch) -> StreamStats:
+    """One backend flush served every live slot of the deferral buffer."""
+    rows = jnp.sum(dd.valid.astype(jnp.int32))
+    return dataclasses.replace(stats, backend_rows=stats.backend_rows + rows,
+                               flushes=stats.flushes + 1)
+
+
+def defer_tail(stats, dd, pending, w: PacketWindow, sw_pred, fwd, buf, idx,
+               valid, counts, pos):
+    """Shared tail of the deferred-path window step (single-device and
+    sharded): mask pad lanes, append the dispatched rows to the deferral
+    buffer at cycle slot ``pos``, record the provisional predictions in
+    the pending set, fold the non-backend stats.
+    Returns (stats, dd, pending, pred, frac, rows)."""
+    pred = jnp.where(w.valid, sw_pred, -1)                   # pad lanes
+    dd = defer_window(dd, buf, idx, valid, pos)
+    pending = pending.at[pos].set(pred)
+    stats, frac, rows = accumulate_deferred_stats(stats, w, fwd, valid,
+                                                  *counts)
+    return stats, dd, pending, pred, frac, rows
 
 
 class StreamingHybridServer(HybridServer):
@@ -138,6 +224,7 @@ class StreamingHybridServer(HybridServer):
     def __init__(self, artifact: TableArtifact, backend_fn: Callable, *,
                  n_buckets: int = 4096, window: int = 512,
                  threshold: float = 0.7, capacity: int = 64,
+                 flush_every: int = 1,
                  evict_age: Optional[float] = None, saturate: bool = True,
                  use_pallas: bool = False, autotune: bool = False,
                  tiles: Optional[TileConfig] = None,
@@ -152,24 +239,42 @@ class StreamingHybridServer(HybridServer):
         guard on; clamping is a bitwise no-op below the envelope, so it
         only changes behavior for streams that were already silently
         inexact — now counted in StreamStats.overflow instead.
+
+        flush_every: defer the backend across this many windows
+        (DESIGN.md §7). 1 (default) keeps today's one-backend-call-per-
+        window behavior bit for bit — the equivalence oracle. k > 1
+        accumulates the dispatched low-confidence rows of up to k windows
+        in a donated ``DeferredDispatch`` buffer and runs the backend
+        once per flush at k-times the occupancy; ``step`` then returns
+        *provisional* (switch-tier) predictions and the backend answers
+        are back-patched into the pending windows at flush
+        (``serve_trace`` consumes the patches and always ends with a
+        guaranteed flush, so its predictions are final). Deferred rows'
+        features are the register readout of their own window, so final
+        predictions match flush_every=1 for any row-wise backend.
         """
+        if flush_every < 1:
+            raise ValueError(f"flush_every must be >= 1, got {flush_every}")
         super().__init__(artifact, backend_fn, threshold=threshold,
                          capacity=capacity, use_pallas=use_pallas,
                          autotune=autotune, tiles=tiles, fuse=fuse)
         self.n_buckets = n_buckets
         self.window = window
+        self.flush_every = flush_every
         self.evict_age = evict_age
         self.saturate = saturate
         self._state = self._make_state()
         self._stats = StreamStats.zero()
+        self._reset_deferred()
 
         def _switch_half(art, state, w: PacketWindow, threshold):
             """update registers -> aging sweep -> overflow guard -> read
             out touched flows -> classify -> dispatch; shared by the fused
             and two-phase paths."""
-            state = update_flow_table(state, w)
+            prev = state              # pre-update registers: the overflow
+            state = update_flow_table(state, w)   # guard counts only newly
             state, n_ev, n_ov = lifecycle_sweep(state, w, evict_age,
-                                                saturate)
+                                                saturate, prev=prev)
             x = flow_table_readout(state, w.bucket)          # (W, 8)
             sw_pred, conf = fused_classify(art, x, use_pallas=use_pallas,
                                            tiles=self.tiles)
@@ -197,6 +302,43 @@ class StreamingHybridServer(HybridServer):
         self._stream_epilogue = jax.jit(accumulate_stream_stats,
                                         donate_argnums=(0,))
 
+        # -- cross-window deferred dispatch (flush_every > 1) ---------------
+
+        def defer_step(art, state, stats, dd, pending, w, threshold, pos):
+            """One window on the deferred path: switch half as above, but
+            the dispatched rows go to the deferral buffer instead of the
+            backend, and the provisional (switch) predictions land in the
+            pending set at cycle slot ``pos`` (traced: no recompiles)."""
+            state, x, sw_pred, fwd, buf, idx, valid, counts = _switch_half(
+                art, state, w, threshold)
+            stats, dd, pending, pred, frac, rows = defer_tail(
+                stats, dd, pending, w, sw_pred, fwd, buf, idx, valid,
+                counts, pos)
+            return state, stats, dd, pending, pred, frac, rows
+
+        self._defer_step = jax.jit(defer_step, donate_argnums=(1, 2, 3, 4))
+
+        def flush_fused(stats, dd, pending):
+            """Backend over the whole deferral buffer, answers back-patched
+            into the pending set; fresh (zeroed) carries come back with
+            the patched predictions."""
+            be_pred = jnp.asarray(backend_fn(dd.buf))
+            patched = backpatch_pending(pending, be_pred, dd)
+            stats = fold_flush_stats(stats, dd)
+            return (stats, jax.tree.map(jnp.zeros_like, dd), patched,
+                    jnp.full_like(pending, -1))
+
+        self._flush_fused = jax.jit(flush_fused, donate_argnums=(0, 1, 2))
+
+        def flush_patch(stats, dd, pending, be_pred):
+            """Two-phase flush epilogue: the backend ran on host; patch."""
+            patched = backpatch_pending(pending, be_pred, dd)
+            stats = fold_flush_stats(stats, dd)
+            return (stats, jax.tree.map(jnp.zeros_like, dd), patched,
+                    jnp.full_like(pending, -1))
+
+        self._flush_patch = jax.jit(flush_patch, donate_argnums=(0, 1, 2))
+
     # -- streaming state ----------------------------------------------------
 
     def _make_state(self):
@@ -204,6 +346,23 @@ class StreamingHybridServer(HybridServer):
         (the sharded tier allocates its mesh-placed table here instead of
         a dead single-device one)."""
         return init_flow_table(self.n_buckets)
+
+    def _make_deferred(self) -> DeferredDispatch:
+        """Fresh deferral buffer — the sharded tier overrides with its
+        per-shard partial-row layout."""
+        return init_deferred(self.flush_every, self.capacity, FLOW_FEATURES)
+
+    def _reset_deferred(self):
+        """Empty pending cycle: deferral buffer, per-window pending
+        prediction set, and the host-side cycle position."""
+        self._pending_n = 0
+        self._flush_queue = []
+        if self.flush_every > 1:
+            self._dd = self._make_deferred()
+            self._pending = jnp.full((self.flush_every, self.window), -1,
+                                     jnp.int32)
+        else:
+            self._dd = self._pending = None
 
     @property
     def state(self) -> FlowTableState:
@@ -214,14 +373,22 @@ class StreamingHybridServer(HybridServer):
     def stats(self) -> StreamStats:
         return self._stats
 
+    @property
+    def pending_windows(self) -> int:
+        """Windows deferred in the current (unflushed) cycle."""
+        return self._pending_n
+
     def flow_table(self) -> jax.Array:
         """(n_buckets, 8) feature table from the current registers."""
         return flow_table_readout(self._state)
 
     def reset(self):
-        """Fresh register file + telemetry (a new stream epoch)."""
+        """Fresh register file + telemetry (a new stream epoch). Any
+        pending deferred windows are dropped unflushed — flush() first if
+        their backend answers matter."""
         self._state = self._make_state()
         self._stats = StreamStats.zero()
+        self._reset_deferred()
 
     # -- serving ------------------------------------------------------------
 
@@ -231,6 +398,14 @@ class StreamingHybridServer(HybridServer):
         Single device dispatch on the fused path; pad lanes report -1.
         Fully async — nothing here blocks on the device.
 
+        With flush_every > 1 the returned predictions are *provisional*:
+        deferred rows carry the low-confidence switch answer until the
+        cycle flushes (automatically every flush_every windows, or on an
+        explicit ``flush()``), at which point the back-patched final
+        predictions for the whole cycle are available from
+        ``consume_flush()``. ``HybridStats.backend_rows`` reports the
+        rows *deferred* this window (they reach the backend at flush).
+
         NOT retry-safe: the register file advances (and the old state is
         donated) before the backend runs, so on the two-phase path a
         backend exception leaves the window already folded in — calling
@@ -238,38 +413,121 @@ class StreamingHybridServer(HybridServer):
         the failed window, never by replaying it.
         """
         tau = jnp.float32(self.threshold)
-        if self._fused_ok is None:
-            try:
+        if self.flush_every == 1:
+            if self._fused_ok is None:
+                try:
+                    self._state, self._stats, pred, frac, rows = \
+                        self._stream_step(self.artifact, self._state,
+                                          self._stats, w, tau)
+                    self._fused_ok = True
+                    return pred, HybridStats(frac, rows, self.capacity)
+                except (jax.errors.JAXTypeError, TypeError):
+                    # tracing failed before execution: neither the state
+                    # nor the stats carry was consumed by the donation
+                    self._fused_ok = False
+            if self._fused_ok:
                 self._state, self._stats, pred, frac, rows = \
                     self._stream_step(self.artifact, self._state,
                                       self._stats, w, tau)
-                self._fused_ok = True
                 return pred, HybridStats(frac, rows, self.capacity)
+            (self._state, sw_pred, fwd, buf, idx, valid,
+             counts) = self._stream_switch(self.artifact, self._state, w,
+                                           tau)
+            be_pred = jnp.asarray(self.backend_fn(buf))
+            self._stats, pred, frac, rows = self._stream_epilogue(
+                self._stats, w, sw_pred, be_pred, idx, valid, fwd, *counts)
+            return pred, HybridStats(frac, rows, self.capacity)
+        # deferred path: no backend here — defer, auto-flush when full
+        (self._state, self._stats, self._dd, self._pending, pred, frac,
+         rows) = self._defer_step(self.artifact, self._state, self._stats,
+                                  self._dd, self._pending, w, tau,
+                                  jnp.int32(self._pending_n))
+        self._pending_n += 1
+        if self._pending_n >= self.flush_every:
+            # queued, not overwritten: a manual caller who steps through
+            # several cycles without consuming loses nothing
+            self._flush_queue.append(self.flush())
+        return pred, HybridStats(frac, rows, self.capacity)
+
+    # -- deferred-dispatch flushing -----------------------------------------
+
+    def _flush_rows_host(self):
+        """Complete deferred rows for a host (two-phase) backend call.
+        The sharded buffer holds per-shard partial rows (non-owner lanes
+        exactly zero), so summing the shard dim reconstructs them."""
+        buf = np.asarray(self._dd.buf)
+        return buf.sum(axis=0, dtype=np.float32) if buf.ndim == 3 else buf
+
+    def flush(self):
+        """Run the backend on the pending deferral cycle and back-patch.
+
+        -> (n_windows_flushed, patched (flush_every, W) predictions) with
+        the flushed windows at rows [0, n); None when nothing is pending
+        (or flush_every == 1, where every step already ran the backend).
+        ``serve_trace`` calls this at trace end — the guaranteed flush —
+        and after every auto-flush; drive it yourself when stepping
+        manually. The deferral buffer and pending set are consumed
+        (donated) and replaced by fresh zeroed carries.
+        """
+        if self.flush_every == 1 or self._pending_n == 0:
+            return None
+        n = self._pending_n
+        if self._fused_ok is None:
+            try:
+                self._stats, self._dd, patched, self._pending = \
+                    self._flush_fused(self._stats, self._dd, self._pending)
+                self._fused_ok = True
+                self._pending_n = 0
+                return n, patched
             except (jax.errors.JAXTypeError, TypeError):
-                # tracing failed before execution: neither the state nor
-                # the stats carry was consumed by the donation
+                # tracing failed before execution: nothing was donated
                 self._fused_ok = False
         if self._fused_ok:
-            self._state, self._stats, pred, frac, rows = self._stream_step(
-                self.artifact, self._state, self._stats, w, tau)
-            return pred, HybridStats(frac, rows, self.capacity)
-        (self._state, sw_pred, fwd, buf, idx, valid,
-         counts) = self._stream_switch(self.artifact, self._state, w, tau)
-        be_pred = jnp.asarray(self.backend_fn(buf))
-        self._stats, pred, frac, rows = self._stream_epilogue(
-            self._stats, w, sw_pred, be_pred, idx, valid, fwd, *counts)
-        return pred, HybridStats(frac, rows, self.capacity)
+            self._stats, self._dd, patched, self._pending = \
+                self._flush_fused(self._stats, self._dd, self._pending)
+        else:
+            be_pred = jnp.asarray(self.backend_fn(self._flush_rows_host()))
+            self._stats, self._dd, patched, self._pending = \
+                self._flush_patch(self._stats, self._dd, self._pending,
+                                  be_pred)
+        self._pending_n = 0
+        return n, patched
+
+    def consume_flush(self):
+        """Pop the oldest unconsumed auto-flush result (or None): the
+        (n_windows, patched predictions) pair ``step`` queued when a
+        cycle filled. FIFO, so stepping through several cycles before
+        consuming loses nothing."""
+        return self._flush_queue.pop(0) if self._flush_queue else None
 
     def serve_trace(self, trace, *, t0: Optional[float] = None):
         """Stream a whole PacketTrace through step(). -> (pred (P,), stats).
 
         Per-packet predictions concatenated in arrival order (pad lanes
-        stripped); the only host sync is the final concatenation.
+        stripped); the only host sync is the final concatenation. Under
+        deferred dispatch (flush_every > 1) every auto-flush back-patches
+        the backend answers over the provisional windows, and the trailing
+        partial cycle is flushed before returning — the predictions are
+        always final, bit-identical to flush_every=1 for row-wise
+        backends. Windows still pending from manual step() calls are
+        flushed (and their patches dropped, along with any unconsumed
+        queue) on entry: they belong to a different prediction stream
+        and must not patch into this trace's output.
         """
+        self.flush()
+        self._flush_queue = []
         preds = []
         for w in iter_windows(trace, self.window, self.n_buckets, t0=t0):
             pred, _ = self.step(w)
             preds.append(pred)
+            fl = self.consume_flush()
+            if fl is not None:
+                k, patched = fl
+                preds[-k:] = [patched[i] for i in range(k)]
+        fl = self.flush()                    # guaranteed end-of-trace flush
+        if fl is not None:
+            k, patched = fl
+            preds[-k:] = [patched[i] for i in range(k)]
         flat = (np.concatenate([np.asarray(p) for p in preds])
                 [:trace.n_packets] if preds else np.zeros((0,), np.int32))
         return jnp.asarray(flat), self._stats

@@ -1,0 +1,125 @@
+"""Benchmark-suite tooling: fail-fast suite runner + bench-v1 validation.
+
+Two CI-trust contracts:
+
+* ``benchmarks/run.py --all-suites`` must exit nonzero the moment a
+  sub-suite subprocess fails (propagating the child's code), so an
+  oracle failure in any emitter can never leave CI green;
+* every ``BENCH_*.json`` must satisfy the bench-v1 schema before it is
+  uploaded into the perf trajectory — ``benchmarks.validate_schema``
+  is the gate and must reject malformed payloads.
+"""
+
+import copy
+import json
+
+import pytest
+
+from benchmarks.common import write_bench_json
+from benchmarks.run import EXTRA_SUITES, run_suites
+from benchmarks.validate_schema import (SchemaError, main as validate_main,
+                                        validate_bench_json,
+                                        validate_bench_payload)
+
+
+# ---------------------------------------------------------------------------
+# fail-fast suite runner
+# ---------------------------------------------------------------------------
+
+def test_run_suites_propagates_child_failure():
+    """A failing suite subprocess must abort the run with a nonzero exit
+    code — the child's own — not be swallowed into a summary."""
+    with pytest.raises(SystemExit) as e:
+        run_suites(("definitely_not_a_bench_module",))
+    assert e.value.code not in (0, None)
+
+
+def test_run_suites_failure_is_fail_fast(capfd):
+    """The first failure stops the run: the suite after it never
+    launches (its banner is never printed)."""
+    with pytest.raises(SystemExit):
+        run_suites(("definitely_not_a_bench_module", "also_never_reached"))
+    out = capfd.readouterr()
+    assert "benchmarks.definitely_not_a_bench_module" in out.out
+    assert "also_never_reached" not in out.out
+
+
+def test_run_suites_empty_returns_cleanly():
+    assert run_suites(()) is None
+
+
+def test_all_suites_list_covers_every_emitter():
+    """The --all-suites chain names each standalone bench-v1 emitter,
+    including the cross-window batching bench."""
+    assert set(EXTRA_SUITES) == {"kernel_microbench", "stream_bench",
+                                 "shard_stream_bench", "batch_bench"}
+
+
+# ---------------------------------------------------------------------------
+# bench-v1 schema validation
+# ---------------------------------------------------------------------------
+
+@pytest.fixture()
+def valid_bench(tmp_path, monkeypatch):
+    """A real emitter-written file (write_bench_json is the single writer
+    every suite goes through, so validating its output validates them)."""
+    monkeypatch.chdir(tmp_path)
+    path = write_bench_json(
+        "BENCH_t.json", "batch",
+        [{"name": "batch_serving", "paper_ref": "§2.2.1", "ok": True,
+          "wall_s": 0.1, "rows": [{"flush_every": 4, "pkts_per_s": 1.0}]}],
+        config={"flush_every": [1, 4]})
+    return tmp_path / path
+
+
+def test_validator_accepts_emitter_output(valid_bench):
+    payload = validate_bench_json(str(valid_bench))
+    assert payload["suite"] == "batch"
+
+
+def test_validator_accepts_checked_in_trajectory(pytestconfig):
+    """Every BENCH_*.json currently in the repo root is schema-valid."""
+    root = pytestconfig.rootpath
+    files = sorted(root.glob("BENCH_*.json"))
+    assert files, "no BENCH_*.json checked in next to the tests"
+    for f in files:
+        validate_bench_json(str(f))
+
+
+@pytest.mark.parametrize("mutate", [
+    lambda p: p.pop("schema"),
+    lambda p: p.update(schema="bench-v2"),
+    lambda p: p.pop("benches"),
+    lambda p: p.update(benches=[]),
+    lambda p: p.update(benches=[{"name": "x"}]),          # missing keys
+    lambda p: p["benches"][0].update(ok="yes"),           # wrong type
+    lambda p: p["benches"][0].update(wall_s="fast"),      # wrong type
+    lambda p: p.update(config=None),
+])
+def test_validator_rejects_malformed_payloads(valid_bench, mutate):
+    payload = json.loads(valid_bench.read_text())
+    mutate(payload)
+    with pytest.raises(SchemaError):
+        validate_bench_payload(copy.deepcopy(payload), "mutated")
+
+
+def test_validator_cli_exits_nonzero_on_malformed_file(valid_bench,
+                                                       tmp_path):
+    bad = tmp_path / "BENCH_bad.json"
+    payload = json.loads(valid_bench.read_text())
+    payload["benches"][0].pop("wall_s")
+    bad.write_text(json.dumps(payload))
+    validate_main([str(valid_bench)])             # good file: returns
+    with pytest.raises(SystemExit) as e:
+        validate_main([str(bad)])
+    assert e.value.code not in (0, None)
+    with pytest.raises(SystemExit):               # not-JSON is also caught
+        bad.write_text("{not json")
+        validate_main([str(bad)])
+
+
+def test_validator_cli_requires_files(tmp_path, monkeypatch):
+    monkeypatch.chdir(tmp_path)                   # no BENCH_*.json here
+    with pytest.raises(SystemExit) as e:
+        validate_main([])
+    assert e.value.code not in (0, None)

@@ -126,11 +126,94 @@ def test_sharded_serving_untraceable_backend_falls_back(shard_setup):
     preds, stats = srv.serve_trace(trace)
     assert srv._fused_ok is False
     assert preds.shape == (trace.n_packets,)
-    # tau=2.0 forwards everything: every window fills its backend buffer
+    # tau=2.0 forwards everything: every window fills its backend buffer,
+    # the overflow past capacity is visible as deferred accounting
     assert stats.total_backend_rows == stats.n_windows * 16
+    assert stats.n_deferred == stats.n_packets - stats.total_backend_rows
     np.testing.assert_array_equal(
         np.asarray(srv.flow_table()),
         np.asarray(flow_features(trace, n_buckets=N_BUCKETS)[1]))
+
+
+# ---------------------------------------------------------------------------
+# cross-window deferred dispatch: shard-aware flushes (DESIGN.md §7)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n_shards", DEVICE_COUNTS)
+def test_sharded_deferred_bit_matches_flush_every_1(shard_setup, n_shards):
+    """The sharded deferral contract at every mesh size: per-shard-slice
+    flushes (reduce-scattered complete rows, one backend slice per
+    shard) return the same final predictions, flow table and accounting
+    as the per-window sharded baseline AND the single-device tier, with
+    ceil(windows/k) backend invocations."""
+    trace, art, backend = shard_setup
+    kw = dict(n_buckets=N_BUCKETS, window=256, threshold=0.9, capacity=32)
+    single = StreamingHybridServer(art, backend, **kw)
+    p_single, _ = single.serve_trace(trace)
+    ref = ShardedStreamingServer(art, backend, n_shards=n_shards, **kw)
+    p_ref, s_ref = ref.serve_trace(trace)
+    srv = ShardedStreamingServer(art, backend, n_shards=n_shards,
+                                 flush_every=4, **kw)
+    p, s = srv.serve_trace(trace)
+    assert srv._fused_ok is True
+    np.testing.assert_array_equal(np.asarray(p), np.asarray(p_ref))
+    np.testing.assert_array_equal(np.asarray(p), np.asarray(p_single))
+    np.testing.assert_array_equal(np.asarray(srv.flow_table()),
+                                  np.asarray(ref.flow_table()))
+    assert s.n_packets == s_ref.n_packets
+    assert s.fraction_handled == s_ref.fraction_handled
+    assert s.total_backend_rows == s_ref.total_backend_rows
+    assert s.n_deferred == s_ref.n_deferred
+    assert s.n_flushes == -(-s.n_windows // 4)
+    assert s_ref.n_flushes == s_ref.n_windows
+
+
+def test_sharded_deferred_two_phase_bit_identical(shard_setup):
+    """Satellite contract: the two-phase fallback of the sharded tier
+    under deferral (host backend over the shard-summed buffer) is
+    bit-identical to the fused per-shard-slice path and to the
+    single-device tier — including a mid-trace backend flush and the
+    guaranteed partial flush at trace end."""
+    trace, art, backend = shard_setup
+    kw = dict(n_buckets=N_BUCKETS, window=256, threshold=0.9, capacity=32,
+              flush_every=2)
+    fused = ShardedStreamingServer(art, backend,
+                                   n_shards=DEVICE_COUNTS[-1], **kw)
+    p_f, s_f = fused.serve_trace(trace)
+    assert fused._fused_ok is True
+    twop = ShardedStreamingServer(art, backend, fuse=False,
+                                  n_shards=DEVICE_COUNTS[-1], **kw)
+    p_t, s_t = twop.serve_trace(trace)
+    assert twop._fused_ok is False
+    single = StreamingHybridServer(art, backend, **kw)
+    p_s, s_s = single.serve_trace(trace)
+    assert s_t.n_windows > 2          # the cycle flushed mid-trace
+    assert s_t.n_flushes == -(-s_t.n_windows // 2) >= 2
+    np.testing.assert_array_equal(np.asarray(p_t), np.asarray(p_f))
+    np.testing.assert_array_equal(np.asarray(p_t), np.asarray(p_s))
+    np.testing.assert_array_equal(np.asarray(twop.flow_table()),
+                                  np.asarray(single.flow_table()))
+    assert s_t.total_backend_rows == s_f.total_backend_rows \
+        == s_s.total_backend_rows
+    assert s_t.n_flushes == s_f.n_flushes == s_s.n_flushes
+
+
+def test_sharded_deferred_rejects_indivisible_slots(shard_setup):
+    """Under deferral, flush_every*capacity must divide over the mesh
+    (each shard's backend serves one slice of the buffer per flush);
+    flush_every=1 never builds the buffer, so the same capacity stays
+    legal there."""
+    if DEVICE_COUNTS[-1] == 1:
+        pytest.skip("needs a multi-device mesh")
+    trace, art, backend = shard_setup
+    with pytest.raises(ValueError):
+        ShardedStreamingServer(art, backend, n_buckets=N_BUCKETS,
+                               capacity=3, flush_every=3,
+                               n_shards=DEVICE_COUNTS[-1])
+    srv = ShardedStreamingServer(art, backend, n_buckets=N_BUCKETS,
+                                 capacity=3, flush_every=1,
+                                 n_shards=DEVICE_COUNTS[-1])
+    assert srv.capacity == 3                      # per-window path: legal
 
 
 # ---------------------------------------------------------------------------
@@ -249,11 +332,20 @@ def test_overflow_guard_saturates_and_counts():
     assert int(n_over) == 1                       # only byte_count tripped
     assert float(out.byte_count[3]) == OVERFLOW_LIMIT
     assert float(out.pkt_count[3]) == near        # below the limit: exact
-    # idempotent on an already-clamped table, and now counted
+    # idempotent on an already-clamped table — and NOT re-counted: the
+    # guard reports newly saturated slots, so cumulative telemetry stays
+    # constant once a slot sits at the limit (it used to inflate linearly)
     out2, n_over2 = saturate_counts(out)
-    assert int(n_over2) == 1
+    assert int(n_over2) == 0
     np.testing.assert_array_equal(np.asarray(out2.byte_count),
                                   np.asarray(out.byte_count))
+    # with the pre-window registers available, the count is transition-
+    # exact: at-the-limit counts iff the slot was below it before
+    out3, n_over3 = saturate_counts(out, prev=state)
+    assert int(n_over3) == 0                      # state already >= limit
+    fresh = init_flow_table(32)
+    _, n_over4 = saturate_counts(out, prev=fresh)
+    assert int(n_over4) == 1                      # 0 -> limit: newly
 
 
 def test_overflow_guard_bitwise_noop_in_envelope():

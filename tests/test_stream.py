@@ -13,14 +13,16 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core.hybrid import combine, dispatch
+from repro.core.hybrid import (backpatch_pending, combine, defer_window,
+                               dispatch, init_deferred)
 from repro.core.mapping import map_tree_ensemble
 from repro.ml.trees import fit_random_forest, predict_tree_ensemble
 from repro.netsim.features import flow_features
 from repro.netsim.packets import synth_trace
-from repro.netsim.stream import (flow_table_readout, init_flow_table,
-                                 iter_windows, stream_flow_features,
-                                 update_flow_table)
+from repro.netsim.stream import (OVERFLOW_LIMIT, PacketWindow,
+                                 flow_table_readout, init_flow_table,
+                                 iter_windows, lifecycle_sweep,
+                                 stream_flow_features, update_flow_table)
 from repro.serving.hybrid_serving import HybridServer
 from repro.serving.stream_serving import StreamingHybridServer
 
@@ -165,8 +167,13 @@ def test_streaming_untraceable_backend_falls_back(stream_setup):
     preds, stats = srv.serve_trace(trace)
     assert srv._fused_ok is False
     assert preds.shape == (trace.n_packets,)
-    # tau=2.0 forwards everything: every window fills its backend buffer
+    # tau=2.0 forwards everything: every window fills its backend buffer,
+    # and every forwarded row past capacity is *counted* as deferred (the
+    # capacity-overflow accounting that used to be a silent drop)
     assert stats.total_backend_rows == stats.n_windows * 16
+    assert stats.n_deferred == stats.n_packets - stats.total_backend_rows
+    assert stats.n_handled + stats.total_backend_rows + stats.n_deferred \
+        == stats.n_packets
     np.testing.assert_array_equal(
         np.asarray(srv.flow_table()),
         np.asarray(flow_features(trace, n_buckets=N_BUCKETS)[1]))
@@ -206,3 +213,234 @@ def test_dispatch_combine_over_capacity():
     out = np.asarray(combine(jnp.zeros(n, jnp.int32), be, idx, valid))
     np.testing.assert_array_equal(np.nonzero(out == 9)[0], fwd_rows[:cap])
     assert (out[fwd_rows[cap:]] == 0).all()       # overflow stays switch
+
+
+def test_fused_deferred_counter_in_capacity_regime(stream_setup):
+    """Fused path, tau=2.0 (everything forwarded), tiny capacity: the
+    rows past capacity keep the switch answer AND are counted in
+    StreamStats.deferred — the accounting identity
+    handled + backend_rows + deferred == packets holds."""
+    trace, art, backend = stream_setup
+    srv = StreamingHybridServer(art, backend, n_buckets=N_BUCKETS,
+                                window=512, threshold=2.0, capacity=8)
+    _, stats = srv.serve_trace(trace)
+    assert srv._fused_ok is True
+    assert stats.n_deferred > 0
+    assert stats.total_backend_rows == stats.n_windows * 8
+    assert stats.n_handled == 0                   # tau=2 forwards all
+    assert stats.n_deferred == stats.n_packets - stats.total_backend_rows
+
+
+# ---------------------------------------------------------------------------
+# cross-window deferred dispatch (DESIGN.md §7)
+# ---------------------------------------------------------------------------
+
+def test_defer_window_and_backpatch_roundtrip():
+    """Unit: rows deferred over two cycle slots come back to their
+    (window, lane) return addresses; dead slots never touch the pending
+    set (a partial cycle patches exactly what was deferred)."""
+    k, cap, w_lanes = 3, 4, 8
+    dd = init_deferred(k, cap, 2)
+    x0 = np.arange(16, dtype=np.float32).reshape(8, 2)
+    m0 = np.zeros(8, bool)
+    m0[[1, 5]] = True
+    buf0, idx0, val0 = dispatch(jnp.asarray(x0), jnp.asarray(m0), cap)
+    dd = defer_window(dd, buf0, idx0, val0, jnp.int32(0))
+    m1 = np.zeros(8, bool)
+    m1[[0, 2, 7]] = True
+    buf1, idx1, val1 = dispatch(jnp.asarray(x0), jnp.asarray(m1), cap)
+    dd = defer_window(dd, buf1, idx1, val1, jnp.int32(1))
+    assert int(dd.valid.sum()) == 5
+    # deferred rows carry their window's features
+    np.testing.assert_array_equal(np.asarray(dd.buf[:cap]),
+                                  np.asarray(buf0))
+    pending = jnp.zeros((k, w_lanes), jnp.int32)
+    be = jnp.arange(k * cap, dtype=jnp.int32) + 100
+    out = np.asarray(backpatch_pending(pending, be, dd))
+    # window 0 lanes 1,5 and window 1 lanes 0,2,7 got their slot's answer
+    got = {(w, l) for w, l in zip(*np.nonzero(out >= 100))}
+    assert got == {(0, 1), (0, 5), (1, 0), (1, 2), (1, 7)}
+    for s in range(k * cap):
+        if bool(dd.valid[s]):
+            assert out[int(dd.window[s]), int(dd.lane[s])] == 100 + s
+    assert (np.asarray(out)[2] == 0).all()        # untouched cycle slot
+
+
+@pytest.mark.parametrize("k", (2, 4))
+def test_deferred_serving_bit_matches_flush_every_1(stream_setup, k):
+    """The equivalence oracle: cross-window batching at flush_every=k
+    returns the same final predictions, flow table and accounting as the
+    per-window baseline (row-wise backend), with ceil(windows/k) backend
+    invocations — including the guaranteed partial flush at trace end."""
+    trace, art, backend = stream_setup
+    kw = dict(n_buckets=N_BUCKETS, window=256, threshold=0.9, capacity=32)
+    ref = StreamingHybridServer(art, backend, **kw)
+    p_ref, s_ref = ref.serve_trace(trace)
+    assert s_ref.n_flushes == s_ref.n_windows     # one invocation/window
+    srv = StreamingHybridServer(art, backend, flush_every=k, **kw)
+    p, s = srv.serve_trace(trace)
+    assert srv._fused_ok is True
+    np.testing.assert_array_equal(np.asarray(p), np.asarray(p_ref))
+    np.testing.assert_array_equal(np.asarray(srv.flow_table()),
+                                  np.asarray(ref.flow_table()))
+    assert s.n_windows == s_ref.n_windows
+    assert s.n_packets == s_ref.n_packets
+    assert s.fraction_handled == s_ref.fraction_handled
+    assert s.total_backend_rows == s_ref.total_backend_rows
+    assert s.n_deferred == s_ref.n_deferred
+    assert s.n_flushes == -(-s.n_windows // k)
+    assert s.n_windows % k != 0 or srv.pending_windows == 0
+
+
+def test_deferred_two_phase_matches_fused(stream_setup):
+    """Untraceable backend under deferral: the two-phase flush (host
+    backend over the accumulated buffer) is bit-identical to the fused
+    flush and to the per-window baseline."""
+    trace, art, backend = stream_setup
+    # same backend model as the fixture's, forced through numpy so the
+    # traceability probe fails and the two-phase flush runs
+    b, table = flow_features(trace, n_buckets=N_BUCKETS)
+    first_idx = np.unique(np.asarray(trace.flow_id), return_index=True)[1]
+    rows = np.asarray(table)[np.asarray(b)[first_idx]].astype(np.float32)
+    big = fit_random_forest(rows, trace.flow_label, n_classes=2,
+                            n_trees=12, max_depth=5, seed=1)
+
+    def np_backend(r):
+        return np.asarray(predict_tree_ensemble(big, np.asarray(r)))
+
+    kw = dict(n_buckets=N_BUCKETS, window=256, threshold=0.9, capacity=32,
+              flush_every=4)
+    fused = StreamingHybridServer(art, backend, **kw)
+    p_f, s_f = fused.serve_trace(trace)
+    assert fused._fused_ok is True
+    twop = StreamingHybridServer(art, np_backend, **kw)
+    p_t, s_t = twop.serve_trace(trace)
+    assert twop._fused_ok is False
+    np.testing.assert_array_equal(np.asarray(p_t), np.asarray(p_f))
+    assert s_t.n_flushes == s_f.n_flushes
+    assert s_t.total_backend_rows == s_f.total_backend_rows
+
+
+def test_deferred_step_returns_provisional_then_flush_patches(stream_setup):
+    """Manual stepping: step() under deferral returns switch-tier
+    provisional predictions; flush() back-patches the backend answers at
+    the recorded return addresses and matches the k=1 predictions."""
+    trace, art, backend = stream_setup
+    kw = dict(n_buckets=N_BUCKETS, window=256, threshold=0.9, capacity=32)
+    ref = StreamingHybridServer(art, backend, **kw)
+    srv = StreamingHybridServer(art, backend, flush_every=8, **kw)
+    ws = list(iter_windows(trace, 256, N_BUCKETS))[:3]   # partial cycle
+    ref_preds = [np.asarray(ref.step(w)[0]) for w in ws]
+    prov = [np.asarray(srv.step(w)[0]) for w in ws]
+    assert srv.pending_windows == 3
+    assert srv.consume_flush() is None            # cycle not full: no auto
+    n, patched = srv.flush()
+    assert n == 3 and srv.pending_windows == 0
+    for i in range(n):
+        np.testing.assert_array_equal(np.asarray(patched[i]), ref_preds[i])
+    # provisional rows differed exactly where the backend disagreed
+    for i in range(n):
+        diff = prov[i] != ref_preds[i]
+        assert (prov[i][diff] != -1).all()        # only real lanes patched
+    assert srv.flush() is None                    # nothing pending now
+    assert srv.stats.n_flushes == 1
+
+
+def test_flush_every_validation():
+    with pytest.raises(ValueError):
+        StreamingHybridServer(None, lambda r: r, flush_every=0)
+
+
+def test_flush_queue_keeps_every_unconsumed_cycle(stream_setup):
+    """Auto-flush results queue FIFO: stepping through several cycles
+    without consuming loses no cycle's back-patched predictions."""
+    trace, art, backend = stream_setup
+    kw = dict(n_buckets=N_BUCKETS, window=256, threshold=0.9, capacity=32)
+    ref = StreamingHybridServer(art, backend, **kw)
+    srv = StreamingHybridServer(art, backend, flush_every=2, **kw)
+    ws = list(iter_windows(trace, 256, N_BUCKETS))[:6]    # 3 full cycles
+    ref_preds = [np.asarray(ref.step(w)[0]) for w in ws]
+    for w in ws:                                  # never consume between
+        srv.step(w)
+    for c in range(3):                            # oldest first
+        n, patched = srv.consume_flush()
+        assert n == 2
+        for i in range(n):
+            np.testing.assert_array_equal(np.asarray(patched[i]),
+                                          ref_preds[2 * c + i])
+    assert srv.consume_flush() is None
+
+
+def test_serve_trace_flushes_stale_pending_on_entry(stream_setup):
+    """Windows pending from manual step() calls belong to a different
+    prediction stream: serve_trace flushes them on entry so their
+    patches can neither splice into nor shift its own output. Realistic
+    shape: a manual prefix of the stream, then serve_trace over the
+    rest — the rest's predictions must match a full serve_trace's."""
+    trace, art, backend = stream_setup
+    w_size = 256
+    t0 = float(np.asarray(trace.ts, np.float64).min())
+    kw = dict(n_buckets=N_BUCKETS, window=w_size, threshold=0.9,
+              capacity=32, flush_every=4)
+    ref = StreamingHybridServer(art, backend, **kw)
+    p_ref, s_ref = ref.serve_trace(trace, t0=t0)
+    srv = StreamingHybridServer(art, backend, **kw)
+    for w in list(iter_windows(trace, w_size, N_BUCKETS, t0=t0))[:2]:
+        srv.step(w)                               # 2 windows left pending
+    assert srv.pending_windows == 2
+    rest = dataclasses.replace(trace, **{
+        f.name: getattr(trace, f.name)[2 * w_size:]
+        for f in dataclasses.fields(trace) if f.name != "flow_label"})
+    p, s = srv.serve_trace(rest, t0=t0)
+    assert srv.pending_windows == 0
+    # the rest of the stream gets exactly the full-serve predictions;
+    # the pre-trace windows were flushed into stats, not spliced in
+    np.testing.assert_array_equal(np.asarray(p),
+                                  np.asarray(p_ref)[2 * w_size:])
+    assert s.n_windows == s_ref.n_windows
+    assert s.total_backend_rows == s_ref.total_backend_rows
+
+
+# ---------------------------------------------------------------------------
+# overflow telemetry: count only newly saturated slots
+# ---------------------------------------------------------------------------
+
+def _one_packet_window(bucket, ts, length):
+    return PacketWindow(bucket=jnp.asarray([bucket], jnp.int32),
+                        ts=jnp.asarray([ts], jnp.float32),
+                        length=jnp.asarray([length], jnp.float32),
+                        is_fwd=jnp.ones((1,), jnp.float32),
+                        valid=jnp.ones((1,), bool))
+
+
+def test_overflow_counts_once_across_windows():
+    """Regression: the overflow guard used to re-count every already-
+    saturated slot each window, inflating StreamStats.overflow linearly
+    with stream length. With the pre-update registers threaded through
+    (``prev``), a slot counts exactly once — when it first saturates —
+    and stays constant afterwards even as traffic keeps arriving."""
+    state = init_flow_table(16)
+    # window 1: one giant packet saturates byte_count AND fwd_bytes
+    prev = state
+    state = update_flow_table(state,
+                              _one_packet_window(3, 0.0,
+                                                 OVERFLOW_LIMIT + 1024.0))
+    state, _, n1 = lifecycle_sweep(state, _one_packet_window(3, 0.0, 1.0),
+                                   None, True, prev=prev)
+    assert int(n1) == 2
+    assert float(state.byte_count[3]) == OVERFLOW_LIMIT  # clamped
+    # window 2: more traffic to the saturated flow — NOT re-counted
+    prev = state
+    state = update_flow_table(state, _one_packet_window(3, 1.0, 2048.0))
+    state, _, n2 = lifecycle_sweep(state, _one_packet_window(3, 1.0, 1.0),
+                                   None, True, prev=prev)
+    assert int(n2) == 0
+    assert float(state.byte_count[3]) == OVERFLOW_LIMIT
+    # a different slot saturating later still counts (fwd+byte again)
+    prev = state
+    state = update_flow_table(state,
+                              _one_packet_window(9, 2.0,
+                                                 OVERFLOW_LIMIT + 8.0))
+    state, _, n3 = lifecycle_sweep(state, _one_packet_window(9, 2.0, 1.0),
+                                   None, True, prev=prev)
+    assert int(n3) == 2
