@@ -12,7 +12,7 @@
 Every timed pair is first checked bit-identical against the kernels/ref.py
 oracle — a speedup from wrong answers is not a speedup.
 
-Results go to ``BENCH_kernels.json`` (schema "bench-v1", see DESIGN.md §9)
+Results go to ``BENCH_kernels.json`` (schema "bench-v1", see DESIGN.md §10)
 next to the printed table. The headline configuration is the paper's
 feature-scaling regime (wide, shallow forests — Figs 4-5): many feature
 tables, switch-sized decision tables, where the table walk dominates and
@@ -108,19 +108,32 @@ def run(n=20000, seed=0, batches=(1024, 8192), iters=20,
                 ek.ensemble_lookup_pallas_loop, n_classes=art.n_classes,
                 vote=vote))
             fused_fn = jax.jit(ek.ensemble_lookup_fused)
-            tuned_fn = jax.jit(functools.partial(
-                ek.ensemble_lookup_fused, tile_n=tiles.tile_n,
-                edge_chunk=tiles.edge_chunk,
-                dtable_chunk=tiles.dtable_chunk, select=tiles.select))
 
             t_loop = _bench(lambda: loop_fn(
                 xb, art.edges, art.ftable, art.strides, dtable), iters)
             t_fused = _bench(lambda: fused_fn(
                 xb, art.edges, art.ftable_flat, art.dtable_flat,
                 art.dtable_pad), iters)
-            t_tuned = _bench(lambda: tuned_fn(
-                xb, art.edges, art.ftable_flat, art.dtable_flat,
-                art.dtable_pad), iters)
+            # time the realization the tuner actually picked — it may be
+            # the loop kernel or the XLA reference (tuning.candidate_tiles
+            # includes both, so a shape where fused loses tunes *away*
+            # from it instead of to the least-bad fused config)
+            if tiles.impl == "loop":
+                t_tuned = t_loop      # identical fn+args timed just above
+            elif tiles.impl == "ref":
+                ref_fn = jax.jit(functools.partial(
+                    ref.ensemble_lookup_ref, n_classes=art.n_classes,
+                    vote=vote))
+                t_tuned = _bench(lambda: ref_fn(
+                    xb, art.edges, art.ftable, art.strides, dtable), iters)
+            else:
+                tuned_fn = jax.jit(functools.partial(
+                    ek.ensemble_lookup_fused, tile_n=tiles.tile_n,
+                    edge_chunk=tiles.edge_chunk,
+                    dtable_chunk=tiles.dtable_chunk, select=tiles.select))
+                t_tuned = _bench(lambda: tuned_fn(
+                    xb, art.edges, art.ftable_flat, art.dtable_flat,
+                    art.dtable_pad), iters)
 
             best = min(t_fused, t_tuned)
             rows.append({
@@ -132,7 +145,8 @@ def run(n=20000, seed=0, batches=(1024, 8192), iters=20,
                 "tiles": {"tile_n": tiles.tile_n,
                           "edge_chunk": tiles.edge_chunk,
                           "dtable_chunk": tiles.dtable_chunk,
-                          "select": tiles.select},
+                          "select": tiles.select,
+                          "impl": tiles.impl},
                 "bit_exact": True,
             })
 

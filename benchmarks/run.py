@@ -1,10 +1,10 @@
 """Run every paper-table benchmark: ``python -m benchmarks.run``.
 
-One module per paper table/figure (see DESIGN.md §10). Pass --quick for
+One module per paper table/figure (see DESIGN.md §11). Pass --quick for
 reduced sample sizes (CI), --only <name> for a single benchmark.
 
 Besides the printed tables, the suite writes machine-readable
-``BENCH_benchmarks.json`` (schema "bench-v1", see DESIGN.md §9): one row
+``BENCH_benchmarks.json`` (schema "bench-v1", see DESIGN.md §10): one row
 per benchmark with its wall time and whatever its run() returned, so the
 perf trajectory of the repo is tracked run over run. The other bench-v1
 emitters — ``kernel_microbench`` (BENCH_kernels.json), ``stream_bench``

@@ -1,4 +1,4 @@
-"""Streaming serving microbenchmark: packets/sec vs window size.
+"""Streaming serving microbenchmark: packets/sec vs window size + chunking.
 
 ``python -m benchmarks.stream_bench`` drives the StreamingHybridServer
 over a synthetic packet trace at several window sizes and reports
@@ -13,7 +13,18 @@ Before any timing, the equivalence oracle runs: streaming the trace over
 W windows must reproduce the batch ``flow_features`` table bit for bit
 (a speedup from drifted registers is not a speedup).
 
-Results go to ``BENCH_stream.json`` (schema "bench-v1", DESIGN.md §9).
+The chunked sweep (DESIGN.md §8) times the device-resident megastep —
+``step_chunk`` over (K, W) PacketChunks, one scan dispatch and one
+backend invocation per K windows — against the per-window baseline on
+the *same trace*, gated on two oracles:
+
+* chunked ``serve_trace`` predictions (including the deferred
+  back-patching) must equal the per-window baseline bit for bit;
+* at the smallest window the best chunked row must clear >= 3x the
+  baseline packets/sec — the subsystem's acceptance bar (small windows
+  are exactly where per-window dispatch overhead collapses throughput).
+
+Results go to ``BENCH_stream.json`` (schema "bench-v1", DESIGN.md §10).
 """
 
 from __future__ import annotations
@@ -29,7 +40,8 @@ from repro.core.mapping import map_tree_ensemble
 from repro.ml.trees import fit_random_forest, predict_tree_ensemble
 from repro.netsim.features import flow_features
 from repro.netsim.packets import synth_trace
-from repro.netsim.stream import iter_windows, stream_flow_features
+from repro.netsim.stream import iter_chunks, iter_windows, \
+    stream_flow_features
 from repro.serving.stream_serving import StreamingHybridServer
 
 
@@ -47,15 +59,17 @@ def _models(trace, n_buckets):
     return art, (lambda r: predict_tree_ensemble(big, r))
 
 
-def run(n_flows=4000, windows=(256, 1024, 4096), n_buckets=1 << 13,
-        threshold=0.9, capacity=64, repeats=3, seed=0,
-        out="BENCH_stream.json"):
+def run(n_flows=4000, windows=(256, 1024, 4096), chunks=(4, 16, 64),
+        n_buckets=1 << 13, threshold=0.9, capacity=64, repeats=3, seed=0,
+        min_speedup=3.0, out="BENCH_stream.json"):
     t_suite = time.time()
     trace = synth_trace(n_flows=n_flows, seed=seed)
     _, batch_table = flow_features(trace, n_buckets=n_buckets)
 
     art, backend = _models(trace, n_buckets)
+    kw = dict(n_buckets=n_buckets, threshold=threshold, capacity=capacity)
     rows = []
+    base_preds = None
     for w_size in windows:
         # equivalence oracle per window size: streaming at THIS chunking
         # must reproduce the batch flow table before its numbers count
@@ -63,9 +77,7 @@ def run(n_flows=4000, windows=(256, 1024, 4096), n_buckets=1 << 13,
                                                window=w_size)
         np.testing.assert_array_equal(np.asarray(stream_table),
                                       np.asarray(batch_table))
-        srv = StreamingHybridServer(art, backend, n_buckets=n_buckets,
-                                    window=w_size, threshold=threshold,
-                                    capacity=capacity)
+        srv = StreamingHybridServer(art, backend, window=w_size, **kw)
         ws = list(iter_windows(trace, w_size, n_buckets))
         # warm pass: compile + backend probe
         for w in ws:
@@ -80,12 +92,19 @@ def run(n_flows=4000, windows=(256, 1024, 4096), n_buckets=1 << 13,
             jax.block_until_ready(pred)        # single end-of-stream sync
             best = min(best, time.perf_counter() - t0)
         stats = srv.stats
+        if w_size == min(windows):
+            # baseline predictions the chunk-sweep oracle is gated against
+            # (its *timing* baseline is re-measured interleaved below)
+            srv.reset()
+            base_preds, _ = srv.serve_trace(trace)
+            base_preds = np.asarray(base_preds)
         rows.append({
             "window": w_size,
             "n_packets": trace.n_packets,
             "n_windows": len(ws),
             "wall_s": round(best, 4),
             "pkts_per_s": round(trace.n_packets / best, 1),
+            "us_per_window": round(best / len(ws) * 1e6, 1),
             "fraction_handled": round(stats.fraction_handled, 4),
             "backend_rows": stats.total_backend_rows,
             "bit_consistent": True,
@@ -93,22 +112,104 @@ def run(n_flows=4000, windows=(256, 1024, 4096), n_buckets=1 << 13,
 
     print_table("Streaming hybrid serving — packets/sec vs window size",
                 ["window", "pkts", "windows", "wall_s", "pkts/s",
-                 "frac_handled", "backend_rows"],
+                 "us/window", "frac_handled", "backend_rows"],
                 [[r["window"], r["n_packets"], r["n_windows"], r["wall_s"],
-                  r["pkts_per_s"], r["fraction_handled"], r["backend_rows"]]
-                 for r in rows])
+                  r["pkts_per_s"], r["us_per_window"],
+                  r["fraction_handled"], r["backend_rows"]] for r in rows])
 
+    # -- chunked megastep sweep at the smallest window (the regime where
+    # -- per-window dispatch overhead dominates — DESIGN.md §8) ------------
+    #
+    # The baseline is re-timed here, interleaved round-robin with every
+    # chunked configuration: a machine-load spike then degrades the same
+    # round of *all* configurations instead of silently skewing the
+    # speedup ratio one way, and min-over-rounds recovers the true cost
+    # of each (same min-robustness rationale as the kernel microbench).
+    w_size = min(windows)
+    srv_base = StreamingHybridServer(art, backend, window=w_size, **kw)
+    ws = list(iter_windows(trace, w_size, n_buckets))
+    chunk_srvs, chunk_stats = {}, {}
+    for k in chunks:
+        srv = StreamingHybridServer(art, backend, window=w_size,
+                                    chunk_windows=k, **kw)
+        # oracle: chunked predictions (incl. back-patching) must equal the
+        # per-window baseline bit for bit before the numbers count
+        preds, stats = srv.serve_trace(trace)
+        np.testing.assert_array_equal(np.asarray(preds), base_preds)
+        chunk_srvs[k] = (srv, list(iter_chunks(trace, w_size, k, n_buckets)))
+        chunk_stats[k] = stats
+    for w in ws:                                       # warm the baseline
+        pred, _ = srv_base.step(w)
+    jax.block_until_ready(pred)
+    t_base, t_chunk = float("inf"), {k: float("inf") for k in chunks}
+    for _ in range(max(repeats, 3)):
+        srv_base.reset()
+        t0 = time.perf_counter()
+        for w in ws:
+            pred, _ = srv_base.step(w)
+        jax.block_until_ready(pred)            # single end-of-stream sync
+        t_base = min(t_base, time.perf_counter() - t0)
+        for k in chunks:
+            srv, cs = chunk_srvs[k]
+            srv.reset()
+            t0 = time.perf_counter()
+            for c in cs:
+                pred, _ = srv.step_chunk(c)
+            jax.block_until_ready(pred)
+            t_chunk[k] = min(t_chunk[k], time.perf_counter() - t0)
+    n_win = len(ws)
+    c_rows = []
+    for k in chunks:
+        best = t_chunk[k]
+        c_rows.append({
+            "window": w_size,
+            "chunk_windows": k,
+            "n_packets": trace.n_packets,
+            "n_chunks": len(chunk_srvs[k][1]),
+            "wall_s": round(best, 4),
+            "pkts_per_s": round(trace.n_packets / best, 1),
+            "us_per_window": round(best / n_win * 1e6, 1),
+            "baseline_pkts_per_s": round(trace.n_packets / t_base, 1),
+            "speedup_vs_per_window": round(t_base / best, 2),
+            "backend_invocations": chunk_stats[k].n_flushes,
+            "bit_consistent": True,
+        })
+    print_table("Device-resident chunked megastep — packets/sec vs chunk "
+                f"size (window={w_size})",
+                ["chunk", "pkts", "chunks", "wall_s", "pkts/s", "us/window",
+                 "speedup", "backend_invocations"],
+                [[r["chunk_windows"], r["n_packets"], r["n_chunks"],
+                  r["wall_s"], r["pkts_per_s"], r["us_per_window"],
+                  r["speedup_vs_per_window"], r["backend_invocations"]]
+                 for r in c_rows])
+
+    # acceptance: the chunked megastep must beat the per-window baseline
+    # >= 3x at the smallest window (a chunked path that only matches it
+    # is paying the scan for nothing). --quick lowers the gate to a 2x
+    # regression tripwire: at CI toy sizes the final chunk is mostly
+    # dead-window padding (53 windows -> 21% waste at K=16), which the
+    # full-size run that produces the committed BENCH_stream.json does
+    # not suffer.
+    best_speedup = max(r["speedup_vs_per_window"] for r in c_rows)
+    assert best_speedup >= min_speedup, (
+        f"chunked serving at window={w_size}: best speedup {best_speedup}x "
+        f"vs per-window baseline — expected >= {min_speedup}x")
+
+    wall = round(time.time() - t_suite, 3)
     benches = [{"name": "stream_serving",
                 "paper_ref": "§5 challenge (ii) / pForest",
-                "ok": True, "rows": rows,
-                "wall_s": round(time.time() - t_suite, 3)}]
+                "ok": True, "rows": rows, "wall_s": wall},
+               {"name": "stream_chunked",
+                "paper_ref": "§5 challenge (ii) / pForest",
+                "ok": True, "rows": c_rows, "wall_s": wall}]
     if out:
         write_bench_json(out, "stream", benches,
                          config={"n_flows": n_flows, "windows": list(windows),
+                                 "chunks": list(chunks),
                                  "n_buckets": n_buckets,
                                  "threshold": threshold,
                                  "capacity": capacity, "repeats": repeats})
-    return rows
+    return rows + c_rows
 
 
 def main(argv=None):
@@ -117,7 +218,8 @@ def main(argv=None):
     ap.add_argument("--out", default="BENCH_stream.json")
     args = ap.parse_args(argv)
     if args.quick:
-        run(n_flows=1200, windows=(256, 1024), repeats=2, out=args.out)
+        run(n_flows=1200, windows=(256, 1024), chunks=(4, 16), repeats=2,
+            min_speedup=2.0, out=args.out)
     else:
         run(out=args.out)
 

@@ -138,6 +138,30 @@ def defer_window(dd: DeferredDispatch, buf: jax.Array, idx: jax.Array,
         valid=jax.lax.dynamic_update_slice(dd.valid, valid, (row0,)))
 
 
+def chunk_dispatch(xs: jax.Array, fwd: jax.Array,
+                   capacity: int) -> DeferredDispatch:
+    """Vectorized per-window dispatch over a whole chunk of windows.
+
+    xs (K, W, F) feature rows, fwd (K, W) forward masks -> one
+    ``DeferredDispatch`` covering the chunk: ``dispatch`` vmapped over
+    the window axis (every window still capacity-bounded exactly as the
+    per-window path bounds it — the bit-equality contract of the chunked
+    megastep), the (window, lane) return addresses laid out row-major so
+    slot ``k*capacity + i`` is window k's i-th dispatched row. Built in
+    one shot from stacked scan outputs — nothing is carried through the
+    scan and no per-window buffer writes happen; ``backpatch_pending``
+    consumes it unchanged.
+    """
+    k, w, f = xs.shape
+    buf, idx, valid = jax.vmap(lambda x1, f1: dispatch(x1, f1, capacity))(
+        xs, fwd)
+    return DeferredDispatch(
+        buf=buf.reshape(k * capacity, f),
+        lane=idx.reshape(-1).astype(jnp.int32),
+        window=jnp.repeat(jnp.arange(k, dtype=jnp.int32), capacity),
+        valid=valid.reshape(-1))
+
+
 def backpatch_pending(pending: jax.Array, backend_pred: jax.Array,
                       dd: DeferredDispatch) -> jax.Array:
     """Scatter flushed backend answers into the per-window pending set.

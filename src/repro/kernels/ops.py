@@ -32,6 +32,7 @@ from repro.kernels import ensemble_lookup as _ek
 from repro.kernels import evict as _ev
 from repro.kernels import classical_lookup as _ck
 from repro.kernels import ref as _ref
+from repro.kernels import stream_update as _su
 from repro.kernels.tuning import DEFAULT_TILES, TileConfig
 
 VMEM_BUDGET_BYTES = 8 * 1024 * 1024   # half of a v5e core's ~16MB VMEM
@@ -103,6 +104,37 @@ def evict_fill(regs, mask, fills, *, use_pallas=None, interpret=None):
     out = _ev.evict_fill_pallas(regs, mask, fills, interpret=interpret,
                                 tile_b=tile)
     return out[:, :n]
+
+
+def stream_update(regs, bucket, ts, length, is_fwd, valid, *, limit=None,
+                  use_pallas=None, interpret=None):
+    """Fused streaming register scatter + touched-row gather.
+
+    regs (8, N) f32 stacked register file (``netsim.stream.
+    REGISTER_FIELDS`` order); bucket/ts/length/is_fwd/valid the (W,)
+    window columns -> (new_regs (8, N), rows (8, W)): the window folded
+    into the registers (count registers clamped at ``limit`` when given
+    — the 2^24 overflow guard) and each lane's updated register row.
+    Pallas on TPU (``kernels.stream_update``: one VMEM pass per bucket
+    tile, no HBM round-trip between scatter and gather), the XLA
+    segment/gather reference elsewhere — bit-identical by the
+    integer-exactness/associativity argument in the kernel docstring.
+    """
+    regs = jnp.asarray(regs, jnp.float32)
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if not use_pallas:
+        return _ref.stream_update_ref(regs, bucket, ts, length, is_fwd,
+                                      valid, limit=limit)
+    r, n = regs.shape
+    tile = min(_su.TILE_B, n) if n % _su.TILE_B else _su.TILE_B
+    pad = (-n) % tile
+    if pad:
+        regs = jnp.pad(regs, ((0, 0), (0, pad)))   # bucket < n: never matched
+    new_regs, rows = _su.stream_update_pallas(
+        regs, bucket, ts, length, is_fwd, valid, limit=limit,
+        interpret=interpret, tile_b=tile)
+    return new_regs[:, :n], rows
 
 
 def bucketize(x, edges, *, use_pallas=None):
@@ -223,16 +255,21 @@ def fused_classify(art: TableArtifact, x, *, use_pallas=None,
 
     use_pallas=None auto-routes: Pallas on TPU, XLA reference otherwise.
     Pass use_pallas=True on CPU to exercise interpret mode (tests do).
-    tiles overrides the kernel tile sizes (see kernels.tuning.autotune_tiles).
+    tiles overrides the kernel tile sizes (see kernels.tuning.autotune_tiles)
+    and the realization: ``tiles.impl`` picks the fused single-matmul
+    kernel (default), the per-feature-loop kernel ('loop', tree artifacts
+    only) or the XLA gather reference ('ref') — all bit-identical, so the
+    autotuner is free to pick whichever is fastest for the artifact shape.
     """
     if use_pallas is None:
         use_pallas = _on_tpu()
     tiles = tiles or DEFAULT_TILES
     x = jnp.asarray(x, jnp.float32)
+    impl = tiles.impl if (use_pallas and fits_vmem(art)) else "ref"
 
     if art.ftable is not None:
         vote = art.agg == "vote"
-        if use_pallas and fits_vmem(art):
+        if impl == "fused":
             ftable_flat, dtable_flat, dtable_pad = _flat_tree_tables(art, vote)
             xp, n = _pad_batch(x, tiles.tile_n)
             out = _ek.ensemble_lookup_fused(
@@ -243,14 +280,24 @@ def fused_classify(art: TableArtifact, x, *, use_pallas=None,
                 select=tiles.select)[:n]
         else:
             dtable = (art.dtable_class if vote else art.dtable_value.q)
-            out = _ref.ensemble_lookup_ref(
-                x, art.edges, art.ftable, art.strides,
-                dtable.astype(jnp.float32),
-                n_classes=art.n_classes, vote=vote)
+            if impl == "loop":
+                xp, n = _pad_batch(x, _ek.TILE_N)
+                out = _ek.ensemble_lookup_pallas_loop(
+                    xp, art.edges, art.ftable, art.strides,
+                    dtable.astype(jnp.float32), n_classes=art.n_classes,
+                    vote=vote, interpret=interpret)[:n]
+            else:
+                out = _ref.ensemble_lookup_ref(
+                    x, art.edges, art.ftable, art.strides,
+                    dtable.astype(jnp.float32),
+                    n_classes=art.n_classes, vote=vote)
         return _tree_epilogue(art, out)
 
+    if impl == "loop":
+        raise ValueError("impl='loop' is the per-feature-loop tree kernel; "
+                         "classical artifacts have no loop realization")
     m = art.vtable.q.shape[2]
-    if use_pallas and fits_vmem(art):
+    if impl == "fused":
         xp, n = _pad_batch(x, tiles.tile_n)
         out = _ck.classical_lookup_fused(
             xp, art.edges, _flat_vtable(art), interpret=interpret,

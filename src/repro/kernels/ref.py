@@ -40,6 +40,49 @@ def classical_lookup_ref(x, edges, vtable) -> jax.Array:
     return vals.astype(jnp.float32).sum(axis=1)
 
 
+def stream_update_ref(regs, bucket, ts, length, is_fwd, valid, *,
+                      limit=None):
+    """Oracle for the fused streaming scatter/readout kernel.
+
+    regs (8, N) f32 — the stacked register file in
+    ``netsim.stream.REGISTER_FIELDS`` order (pkt_count, byte_count,
+    t_min, t_max, fwd_pkts, rev_pkts, fwd_bytes, rev_bytes); window
+    columns (W,). Returns (new_regs (8, N), rows (8, W)): the register
+    file with this window folded in (count registers clamped at
+    ``limit`` when given — the 2^24 overflow guard) and the updated
+    register rows gathered at each lane's bucket.
+
+    Mirrors ``netsim.stream.update_flow_table`` + ``saturate_counts``
+    op for op (same masked segment primitives, same identity pinning,
+    same clamp) so the composition is bit-identical — the layering keeps
+    this module free of netsim imports, so the mirroring is asserted by
+    tests rather than shared code.
+    """
+    n = regs.shape[1]
+    v = valid.astype(jnp.float32)
+    ln, fwd = length, is_fwd
+    seg = lambda x: jax.ops.segment_sum(x, bucket, num_segments=n)
+    inf = jnp.float32(jnp.inf)
+    w_min = jax.ops.segment_min(jnp.where(valid, ts, inf), bucket,
+                                num_segments=n)
+    w_max = jax.ops.segment_max(jnp.where(valid, ts, -inf), bucket,
+                                num_segments=n)
+    new = [regs[0] + seg(v),
+           regs[1] + seg(ln * v),
+           jnp.minimum(regs[2], w_min),
+           jnp.maximum(regs[3], w_max),
+           regs[4] + seg(fwd * v),
+           regs[5] + seg((1.0 - fwd) * v),
+           regs[6] + seg(ln * fwd * v),
+           regs[7] + seg(ln * (1.0 - fwd) * v)]
+    if limit is not None:
+        lim = jnp.float32(limit)
+        for i in (0, 1, 4, 5, 6, 7):              # count registers only
+            new[i] = jnp.minimum(new[i], lim)
+    new_regs = jnp.stack(new)
+    return new_regs, new_regs[:, bucket]
+
+
 def decode_attention_int8_ref(q, k_q, k_s, v_q, v_s, valid, *, scale):
     """Dense oracle for the int8-KV decode-attention kernel.
 

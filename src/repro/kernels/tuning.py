@@ -34,6 +34,13 @@ class TileConfig:
     edge_chunk: int = 32
     dtable_chunk: int = 512
     select: str = "auto"     # decision-select strategy: matmul|compare|auto
+    impl: str = "fused"      # kernel realization: fused|loop|ref — the
+                             # autotune sweep includes the per-feature-loop
+                             # kernel and the XLA gather reference as
+                             # candidates, so shapes where the fused
+                             # single-matmul loses (narrow/deep artifacts;
+                             # BENCH_kernels.json rf_narrow) tune to the
+                             # faster strategy instead of a regression
 
 
 DEFAULT_TILES = TileConfig()
@@ -76,7 +83,12 @@ def _time_config(art, x, tiles: TileConfig, reps: int) -> float:
 
 
 def candidate_tiles(batch: int) -> list:
-    """Small sweep: grid granularity × chunking × select strategy."""
+    """Small sweep: grid granularity × chunking × select strategy, plus
+    the non-fused realizations (the per-feature-loop kernel and the XLA
+    gather reference). Without them the tuner could only pick the least-
+    bad *fused* config — on shapes where the fused single-matmul loses
+    outright (BENCH_kernels.json: rf_narrow at 0.866x) that is a tuned
+    regression; with them the loser falls back to the faster strategy."""
     cands = []
     for tile_n in (128, 512):
         if tile_n > batch:
@@ -86,7 +98,11 @@ def candidate_tiles(batch: int) -> list:
                 cands.append(TileConfig(tile_n=tile_n, edge_chunk=32,
                                         dtable_chunk=dtable_chunk,
                                         select=select))
-    return cands or [DEFAULT_TILES]
+    if not cands:       # batch below every tile: still time default fused
+        cands.append(DEFAULT_TILES)
+    cands.append(TileConfig(impl="loop"))   # skipped where unsupported
+    cands.append(TileConfig(impl="ref"))
+    return cands
 
 
 def autotune_tiles(art, *, batch: int = 2048, reps: int = 2,

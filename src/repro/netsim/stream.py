@@ -128,29 +128,32 @@ def update_flow_table(state: FlowTableState,
                       window: PacketWindow) -> FlowTableState:
     """Fold one window into the register file (pure; jit/donation safe).
 
-    Sums ride masked segment_sum; first/last ts ride segment_min/max with
-    invalid lanes pinned to the identity, then merge into the carry with
-    elementwise min/max — the exact streaming decomposition of the batch
-    segment reductions.
+    Sums ride masked scatter-adds *into the carry* (``.at[b].add``: an
+    invalid lane adds exactly 0.0 — a bitwise no-op on the non-negative
+    count registers); first/last ts ride scatter-min/max with invalid
+    lanes pinned to the reduction identity. Under donation the scatters
+    update the carried buffers in place — no per-window materialization
+    of ``n_buckets``-sized temporaries, which dominated the old
+    segment_sum formulation (zeroed (n_buckets,) output + full-array add
+    per register, 8x per window). Bit-identical to the batch segment
+    reductions in any association order while the registers stay in the
+    integer-exactness envelope (counts below 2^24; min/max are exact
+    always) — the same contract the streaming tier already documents.
     """
-    b, n = window.bucket, state.n_buckets
+    b = window.bucket
     w = window.valid.astype(jnp.float32)
-    seg = lambda v: jax.ops.segment_sum(v, b, num_segments=n)
     inf = jnp.float32(jnp.inf)
-    w_min = jax.ops.segment_min(jnp.where(window.valid, window.ts, inf),
-                                b, num_segments=n)
-    w_max = jax.ops.segment_max(jnp.where(window.valid, window.ts, -inf),
-                                b, num_segments=n)
     ln, fwd = window.length, window.is_fwd
     return FlowTableState(
-        pkt_count=state.pkt_count + seg(w),
-        byte_count=state.byte_count + seg(ln * w),
-        t_min=jnp.minimum(state.t_min, w_min),
-        t_max=jnp.maximum(state.t_max, w_max),
-        fwd_pkts=state.fwd_pkts + seg(fwd * w),
-        rev_pkts=state.rev_pkts + seg((1.0 - fwd) * w),
-        fwd_bytes=state.fwd_bytes + seg(ln * fwd * w),
-        rev_bytes=state.rev_bytes + seg(ln * (1.0 - fwd) * w))
+        pkt_count=state.pkt_count.at[b].add(w),
+        byte_count=state.byte_count.at[b].add(ln * w),
+        t_min=state.t_min.at[b].min(jnp.where(window.valid, window.ts, inf)),
+        t_max=state.t_max.at[b].max(jnp.where(window.valid, window.ts,
+                                              -inf)),
+        fwd_pkts=state.fwd_pkts.at[b].add(fwd * w),
+        rev_pkts=state.rev_pkts.at[b].add((1.0 - fwd) * w),
+        fwd_bytes=state.fwd_bytes.at[b].add(ln * fwd * w),
+        rev_bytes=state.rev_bytes.at[b].add(ln * (1.0 - fwd) * w))
 
 
 def age_out(state: FlowTableState, evict_before,
@@ -216,6 +219,20 @@ def saturate_counts(state: FlowTableState, *, limit: float = OVERFLOW_LIMIT,
     return dataclasses.replace(state, **upd), n_over
 
 
+def evict_cutoff(ts, valid, evict_age: float):
+    """Aging cutoff for one window: ``min(now - evict_age, window_min)``.
+
+    Strictly no later than every timestamp in the window, so a flow seen
+    in this window always survives it by construction — the single
+    definition the reference sweep (``lifecycle_sweep``) and the chunked
+    scan (``chunk_update_readout``) share; the bit-identity contract
+    between the paths depends on the cutoff never diverging.
+    """
+    now = jnp.max(jnp.where(valid, ts, -jnp.inf))
+    w_min = jnp.min(jnp.where(valid, ts, jnp.inf))
+    return jnp.minimum(now - jnp.float32(evict_age), w_min)
+
+
 def lifecycle_sweep(state: FlowTableState, w: "PacketWindow",
                     evict_age: Optional[float], saturate: bool,
                     prev: Optional[FlowTableState] = None) -> tuple:
@@ -236,10 +253,7 @@ def lifecycle_sweep(state: FlowTableState, w: "PacketWindow",
     n_ev = jnp.zeros((), jnp.int32)
     n_ov = jnp.zeros((), jnp.int32)
     if evict_age is not None:
-        now = jnp.max(jnp.where(w.valid, w.ts, -jnp.inf))
-        w_min = jnp.min(jnp.where(w.valid, w.ts, jnp.inf))
-        cutoff = jnp.minimum(now - jnp.float32(evict_age), w_min)
-        state, n_ev = age_out(state, cutoff)
+        state, n_ev = age_out(state, evict_cutoff(w.ts, w.valid, evict_age))
     if saturate:
         state, n_ov = saturate_counts(state, prev=prev)
     return state, n_ev, n_ov
@@ -263,9 +277,221 @@ def flow_table_readout(state: FlowTableState,
     return table_from_registers(*regs)
 
 
+def window_update_readout(state: FlowTableState, w: PacketWindow, *,
+                          evict_age: Optional[float] = None,
+                          saturate: bool = True,
+                          use_pallas: Optional[bool] = None,
+                          interpret: Optional[bool] = None) -> tuple:
+    """Fold one window and read out its touched-flow feature rows.
+
+    The serving steps' register half: update → aging sweep → overflow
+    guard → touched-row readout, returning ``(state, x (W, 8), n_evicted,
+    n_overflow)``. With ``use_pallas`` (default: auto, TPU only) the
+    scatter-update, the 2^24 clamp and the touched-row gather run as ONE
+    fused VMEM pass (``kernels.stream_update``) instead of scattering to
+    HBM and gathering back; the XLA composition is the bit-equality
+    oracle. The fusion is exact because
+
+      * eviction cannot touch this window's rows (``evict_cutoff`` is
+        clamped to the window minimum, so a flow seen here never evicts
+        here) — sweeping *after* the gather reads the same bits;
+      * clamping commutes with eviction (fills are in-envelope) and
+        ``saturate_counts`` on an already-clamped file is a bitwise no-op
+        that still counts newly saturated slots against ``prev``.
+    """
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+    prev = state
+    if not use_pallas:
+        state = update_flow_table(state, w)
+        state, n_ev, n_ov = lifecycle_sweep(state, w, evict_age, saturate,
+                                            prev=prev)
+        return state, flow_table_readout(state, w.bucket), n_ev, n_ov
+    from repro.kernels.ops import stream_update
+    regs = jnp.stack([getattr(state, f) for f in REGISTER_FIELDS])
+    new_regs, rows = stream_update(
+        regs, w.bucket, w.ts, w.length, w.is_fwd, w.valid,
+        limit=OVERFLOW_LIMIT if saturate else None, interpret=interpret)
+    state = FlowTableState(**{f: new_regs[i]
+                              for i, f in enumerate(REGISTER_FIELDS)})
+    # the shared sweep: the aging cutoff cannot touch this window's rows
+    # and the clamp already landed in-kernel (saturate_counts is then a
+    # bitwise no-op that still counts newly saturated slots vs ``prev``)
+    state, n_ev, n_ov = lifecycle_sweep(state, w, evict_age, saturate,
+                                        prev=prev)
+    x = table_from_registers(*(rows[i] for i in range(len(REGISTER_FIELDS))))
+    return state, x, n_ev, n_ov
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class PacketChunk:
+    """K windows stacked into one (K, W) device transfer.
+
+    The chunked serving path (`serving.stream_serving`) runs the whole
+    chunk as a single jitted ``lax.scan`` megastep, so the per-window
+    Python→device dispatch cost is paid once per K windows. Leading-axis
+    slices are exactly the ``PacketWindow``s the per-window path would
+    have seen (the bit-equality oracle depends on this); a ragged final
+    chunk is padded with *dead* windows — every lane invalid — which fold
+    nothing into the registers, dispatch nothing, and report -1
+    predictions on every lane.
+    """
+    bucket: jax.Array    # (K, W) int32 flow-hash bucket ids
+    ts: jax.Array        # (K, W) f32 rebased seconds
+    length: jax.Array    # (K, W) f32 packet bytes
+    is_fwd: jax.Array    # (K, W) f32 1.0 = forward
+    valid: jax.Array     # (K, W) bool (all-False row = dead pad window)
+
+    @property
+    def n_windows(self) -> int:
+        return self.bucket.shape[0]
+
+    @property
+    def window(self) -> int:
+        return self.bucket.shape[1]
+
+
+def _trace_columns(trace, n_buckets: int, t0: Optional[float], bucket):
+    """Host-side per-packet columns shared by every window/chunk iterator.
+
+    Rebasing stays in float64 on host (see module docstring) and the
+    bucket hash is order-free, so both iterators present bit-identical
+    lanes to the jitted steps.
+    """
+    ts64 = np.asarray(trace.ts, np.float64)
+    if t0 is None:
+        t0 = float(ts64.min()) if ts64.size else 0.0
+    if bucket is None:
+        bucket = fnv1a_hash(
+            trace.src_ip, trace.dst_ip, trace.sport, trace.dport,
+            trace.proto, n_buckets=n_buckets)
+    return dict(bucket=np.asarray(bucket, np.int32),
+                ts=rebase_ts_np(ts64, t0),
+                length=np.asarray(trace.length, np.float32),
+                is_fwd=(np.asarray(trace.direction) == 0)
+                .astype(np.float32))
+
+
+def _pad_columns(cols: dict, n: int, total: int) -> dict:
+    """Pad each (n,) column to ``total`` lanes replicating the last packet
+    — the same in-distribution discipline as ``kernels.ops.pad_window``,
+    applied once to the whole trace instead of per window."""
+    if total == n:
+        return cols
+    return {k: np.concatenate([v, np.repeat(v[n - 1:n], total - n, axis=0)])
+            for k, v in cols.items()}
+
+
+def chunk_update_readout(state: FlowTableState, chunk: PacketChunk, *,
+                         evict_age: Optional[float] = None,
+                         saturate: bool = True,
+                         use_pallas: Optional[bool] = None) -> tuple:
+    """Whole-chunk sequential register half: fold K windows, emit rows.
+
+    The chunked megastep's core — fold each of the chunk's K windows into
+    the register file in order and stack the (W, 8) touched-row readouts
+    as ``xs (K, W, 8)``; everything row-wise (classify, dispatch) runs on
+    the stacked rows *after* this returns. Returns
+    ``(state, xs, n_evicted, n_overflow)``, bit-identical to K
+    ``window_update_readout`` steps.
+
+    The XLA realization keeps the lax.scan body to the irreducibly
+    sequential five memory ops — scatter-add the counts, scatter-min the
+    2^24 clamp, scatter-min/max the timestamps, gather the touched rows —
+    by moving everything window-local out of the loop: per-lane
+    contribution vectors and identity-pinned timestamps are precomputed
+    for the whole chunk (vectorized scan inputs), the six count
+    registers ride ONE packed (N, 6) array and the two timestamp
+    registers one (N, 2) array (t_min and *negated* t_max share a single
+    scatter-min), and the feature derivation runs once over the stacked
+    (K*W, 8) raw rows after the scan. Clamping only touched rows equals
+    the per-window full-file clamp because the guard's invariant (every
+    count <= 2^24 after every window, from init 0) makes it a no-op
+    elsewhere. On TPU (``use_pallas``) the scan body is the fused Pallas
+    scatter/readout kernel instead — the packing would only
+    re-materialize what the kernel already holds in VMEM.
+
+    Overflow telemetry is counted once per chunk from the entry/exit
+    register files — exact, because clamped counts are monotone so a
+    slot crosses the envelope at most once per chunk — except when
+    eviction is also on (an evicted slot could re-cross), where a
+    carried below-envelope mask restores exact per-window counting.
+    """
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+    if use_pallas:
+        def body(state, cw):
+            w = PacketWindow(bucket=cw.bucket, ts=cw.ts, length=cw.length,
+                             is_fwd=cw.is_fwd, valid=cw.valid)
+            state, x, n_ev, n_ov = window_update_readout(
+                state, w, evict_age=evict_age, saturate=saturate,
+                use_pallas=True)
+            return state, (x, n_ev, n_ov)
+        state, (xs, n_evs, n_ovs) = jax.lax.scan(body, state, chunk)
+        return state, xs, jnp.sum(n_evs), jnp.sum(n_ovs)
+
+    lim = jnp.float32(OVERFLOW_LIMIT)
+    inf = jnp.float32(jnp.inf)
+    k, w_lanes = chunk.bucket.shape
+    # whole-chunk precompute: masked contribution vectors and pinned
+    # timestamps enter the scan as vectorized inputs, not body ops
+    wt = chunk.valid.astype(jnp.float32)
+    ln, fwd = chunk.length, chunk.is_fwd
+    vals = jnp.stack([wt, ln * wt, fwd * wt, (1.0 - fwd) * wt,
+                      ln * fwd * wt, ln * (1.0 - fwd) * wt], axis=2)
+    # t_min and -t_max share one packed scatter-min / gather
+    tpin = jnp.stack([jnp.where(chunk.valid, chunk.ts, inf),
+                      -jnp.where(chunk.valid, chunk.ts, -inf)], axis=2)
+    lim_rows = jnp.full((w_lanes, 6), lim)
+    counts0 = jnp.stack([getattr(state, f) for f in COUNT_FIELDS], axis=1)
+    tmm0 = jnp.stack([state.t_min, -state.t_max], axis=1)
+    # exact per-window overflow counting is only needed when eviction can
+    # reset a saturated slot mid-chunk (see docstring)
+    track_below = saturate and evict_age is not None
+    carry = (counts0, tmm0,
+             counts0 < lim if track_below else jnp.zeros((), jnp.int32),
+             jnp.zeros((), jnp.int32), jnp.zeros((), jnp.int32))
+
+    def body(carry, xs_in):
+        counts, tmm, below, n_ev, n_ov = carry
+        b, v, tp, valid, ts = xs_in
+        counts = counts.at[b].add(v)
+        if saturate:                       # clamp touched rows in place
+            counts = counts.at[b].min(lim_rows)
+        tmm = tmm.at[b].min(tp)
+        if evict_age is not None:
+            cutoff = evict_cutoff(ts, valid, evict_age)
+            evict = (counts[:, 0] > 0) & (-tmm[:, 1] < cutoff)
+            n_ev = n_ev + jnp.sum(evict.astype(jnp.int32))
+            counts = jnp.where(evict[:, None], 0.0, counts)
+            tmm = jnp.where(evict[:, None], inf, tmm)
+        if track_below:
+            n_ov = n_ov + jnp.sum(((counts >= lim) & below)
+                                  .astype(jnp.int32))
+            below = counts < lim
+        x = jnp.concatenate([counts[b], tmm[b]], axis=1)   # raw (W, 8)
+        return (counts, tmm, below, n_ev, n_ov), x
+
+    (counts, tmm, _, n_ev, n_ov), raw = jax.lax.scan(
+        body, carry, (chunk.bucket, vals, tpin, chunk.valid, chunk.ts))
+    if saturate and not track_below:       # once per chunk: exact (monotone)
+        n_ov = jnp.sum(((counts >= lim) & (counts0 < lim))
+                       .astype(jnp.int32))
+    raw = raw.reshape(k * w_lanes, 8)      # derive features post-scan
+    xs = table_from_registers(raw[:, 0], raw[:, 1], raw[:, 6], -raw[:, 7],
+                              raw[:, 2], raw[:, 3], raw[:, 4], raw[:, 5]
+                              ).reshape(k, w_lanes, FLOW_FEATURES)
+    state = FlowTableState(
+        t_min=tmm[:, 0], t_max=-tmm[:, 1],
+        **{f: counts[:, i] for i, f in enumerate(COUNT_FIELDS)})
+    return state, xs, n_ev, n_ov
+
+
 def iter_windows(trace, window: int, n_buckets: int, *,
                  t0: Optional[float] = None, bucket=None,
-                 pad: bool = True) -> Iterator[PacketWindow]:
+                 pad: bool = True, device: bool = True
+                 ) -> Iterator[PacketWindow]:
     """Chunk a PacketTrace into fixed-size PacketWindows.
 
     Hashing is elementwise (order-free), so per-window bucket ids equal
@@ -279,28 +505,73 @@ def iter_windows(trace, window: int, n_buckets: int, *,
     the true epoch as a register and corrects at readout. pad=True
     tile-pads the final ragged window to ``window`` lanes (valid=False)
     so every window presents one static shape to jitted consumers.
+
+    device=True (default) transfers each column ONCE and slices windows
+    on device — the per-window cost drops from four host→device copies
+    to one row slice of a resident (n_windows, W) array. device=False
+    keeps the host-slicing path for open-ended streams that are fed
+    window by window and can never be materialized whole; pad=False
+    implies it (a ragged window has no static device shape).
     """
-    ts64 = np.asarray(trace.ts, np.float64)
-    if t0 is None:
-        t0 = float(ts64.min()) if ts64.size else 0.0
-    rel = rebase_ts_np(ts64, t0)
-    if bucket is None:
-        bucket = fnv1a_hash(
-            trace.src_ip, trace.dst_ip, trace.sport, trace.dport,
-            trace.proto, n_buckets=n_buckets)
-    bucket = np.asarray(bucket)
-    length = np.asarray(trace.length, np.float32)
-    is_fwd = (np.asarray(trace.direction) == 0).astype(np.float32)
-    for s in range(0, len(rel), window):
+    cols = _trace_columns(trace, n_buckets, t0, bucket)
+    n = len(cols["ts"])
+    if not pad:
+        device = False
+    if device:
+        if not n:
+            return
+        n_win = -(-n // window)
+        cols = _pad_columns(cols, n, n_win * window)
+        dev = {k: jnp.asarray(v.reshape(n_win, window))
+               for k, v in cols.items()}
+        valid = jnp.asarray(
+            (np.arange(n_win * window) < n).reshape(n_win, window))
+        for k in range(n_win):
+            yield PacketWindow(valid=valid[k],
+                               **{f: dev[f][k] for f in dev})
+        return
+    for s in range(0, n, window):
         sl = slice(s, s + window)
-        cols = dict(bucket=jnp.asarray(bucket[sl]), ts=jnp.asarray(rel[sl]),
-                    length=jnp.asarray(length[sl]),
-                    is_fwd=jnp.asarray(is_fwd[sl]))
+        w_cols = {k: jnp.asarray(v[sl]) for k, v in cols.items()}
         if pad:
-            cols, valid, _ = pad_window(cols, window)
+            w_cols, valid, _ = pad_window(w_cols, window)
         else:
-            valid = jnp.ones(cols["bucket"].shape[0], bool)
-        yield PacketWindow(valid=valid, **cols)
+            valid = jnp.ones(w_cols["bucket"].shape[0], bool)
+        yield PacketWindow(valid=valid, **w_cols)
+
+
+def iter_chunks(trace, window: int, chunk_windows: int, n_buckets: int, *,
+                t0: Optional[float] = None, bucket=None
+                ) -> Iterator[PacketChunk]:
+    """Stack the trace's windows K at a time into (K, W) PacketChunks.
+
+    One device transfer per column for the whole trace, one row-range
+    slice per chunk — the host never touches per-window data again. Row
+    k of a chunk is bit-identical to the k-th ``iter_windows`` window
+    (same padding discipline, same rebase); the final chunk is padded to
+    K rows with dead windows (valid all-False) so every chunk presents
+    one static (K, W) shape to the jitted scan megastep.
+    """
+    cols = _trace_columns(trace, n_buckets, t0, bucket)
+    n = len(cols["ts"])
+    if not n:
+        return
+    n_win = -(-n // window)
+    n_chunks = -(-n_win // chunk_windows)
+    rows = n_chunks * chunk_windows
+    cols = _pad_columns(cols, n, n_win * window)
+    lane_valid = np.arange(n_win * window) < n
+    # dead pad windows: all-zero lanes, valid=False (they fold nothing)
+    full = {k: np.zeros((rows * window,), v.dtype) for k, v in cols.items()}
+    for k, v in cols.items():
+        full[k][:n_win * window] = v
+    valid = np.zeros((rows * window,), bool)
+    valid[:n_win * window] = lane_valid
+    dev = {k: jnp.asarray(v.reshape(rows, window)) for k, v in full.items()}
+    valid = jnp.asarray(valid.reshape(rows, window))
+    for c in range(n_chunks):
+        sl = slice(c * chunk_windows, (c + 1) * chunk_windows)
+        yield PacketChunk(valid=valid[sl], **{f: dev[f][sl] for f in dev})
 
 
 # module-level so repeated stream_flow_features calls share the jit cache

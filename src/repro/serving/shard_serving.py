@@ -63,9 +63,10 @@ from repro.kernels.tuning import TileConfig
 from repro.netsim.shard_stream import (ShardedFlowTable, init_sharded_table,
                                        n_local_buckets, shard_window_update,
                                        sharded_flow_table, stream_epoch)
-from repro.netsim.stream import FLOW_FEATURES, PacketWindow
+from repro.netsim.stream import FLOW_FEATURES, PacketChunk, PacketWindow
 from repro.serving.stream_serving import (StreamingHybridServer,
                                           accumulate_stream_stats,
+                                          chunk_classify_tail,
                                           defer_tail, fold_flush_stats)
 
 
@@ -83,7 +84,8 @@ class ShardedStreamingServer(StreamingHybridServer):
     def __init__(self, artifact: TableArtifact, backend_fn: Callable, *,
                  n_buckets: int = 4096, window: int = 512,
                  threshold: float = 0.7, capacity: int = 64,
-                 flush_every: int = 1,
+                 flush_every: int = 1, chunk_windows: Optional[int] = None,
+                 flush_occupancy: Optional[float] = None,
                  evict_age: Optional[float] = None, saturate: bool = True,
                  mesh: Optional[Mesh] = None, n_shards: Optional[int] = None,
                  use_pallas: bool = False, autotune: bool = False,
@@ -101,9 +103,16 @@ class ShardedStreamingServer(StreamingHybridServer):
                 f"flush_every*capacity={flush_every * capacity} must divide "
                 f"evenly over {n_sh} shards (each shard's backend serves "
                 f"one slice of the deferral buffer per flush)")
+        if chunk_windows is not None and (chunk_windows * capacity) % n_sh:
+            raise ValueError(
+                f"chunk_windows*capacity={chunk_windows * capacity} must "
+                f"divide evenly over {n_sh} shards (each shard's backend "
+                f"serves one slice of the chunk's deferral buffer)")
         super().__init__(artifact, backend_fn, n_buckets=n_buckets,
                          window=window, threshold=threshold,
                          capacity=capacity, flush_every=flush_every,
+                         chunk_windows=chunk_windows,
+                         flush_occupancy=flush_occupancy,
                          evict_age=evict_age,
                          saturate=saturate, use_pallas=use_pallas,
                          autotune=autotune, tiles=tiles, fuse=fuse)
@@ -211,6 +220,83 @@ class ShardedStreamingServer(StreamingHybridServer):
         # _flush_patch (two-phase: host backend on summed partial rows,
         # jitted back-patch) is inherited — backpatch/fold are layout-
         # agnostic and _flush_rows_host sums the shard dim.
+
+        # -- device-resident chunked streaming (shard_map over the scan
+        # -- body: the sequential register half runs per shard) -------------
+
+        def _chunk_scan_body(regs, epoch, chunk: PacketChunk):
+            """Per-shard chunk scan (runs under shard_map): carry this
+            shard's register block through the K owner-masked
+            scatter-update + readout steps, stacking owner-masked (W, 8)
+            readout partials; ONE psum over the stacked (K, W, 8) rows
+            completes them — replacing the per-window pred/conf/buffer
+            merges of the stepwise path with a single amortized
+            collective per chunk."""
+            sq = jax.tree.map(lambda a: a[0], regs)
+            d = jax.lax.axis_index("shard")
+
+            def body(carry, cw: PacketChunk):
+                sq, ep = carry
+                w = PacketWindow(bucket=cw.bucket, ts=cw.ts,
+                                 length=cw.length, is_fwd=cw.is_fwd,
+                                 valid=cw.valid)
+                sq, e, own, x, n_ev, n_ov = shard_window_update(
+                    sq, w, n_sh, d, evict_age=evict_age, saturate=saturate)
+                return (sq, jnp.minimum(ep, e)), (x, n_ev, n_ov)
+
+            (sq, ep), (xs, n_evs, n_ovs) = jax.lax.scan(
+                body, (sq, epoch[0]), chunk)
+            xs = jax.lax.psum(xs, "shard")     # owner partials -> complete
+            n_ev = jax.lax.psum(jnp.sum(n_evs), "shard")
+            n_ov = jax.lax.psum(jnp.sum(n_ovs), "shard")
+            return (jax.tree.map(lambda a: a[None], sq), ep[None],
+                    xs, n_ev, n_ov)
+
+        chunk_scan_half = shard_map(
+            _chunk_scan_body, mesh=self.mesh,
+            in_specs=(P("shard", None), P("shard"), P()),
+            out_specs=(P("shard", None), P("shard"), P(), P(), P()))
+
+        def chunk_switch(art, state, stats, chunk: PacketChunk, threshold):
+            """Sharded chunk megastep switch half: shard_mapped register
+            scan, then the parent's batched tail (one classify over the
+            complete K*W rows, vmapped dispatch, whole-chunk stats fold)
+            on the replicated values — identical math to the
+            single-device tail, which is the bit-identity contract."""
+            regs, epoch, xs, n_ev, n_ov = chunk_scan_half(
+                state.regs, state.epoch, chunk)
+            state = ShardedFlowTable(regs=regs, epoch=epoch)
+            stats, dd, pending, frac, rows = chunk_classify_tail(
+                art, stats, chunk, xs, n_ev, n_ov, threshold, capacity,
+                use_pallas=use_pallas, tiles=self.tiles)
+            return state, stats, dd, pending, frac, rows
+
+        self._chunk_switch = jax.jit(chunk_switch, donate_argnums=(1, 2))
+
+        chunk_be_half = shard_map(
+            lambda bs: jnp.asarray(backend_fn(bs[0])).astype(jnp.int32),
+            mesh=self.mesh, in_specs=(P("shard", None, None),),
+            out_specs=P("shard"))
+
+        def chunk_step(art, state, stats, chunk: PacketChunk, threshold):
+            """Megastep with the shard-aware backend: the chunk's
+            deferred rows are complete (the readout psum already
+            merged them), so each shard's backend serves one
+            (K*capacity/n_shards)-row slice and the concatenated
+            answers back-patch the stacked predictions — still one
+            device dispatch per chunk."""
+            state, stats, dd, pending, frac, rows = chunk_switch(
+                art, state, stats, chunk, threshold)
+            slots = dd.buf.shape[0]
+            be_pred = chunk_be_half(
+                dd.buf.reshape(n_sh, slots // n_sh, FLOW_FEATURES))
+            patched = backpatch_pending(pending, be_pred, dd)
+            return state, stats, patched, frac, rows
+
+        self._chunk_step = jax.jit(chunk_step, donate_argnums=(1, 2))
+        # _chunk_patch (two-phase epilogue) is inherited — the chunk's
+        # deferred rows are already complete, so the host path needs no
+        # shard-dim sum either.
 
     # -- streaming state ----------------------------------------------------
 

@@ -44,14 +44,16 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.artifact import TableArtifact
-from repro.core.hybrid import (DeferredDispatch, backpatch_pending, combine,
-                               defer_window, dispatch, init_deferred)
+from repro.core.hybrid import (DeferredDispatch, backpatch_pending,
+                               chunk_dispatch, combine, defer_window,
+                               dispatch, init_deferred)
 from repro.kernels.ops import fused_classify
 from repro.kernels.tuning import TileConfig
-from repro.netsim.stream import (FLOW_FEATURES, FlowTableState, PacketWindow,
+from repro.netsim.stream import (FLOW_FEATURES, FlowTableState, PacketChunk,
+                                 PacketWindow, chunk_update_readout,
                                  flow_table_readout, init_flow_table,
-                                 iter_windows, lifecycle_sweep,
-                                 update_flow_table)
+                                 iter_chunks, iter_windows,
+                                 window_update_readout)
 from repro.serving.hybrid_serving import HybridServer, HybridStats
 
 
@@ -183,7 +185,8 @@ def accumulate_deferred_stats(stats: StreamStats, w: PacketWindow, fwd,
     frac = (n_handled.astype(jnp.float32)
             / jnp.maximum(n_valid, 1).astype(jnp.float32))
     stats = dataclasses.replace(
-        stats, windows=stats.windows + 1, packets=stats.packets + n_valid,
+        stats, windows=stats.windows + 1,
+        packets=stats.packets + n_valid,
         handled=stats.handled + n_handled,
         deferred=stats.deferred + (n_fwd - rows),
         evicted=stats.evicted + n_evicted,
@@ -213,6 +216,52 @@ def defer_tail(stats, dd, pending, w: PacketWindow, sw_pred, fwd, buf, idx,
     return stats, dd, pending, pred, frac, rows
 
 
+def chunk_classify_tail(art, stats, chunk, xs, n_ev, n_ov, threshold,
+                        capacity: int, *, use_pallas, tiles):
+    """Shared batched half of the chunk megastep (single-device and
+    sharded), after the sequential register scan produced the (K, W, 8)
+    readout rows: ONE fused classify over all K*W rows, vmapped
+    capacity-bounded dispatch, the whole-chunk stats fold, and the
+    provisional prediction set (pad/dead lanes at -1). Bit-identical to
+    K per-window passes because every op is row-independent.
+    Returns (stats, dd, pending, frac, rows)."""
+    k, w_lanes, nf = xs.shape
+    sw_pred, conf = fused_classify(art, xs.reshape(k * w_lanes, nf),
+                                   use_pallas=use_pallas, tiles=tiles)
+    sw_pred = sw_pred.reshape(k, w_lanes).astype(jnp.int32)
+    fwd = (conf.reshape(k, w_lanes) < threshold) & chunk.valid
+    dd = chunk_dispatch(xs, fwd, capacity)
+    stats, frac, rows = accumulate_chunk_stats(stats, chunk, fwd, dd,
+                                               n_ev, n_ov)
+    pending = jnp.where(chunk.valid, sw_pred, -1)        # pad/dead lanes
+    return stats, dd, pending, frac, rows
+
+
+def accumulate_chunk_stats(stats: StreamStats, chunk, fwd,
+                           dd: DeferredDispatch, n_evicted, n_overflow):
+    """Whole-chunk stats fold: the per-window telemetry identities summed
+    over the (K, W) chunk in one pass (dead pad windows contribute no
+    valid lanes, and are masked out of the window count), plus the
+    backend accounting for the chunk's single flush.
+    Returns (stats, frac_handled, backend_rows)."""
+    n_valid = jnp.sum(chunk.valid.astype(jnp.int32))
+    n_handled = jnp.sum((chunk.valid & ~fwd).astype(jnp.int32))
+    n_fwd = jnp.sum(fwd.astype(jnp.int32))
+    rows = jnp.sum(dd.valid.astype(jnp.int32))
+    live = jnp.sum(jnp.any(chunk.valid, axis=1).astype(jnp.int32))
+    frac = (n_handled.astype(jnp.float32)
+            / jnp.maximum(n_valid, 1).astype(jnp.float32))
+    stats = StreamStats(
+        windows=stats.windows + live, packets=stats.packets + n_valid,
+        handled=stats.handled + n_handled,
+        backend_rows=stats.backend_rows + rows,
+        deferred=stats.deferred + (n_fwd - rows),
+        flushes=stats.flushes + 1,
+        evicted=stats.evicted + n_evicted,
+        overflow=stats.overflow + n_overflow)
+    return stats, frac, rows
+
+
 class StreamingHybridServer(HybridServer):
     """HybridServer over a packet stream with per-flow register state.
 
@@ -224,7 +273,8 @@ class StreamingHybridServer(HybridServer):
     def __init__(self, artifact: TableArtifact, backend_fn: Callable, *,
                  n_buckets: int = 4096, window: int = 512,
                  threshold: float = 0.7, capacity: int = 64,
-                 flush_every: int = 1,
+                 flush_every: int = 1, chunk_windows: Optional[int] = None,
+                 flush_occupancy: Optional[float] = None,
                  evict_age: Optional[float] = None, saturate: bool = True,
                  use_pallas: bool = False, autotune: bool = False,
                  tiles: Optional[TileConfig] = None,
@@ -252,15 +302,60 @@ class StreamingHybridServer(HybridServer):
         guaranteed flush, so its predictions are final). Deferred rows'
         features are the register readout of their own window, so final
         predictions match flush_every=1 for any row-wise backend.
+
+        chunk_windows: device-resident chunked streaming (DESIGN.md §8).
+        ``serve_trace`` stacks this many windows into one (K, W)
+        ``PacketChunk`` transferred once and runs the whole chunk as a
+        single jitted ``lax.scan`` megastep — register update, touched-
+        flow readout, fused classify and deferral all inside the scan
+        with donated carries, the backend exactly once per chunk at the
+        boundary (the deferral buffer is the scan carry, so flushes are
+        chunk-aligned by construction). Final predictions are
+        back-patched before the megastep returns — bit-identical to the
+        per-window path for row-wise backends (the oracle tests and
+        ``benchmarks/stream_bench.py`` assert). Mutually exclusive with
+        flush_every > 1: the chunk IS the flush cycle.
+
+        flush_occupancy: occupancy-triggered early flush for the
+        flush_every > 1 path. A host-side policy (the host already
+        tracks the cycle position) flushes the pending cycle as soon as
+        the deferral buffer holds at least this fraction of its
+        ``flush_every * capacity`` slots, instead of always waiting the
+        full cycle — bounding how stale a deferred row can get on
+        streams that dispatch at high occupancy, at unchanged final
+        predictions (an early flush only splits the cycle). Reading the
+        per-window deferred-row count costs one host sync per step, so
+        the knob is opt-in; None keeps the fixed cadence (and the
+        zero-sync step).
         """
         if flush_every < 1:
             raise ValueError(f"flush_every must be >= 1, got {flush_every}")
+        if chunk_windows is not None:
+            if chunk_windows < 1:
+                raise ValueError(
+                    f"chunk_windows must be >= 1, got {chunk_windows}")
+            if flush_every != 1:
+                raise ValueError(
+                    "chunked streaming aligns backend flushes to chunk "
+                    "boundaries (one flush per chunk_windows windows); "
+                    "combine it with flush_every=1, not "
+                    f"flush_every={flush_every}")
+        if flush_occupancy is not None:
+            if not 0.0 < flush_occupancy <= 1.0:
+                raise ValueError(f"flush_occupancy must be in (0, 1], "
+                                 f"got {flush_occupancy}")
+            if flush_every == 1:
+                raise ValueError("flush_occupancy needs flush_every > 1 "
+                                 "(there is no deferral cycle to flush "
+                                 "early at flush_every=1)")
         super().__init__(artifact, backend_fn, threshold=threshold,
                          capacity=capacity, use_pallas=use_pallas,
                          autotune=autotune, tiles=tiles, fuse=fuse)
         self.n_buckets = n_buckets
         self.window = window
         self.flush_every = flush_every
+        self.chunk_windows = chunk_windows
+        self.flush_occupancy = flush_occupancy
         self.evict_age = evict_age
         self.saturate = saturate
         self._state = self._make_state()
@@ -270,12 +365,14 @@ class StreamingHybridServer(HybridServer):
         def _switch_half(art, state, w: PacketWindow, threshold):
             """update registers -> aging sweep -> overflow guard -> read
             out touched flows -> classify -> dispatch; shared by the fused
-            and two-phase paths."""
-            prev = state              # pre-update registers: the overflow
-            state = update_flow_table(state, w)   # guard counts only newly
-            state, n_ev, n_ov = lifecycle_sweep(state, w, evict_age,
-                                                saturate, prev=prev)
-            x = flow_table_readout(state, w.bucket)          # (W, 8)
+            and two-phase paths. The register half routes through
+            ``window_update_readout``: with use_pallas the scatter-update,
+            2^24 clamp and touched-row gather fuse into one VMEM pass
+            (``kernels.stream_update``), skipping the HBM round-trip
+            between them."""
+            state, x, n_ev, n_ov = window_update_readout(
+                state, w, evict_age=evict_age, saturate=saturate,
+                use_pallas=use_pallas)
             sw_pred, conf = fused_classify(art, x, use_pallas=use_pallas,
                                            tiles=self.tiles)
             fwd = (conf < threshold) & w.valid
@@ -339,6 +436,47 @@ class StreamingHybridServer(HybridServer):
 
         self._flush_patch = jax.jit(flush_patch, donate_argnums=(0, 1, 2))
 
+        # -- device-resident chunked streaming (chunk_windows) --------------
+
+        def chunk_switch(art, state, stats, chunk: PacketChunk, threshold):
+            """K windows as ONE device program, sequential only where the
+            data is: ``chunk_update_readout`` carries the register file
+            through the K scatter-update + touched-row-gather steps (a
+            lax.scan over the packed register file; the Pallas kernel
+            per step on TPU), stacking the (K, W, 8) readout rows.
+            Everything row-wise then runs ONCE over the whole chunk —
+            fused classify on K*W rows, vmapped capacity-bounded
+            dispatch, the stats fold — instead of K small sequential
+            passes; the batched composition is bit-identical because
+            every per-row op is row-independent."""
+            state, xs, n_ev, n_ov = chunk_update_readout(
+                state, chunk, evict_age=evict_age, saturate=saturate,
+                use_pallas=use_pallas)
+            stats, dd, pending, frac, rows = chunk_classify_tail(
+                art, stats, chunk, xs, n_ev, n_ov, threshold, capacity,
+                use_pallas=use_pallas, tiles=self.tiles)
+            return state, stats, dd, pending, frac, rows
+
+        self._chunk_switch = jax.jit(chunk_switch, donate_argnums=(1, 2))
+
+        def chunk_step(art, state, stats, chunk: PacketChunk, threshold):
+            """The whole megastep as one device dispatch: scan + batched
+            switch half, backend ONCE over the chunk's deferred rows,
+            back-patch — returning *final* predictions."""
+            state, stats, dd, pending, frac, rows = chunk_switch(
+                art, state, stats, chunk, threshold)
+            be_pred = jnp.asarray(backend_fn(dd.buf))
+            patched = backpatch_pending(pending, be_pred, dd)
+            return state, stats, patched, frac, rows
+
+        self._chunk_step = jax.jit(chunk_step, donate_argnums=(1, 2))
+
+        def chunk_patch(pending, be_pred, dd):
+            """Two-phase chunk epilogue: the backend ran on host; patch."""
+            return backpatch_pending(pending, be_pred, dd)
+
+        self._chunk_patch = jax.jit(chunk_patch, donate_argnums=(0,))
+
     # -- streaming state ----------------------------------------------------
 
     def _make_state(self):
@@ -354,8 +492,12 @@ class StreamingHybridServer(HybridServer):
 
     def _reset_deferred(self):
         """Empty pending cycle: deferral buffer, per-window pending
-        prediction set, and the host-side cycle position."""
+        prediction set, and the host-side cycle position / occupancy
+        count. (The chunked path carries no deferral state between
+        megasteps — its DeferredDispatch lives and dies inside one
+        chunk.)"""
         self._pending_n = 0
+        self._occ_rows = 0
         self._flush_queue = []
         if self.flush_every > 1:
             self._dd = self._make_deferred()
@@ -443,7 +585,14 @@ class StreamingHybridServer(HybridServer):
                                   self._dd, self._pending, w, tau,
                                   jnp.int32(self._pending_n))
         self._pending_n += 1
-        if self._pending_n >= self.flush_every:
+        full = self._pending_n >= self.flush_every
+        if self.flush_occupancy is not None and not full:
+            # occupancy-triggered early flush: reading the deferred-row
+            # count costs one host sync — the knob is opt-in (see __init__)
+            self._occ_rows += int(rows)
+            full = (self._occ_rows
+                    >= self.flush_occupancy * self._dd.slots)
+        if full:
             # queued, not overwritten: a manual caller who steps through
             # several cycles without consuming loses nothing
             self._flush_queue.append(self.flush())
@@ -451,11 +600,11 @@ class StreamingHybridServer(HybridServer):
 
     # -- deferred-dispatch flushing -----------------------------------------
 
-    def _flush_rows_host(self):
+    def _flush_rows_host(self, dd: Optional[DeferredDispatch] = None):
         """Complete deferred rows for a host (two-phase) backend call.
         The sharded buffer holds per-shard partial rows (non-owner lanes
         exactly zero), so summing the shard dim reconstructs them."""
-        buf = np.asarray(self._dd.buf)
+        buf = np.asarray((dd or self._dd).buf)
         return buf.sum(axis=0, dtype=np.float32) if buf.ndim == 3 else buf
 
     def flush(self):
@@ -478,6 +627,7 @@ class StreamingHybridServer(HybridServer):
                     self._flush_fused(self._stats, self._dd, self._pending)
                 self._fused_ok = True
                 self._pending_n = 0
+                self._occ_rows = 0
                 return n, patched
             except (jax.errors.JAXTypeError, TypeError):
                 # tracing failed before execution: nothing was donated
@@ -491,6 +641,7 @@ class StreamingHybridServer(HybridServer):
                 self._flush_patch(self._stats, self._dd, self._pending,
                                   be_pred)
         self._pending_n = 0
+        self._occ_rows = 0
         return n, patched
 
     def consume_flush(self):
@@ -499,6 +650,55 @@ class StreamingHybridServer(HybridServer):
         cycle filled. FIFO, so stepping through several cycles before
         consuming loses nothing."""
         return self._flush_queue.pop(0) if self._flush_queue else None
+
+    # -- chunked serving -----------------------------------------------------
+
+    def step_chunk(self, chunk: PacketChunk):
+        """Serve K stacked windows as ONE device dispatch.
+        -> (pred (K, W), HybridStats for the chunk).
+
+        The megastep scans the chunk's windows through the switch half
+        with donated carries (register file, stats, deferral buffer),
+        runs the backend exactly once over the chunk's deferred rows,
+        and back-patches — the returned predictions are *final* (not
+        provisional), with pad/dead lanes at -1. Requires
+        ``chunk_windows`` (the compiled scan length); chunks must have
+        exactly that many window rows (``iter_chunks`` pads the ragged
+        final chunk with dead windows). Same retry discipline as
+        ``step``: the state advances before a two-phase backend runs,
+        so never replay a failed chunk.
+        """
+        if self.chunk_windows is None:
+            raise ValueError("server built without chunk_windows")
+        if chunk.n_windows != self.chunk_windows:
+            raise ValueError(f"chunk has {chunk.n_windows} windows, server "
+                             f"compiled for {self.chunk_windows}")
+        if chunk.window != self.window:
+            raise ValueError(f"chunk windows are {chunk.window} lanes wide, "
+                             f"server compiled for {self.window}")
+        tau = jnp.float32(self.threshold)
+        if self._fused_ok is None:
+            try:
+                self._state, self._stats, patched, frac, rows = \
+                    self._chunk_step(self.artifact, self._state,
+                                     self._stats, chunk, tau)
+                self._fused_ok = True
+                return patched, HybridStats(frac, rows, self.capacity)
+            except (jax.errors.JAXTypeError, TypeError):
+                # tracing failed before execution: nothing was donated
+                self._fused_ok = False
+        if self._fused_ok:
+            self._state, self._stats, patched, frac, rows = \
+                self._chunk_step(self.artifact, self._state, self._stats,
+                                 chunk, tau)
+            return patched, HybridStats(frac, rows, self.capacity)
+        # two-phase: jitted switch half, host backend, jitted back-patch
+        self._state, self._stats, dd, pending, frac, rows = \
+            self._chunk_switch(self.artifact, self._state, self._stats,
+                               chunk, tau)
+        be_pred = jnp.asarray(self.backend_fn(self._flush_rows_host(dd)))
+        patched = self._chunk_patch(pending, be_pred, dd)
+        return patched, HybridStats(frac, rows, self.capacity)
 
     def serve_trace(self, trace, *, t0: Optional[float] = None):
         """Stream a whole PacketTrace through step(). -> (pred (P,), stats).
@@ -513,10 +713,24 @@ class StreamingHybridServer(HybridServer):
         flushed (and their patches dropped, along with any unconsumed
         queue) on entry: they belong to a different prediction stream
         and must not patch into this trace's output.
+
+        With ``chunk_windows`` set the trace streams through
+        ``step_chunk`` instead: one (K, W) transfer and one scan
+        megastep per K windows, backend once per chunk, already-final
+        predictions — same output bit for bit.
         """
         self.flush()
         self._flush_queue = []
         preds = []
+        if self.chunk_windows:
+            for c in iter_chunks(trace, self.window, self.chunk_windows,
+                                 self.n_buckets, t0=t0):
+                pred, _ = self.step_chunk(c)
+                preds.append(pred.reshape(-1))
+            flat = (np.concatenate([np.asarray(p) for p in preds])
+                    [:trace.n_packets] if preds
+                    else np.zeros((0,), np.int32))
+            return jnp.asarray(flat), self._stats
         for w in iter_windows(trace, self.window, self.n_buckets, t0=t0):
             pred, _ = self.step(w)
             preds.append(pred)

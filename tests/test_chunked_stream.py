@@ -1,0 +1,379 @@
+"""Device-resident chunked streaming: scan megastep contracts.
+
+The contracts under test (DESIGN.md §8):
+
+* ``iter_chunks`` rows are bit-identical to the ``iter_windows`` windows
+  (ragged final chunk padded with dead all-invalid windows);
+* ``chunk_update_readout`` — the packed-register scan — folds and reads
+  out exactly like K ``window_update_readout`` steps, across saturation,
+  eviction and chunk-size regimes;
+* chunked serving (``serve_trace`` with ``chunk_windows``) returns
+  predictions, flow tables and accounting bit-identical to the
+  per-window baseline, on both the fused and the two-phase backend
+  paths, with exactly ceil(windows / K) backend invocations;
+* the fused Pallas scatter/readout kernel (``kernels/stream_update``)
+  matches the XLA reference bit for bit in interpret mode;
+* occupancy-triggered early flush splits deferral cycles without
+  changing a single final prediction;
+* the autotune sweep includes the loop/reference realizations and every
+  ``TileConfig.impl`` classifies bit-identically.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.mapping import map_tree_ensemble
+from repro.kernels.ops import fused_classify, stream_update
+from repro.kernels.ref import stream_update_ref
+from repro.kernels.tuning import TileConfig, candidate_tiles
+from repro.ml.trees import fit_random_forest, predict_tree_ensemble
+from repro.netsim.features import flow_features
+from repro.netsim.packets import synth_trace
+from repro.netsim.stream import (OVERFLOW_LIMIT, REGISTER_FIELDS,
+                                 PacketChunk, chunk_update_readout,
+                                 init_flow_table, iter_chunks, iter_windows,
+                                 window_update_readout)
+from repro.serving.stream_serving import StreamingHybridServer
+
+N_BUCKETS = 1 << 11
+W_FIELDS = ("bucket", "ts", "length", "is_fwd", "valid")
+
+
+@pytest.fixture(scope="module")
+def chunk_setup():
+    trace = synth_trace(n_flows=300, seed=3)
+    b, table = flow_features(trace, n_buckets=N_BUCKETS)
+    first_idx = np.unique(np.asarray(trace.flow_id), return_index=True)[1]
+    rows = np.asarray(table)[np.asarray(b)[first_idx]].astype(np.float32)
+    small = fit_random_forest(rows, trace.flow_label, n_classes=2,
+                              n_trees=4, max_depth=3, seed=0)
+    big = fit_random_forest(rows, trace.flow_label, n_classes=2,
+                            n_trees=12, max_depth=5, seed=1)
+    art = map_tree_ensemble(small, rows.shape[1])
+    return trace, art, (lambda r: predict_tree_ensemble(big, r))
+
+
+def _assert_states_equal(a, b):
+    for f in REGISTER_FIELDS:
+        np.testing.assert_array_equal(np.asarray(getattr(a, f)),
+                                      np.asarray(getattr(b, f)),
+                                      err_msg=f)
+
+
+# ---------------------------------------------------------------------------
+# chunk iterator
+# ---------------------------------------------------------------------------
+
+def test_iter_chunks_rows_equal_iter_windows():
+    """Row k of the chunk stream == the k-th per-window stream window,
+    bitwise; the ragged final chunk is padded with dead windows."""
+    tr = synth_trace(n_flows=150, seed=9)
+    ws = list(iter_windows(tr, 128, N_BUCKETS))
+    for k in (1, 3, 8):
+        rows = 0
+        for c in iter_chunks(tr, 128, k, N_BUCKETS):
+            assert c.n_windows == k and c.window == 128
+            for i in range(k):
+                if rows < len(ws):
+                    w = ws[rows]
+                    for f in W_FIELDS:
+                        np.testing.assert_array_equal(
+                            np.asarray(getattr(c, f)[i]),
+                            np.asarray(getattr(w, f)))
+                else:   # dead pad window: every lane invalid
+                    assert not bool(jnp.any(c.valid[i]))
+                rows += 1
+        assert rows == -(-len(ws) // k) * k
+
+
+def test_iter_windows_device_matches_host_path():
+    """device=True (one transfer + device slicing) yields bit-identical
+    windows to the per-window host-slicing path."""
+    tr = synth_trace(n_flows=150, seed=9)
+    host = list(iter_windows(tr, 200, N_BUCKETS, device=False))
+    dev = list(iter_windows(tr, 200, N_BUCKETS, device=True))
+    assert len(host) == len(dev)
+    for a, b in zip(host, dev):
+        for f in W_FIELDS:
+            np.testing.assert_array_equal(np.asarray(getattr(a, f)),
+                                          np.asarray(getattr(b, f)))
+
+
+# ---------------------------------------------------------------------------
+# chunked register fold + readout
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("evict_age,saturate",
+                         [(None, True), (None, False), (1.5, True)])
+def test_chunk_update_readout_bit_equals_stepwise(evict_age, saturate):
+    """The packed-register chunk scan == K window_update_readout steps:
+    same registers, same readout rows, same eviction/overflow counts —
+    at several chunk sizes including a ragged final chunk."""
+    tr = synth_trace(n_flows=200, seed=5)
+    ws = list(iter_windows(tr, 128, N_BUCKETS))
+    s_ref = init_flow_table(N_BUCKETS)
+    xs_ref, n_ev_ref, n_ov_ref = [], 0, 0
+    for w in ws:
+        s_ref, x, ev, ov = window_update_readout(
+            s_ref, w, evict_age=evict_age, saturate=saturate,
+            use_pallas=False)
+        xs_ref.append(np.asarray(x))
+        n_ev_ref += int(ev)
+        n_ov_ref += int(ov)
+    for k in (1, 2, 8):
+        s = init_flow_table(N_BUCKETS)
+        xs, n_ev, n_ov = [], 0, 0
+        for c in iter_chunks(tr, 128, k, N_BUCKETS):
+            s, x, ev, ov = chunk_update_readout(
+                s, c, evict_age=evict_age, saturate=saturate,
+                use_pallas=False)
+            xs.append(np.asarray(x))
+            n_ev += int(ev)
+            n_ov += int(ov)
+        xs = np.concatenate(xs)[:len(ws)]
+        for i, x_ref in enumerate(xs_ref):
+            np.testing.assert_array_equal(xs[i], x_ref,
+                                          err_msg=f"window {i}, k={k}")
+        _assert_states_equal(s_ref, s)
+        assert (n_ev, n_ov) == (n_ev_ref, n_ov_ref)
+
+
+def _one_lane_chunk(bucket, ts, length, k_pad=2):
+    """A chunk whose first window holds one packet, padded with dead
+    windows — the smallest fixture that can saturate a register."""
+    z = jnp.zeros((k_pad, 1), jnp.float32)
+    col = lambda v: z.at[0, 0].set(v)
+    return PacketChunk(
+        bucket=jnp.zeros((k_pad, 1), jnp.int32).at[0, 0].set(bucket),
+        ts=col(ts), length=col(length), is_fwd=col(1.0),
+        valid=jnp.zeros((k_pad, 1), bool).at[0, 0].set(True))
+
+
+def test_chunk_overflow_counted_once():
+    """Saturation inside a chunk: the clamp lands and the slot counts
+    exactly once across chunks — same contract as the per-window guard."""
+    s = init_flow_table(16)
+    s, _, _, ov1 = chunk_update_readout(
+        s, _one_lane_chunk(3, 0.0, OVERFLOW_LIMIT + 1024.0),
+        saturate=True, use_pallas=False)
+    assert int(ov1) == 2                      # byte_count AND fwd_bytes
+    assert float(s.byte_count[3]) == OVERFLOW_LIMIT
+    s, _, _, ov2 = chunk_update_readout(
+        s, _one_lane_chunk(3, 1.0, 2048.0), saturate=True, use_pallas=False)
+    assert int(ov2) == 0                      # already saturated: no recount
+    assert float(s.byte_count[3]) == OVERFLOW_LIMIT
+
+
+# ---------------------------------------------------------------------------
+# chunked serving equivalence oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("k", (1, 2, 8))
+def test_chunked_serving_bit_matches_per_window(chunk_setup, k):
+    """The tentpole oracle: serve_trace through the scan megastep returns
+    the same final predictions, flow table and accounting as the
+    per-window path, with ceil(windows/k) backend invocations."""
+    trace, art, backend = chunk_setup
+    kw = dict(n_buckets=N_BUCKETS, window=256, threshold=0.9, capacity=32)
+    ref = StreamingHybridServer(art, backend, **kw)
+    p_ref, s_ref = ref.serve_trace(trace)
+    srv = StreamingHybridServer(art, backend, chunk_windows=k, **kw)
+    p, s = srv.serve_trace(trace)
+    assert srv._fused_ok is True              # single-dispatch megastep ran
+    np.testing.assert_array_equal(np.asarray(p), np.asarray(p_ref))
+    np.testing.assert_array_equal(np.asarray(srv.flow_table()),
+                                  np.asarray(ref.flow_table()))
+    assert s.n_windows == s_ref.n_windows     # dead pad windows not counted
+    assert s.n_packets == s_ref.n_packets
+    assert s.n_handled == s_ref.n_handled
+    assert s.total_backend_rows == s_ref.total_backend_rows
+    assert s.n_deferred == s_ref.n_deferred
+    assert s.n_flushes == -(-s.n_windows // k)
+
+
+def test_chunked_serving_with_eviction_matches(chunk_setup):
+    """Eviction + saturation inside a chunk: the scan applies the aging
+    sweep per window, so lifecycle serving is bit-identical too."""
+    trace, art, backend = chunk_setup
+    kw = dict(n_buckets=N_BUCKETS, window=256, threshold=0.9, capacity=32,
+              evict_age=1.0, saturate=True)
+    ref = StreamingHybridServer(art, backend, **kw)
+    p_ref, s_ref = ref.serve_trace(trace)
+    assert s_ref.n_evicted > 0                # the sweep actually fired
+    srv = StreamingHybridServer(art, backend, chunk_windows=4, **kw)
+    p, s = srv.serve_trace(trace)
+    np.testing.assert_array_equal(np.asarray(p), np.asarray(p_ref))
+    np.testing.assert_array_equal(np.asarray(srv.flow_table()),
+                                  np.asarray(ref.flow_table()))
+    assert s.n_evicted == s_ref.n_evicted
+    assert s.n_overflow == s_ref.n_overflow
+
+
+def test_chunked_two_phase_matches_fused(chunk_setup):
+    """Untraceable backend: the two-phase chunk path (jitted switch half,
+    host backend, jitted back-patch) is bit-identical to the fused
+    megastep and to the per-window baseline."""
+    trace, art, _ = chunk_setup
+    b, table = flow_features(trace, n_buckets=N_BUCKETS)
+    first_idx = np.unique(np.asarray(trace.flow_id), return_index=True)[1]
+    rows = np.asarray(table)[np.asarray(b)[first_idx]].astype(np.float32)
+    big = fit_random_forest(rows, trace.flow_label, n_classes=2,
+                            n_trees=12, max_depth=5, seed=1)
+
+    def np_backend(r):
+        return np.asarray(predict_tree_ensemble(big, np.asarray(r)))
+
+    kw = dict(n_buckets=N_BUCKETS, window=256, threshold=0.9, capacity=32,
+              chunk_windows=4)
+    fused = StreamingHybridServer(
+        art, lambda r: predict_tree_ensemble(big, r), **kw)
+    p_f, s_f = fused.serve_trace(trace)
+    assert fused._fused_ok is True
+    twop = StreamingHybridServer(art, np_backend, **kw)
+    p_t, s_t = twop.serve_trace(trace)
+    assert twop._fused_ok is False
+    np.testing.assert_array_equal(np.asarray(p_t), np.asarray(p_f))
+    assert s_t.n_flushes == s_f.n_flushes
+    assert s_t.total_backend_rows == s_f.total_backend_rows
+
+
+def test_step_chunk_interface_validation(chunk_setup):
+    trace, art, backend = chunk_setup
+    with pytest.raises(ValueError):           # chunking IS the flush cycle
+        StreamingHybridServer(art, backend, chunk_windows=4, flush_every=2)
+    with pytest.raises(ValueError):
+        StreamingHybridServer(art, backend, chunk_windows=0)
+    srv = StreamingHybridServer(art, backend, n_buckets=N_BUCKETS,
+                                window=256, chunk_windows=4)
+    c = next(iter_chunks(trace, 256, 2, N_BUCKETS))
+    with pytest.raises(ValueError):           # compiled for K=4, got K=2
+        srv.step_chunk(c)
+    plain = StreamingHybridServer(art, backend, n_buckets=N_BUCKETS,
+                                  window=256)
+    with pytest.raises(ValueError):           # server built without chunking
+        plain.step_chunk(c)
+
+
+# ---------------------------------------------------------------------------
+# fused Pallas scatter/readout kernel parity (interpret mode)
+# ---------------------------------------------------------------------------
+
+def test_stream_update_kernel_matches_ref():
+    """Pallas kernel == XLA segment/gather oracle, bitwise, across
+    limit on/off, pad lanes, untouched-bucket ±inf identities, and a
+    bucket count that is not a tile multiple."""
+    rng = np.random.default_rng(0)
+    n, w = 600, 96                            # 600 forces column padding
+    regs = np.zeros((8, n), np.float32)
+    regs[2] = np.inf
+    regs[3] = -np.inf
+    regs[0, 5] = 3.0
+    regs[1, 5] = 300.0
+    regs[2, 5] = 0.5
+    regs[3, 5] = 1.5
+    args = (jnp.asarray(rng.integers(0, n, w).astype(np.int32)),
+            jnp.asarray(rng.uniform(0, 10, w).astype(np.float32)),
+            jnp.asarray(rng.integers(40, 1500, w).astype(np.float32)),
+            jnp.asarray(rng.integers(0, 2, w).astype(np.float32)),
+            jnp.asarray(rng.random(w) > 0.2))
+    for limit in (None, 1000.0):
+        ref_regs, ref_rows = stream_update_ref(jnp.asarray(regs), *args,
+                                               limit=limit)
+        pl_regs, pl_rows = stream_update(jnp.asarray(regs), *args,
+                                         limit=limit, use_pallas=True,
+                                         interpret=True)
+        np.testing.assert_array_equal(np.asarray(ref_regs),
+                                      np.asarray(pl_regs))
+        np.testing.assert_array_equal(np.asarray(ref_rows),
+                                      np.asarray(pl_rows))
+
+
+def test_window_update_readout_kernel_path_matches_reference():
+    """The serving-step register half is bit-identical whether it runs
+    the fused kernel (interpret mode) or the XLA composition — including
+    the aging sweep and the overflow guard around it."""
+    tr = synth_trace(n_flows=80, seed=11)
+    s_ref = init_flow_table(512)
+    s_ker = init_flow_table(512)
+    for w in iter_windows(tr, 128, 512):
+        s_ref, x_ref, ev_r, ov_r = window_update_readout(
+            s_ref, w, evict_age=2.0, saturate=True, use_pallas=False)
+        s_ker, x_ker, ev_k, ov_k = window_update_readout(
+            s_ker, w, evict_age=2.0, saturate=True, use_pallas=True,
+            interpret=True)
+        np.testing.assert_array_equal(np.asarray(x_ref), np.asarray(x_ker))
+        assert int(ev_r) == int(ev_k) and int(ov_r) == int(ov_k)
+    _assert_states_equal(s_ref, s_ker)
+
+
+# ---------------------------------------------------------------------------
+# occupancy-triggered early flush
+# ---------------------------------------------------------------------------
+
+def test_occupancy_flush_bit_identical_with_more_flushes(chunk_setup):
+    """A low occupancy threshold flushes cycles early (more backend
+    invocations than the fixed cadence) without changing one final
+    prediction — an early flush only splits the cycle."""
+    trace, art, backend = chunk_setup
+    kw = dict(n_buckets=N_BUCKETS, window=256, threshold=0.9, capacity=32)
+    ref = StreamingHybridServer(art, backend, **kw)
+    p_ref, _ = ref.serve_trace(trace)
+    fixed = StreamingHybridServer(art, backend, flush_every=8, **kw)
+    _, s_fixed = fixed.serve_trace(trace)
+    early = StreamingHybridServer(art, backend, flush_every=8,
+                                  flush_occupancy=0.25, **kw)
+    p, s = early.serve_trace(trace)
+    np.testing.assert_array_equal(np.asarray(p), np.asarray(p_ref))
+    assert s.n_flushes > s_fixed.n_flushes
+    assert s.total_backend_rows == s_fixed.total_backend_rows
+
+
+def test_flush_occupancy_validation(chunk_setup):
+    trace, art, backend = chunk_setup
+    with pytest.raises(ValueError):           # needs a deferral cycle
+        StreamingHybridServer(art, backend, flush_occupancy=0.5)
+    with pytest.raises(ValueError):
+        StreamingHybridServer(art, backend, flush_every=4,
+                              flush_occupancy=1.5)
+
+
+# ---------------------------------------------------------------------------
+# autotune impl candidates (loop / reference)
+# ---------------------------------------------------------------------------
+
+def test_candidate_tiles_include_loop_and_ref():
+    """The sweep can tune *away* from the fused kernel: the loop kernel
+    and the XLA reference are candidates (the rf_narrow regression —
+    fused slower than loop — is no longer the forced winner)."""
+    impls = {t.impl for t in candidate_tiles(2048)}
+    assert {"fused", "loop", "ref"} <= impls
+
+
+def test_fused_classify_impl_routing_bit_identical(chunk_setup):
+    """Every TileConfig.impl realization classifies bit-identically, so
+    the tuner is free to pick any of them."""
+    trace, art, _ = chunk_setup
+    _, table = flow_features(trace, n_buckets=N_BUCKETS)
+    x = np.asarray(table)[:256].astype(np.float32)
+    p_ref, c_ref = fused_classify(art, x, use_pallas=False)
+    for impl in ("loop", "ref", "fused"):
+        p, c = fused_classify(art, x, use_pallas=True, interpret=True,
+                              tiles=TileConfig(impl=impl))
+        np.testing.assert_array_equal(np.asarray(p), np.asarray(p_ref))
+        np.testing.assert_array_equal(np.asarray(c), np.asarray(c_ref))
+
+
+def test_fused_classify_loop_impl_rejected_for_classical():
+    from repro.core.mapping import map_svm
+    from repro.ml.svm import fit_linear_svm
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=(200, 5)).astype(np.float32)
+    y = (x[:, 0] > 0).astype(np.int32)
+    art = map_svm(fit_linear_svm(x, y, n_classes=2, seed=0), x)
+    with pytest.raises(ValueError):
+        fused_classify(art, x, use_pallas=True, interpret=True,
+                       tiles=TileConfig(impl="loop"))

@@ -217,6 +217,45 @@ def test_sharded_deferred_rejects_indivisible_slots(shard_setup):
 
 
 # ---------------------------------------------------------------------------
+# device-resident chunked streaming (DESIGN.md §8) on the mesh
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n_shards", DEVICE_COUNTS)
+def test_sharded_chunked_serving_bit_matches_single_device(shard_setup,
+                                                           n_shards):
+    """The sharded scan megastep (shard_map'd register scan, one readout
+    psum per chunk, per-shard backend slices) serves bit-identically to
+    the single-device per-window baseline at every mesh size."""
+    trace, art, backend = shard_setup
+    kw = dict(n_buckets=N_BUCKETS, window=256, threshold=0.9, capacity=32)
+    ref = StreamingHybridServer(art, backend, **kw)
+    p_ref, s_ref = ref.serve_trace(trace)
+    srv = ShardedStreamingServer(art, backend, chunk_windows=4,
+                                 n_shards=n_shards, **kw)
+    p, s = srv.serve_trace(trace)
+    assert srv._fused_ok is True
+    np.testing.assert_array_equal(np.asarray(p), np.asarray(p_ref))
+    np.testing.assert_array_equal(np.asarray(srv.flow_table()),
+                                  np.asarray(ref.flow_table()))
+    assert s.n_packets == s_ref.n_packets
+    assert s.n_handled == s_ref.n_handled
+    assert s.total_backend_rows == s_ref.total_backend_rows
+    assert s.n_deferred == s_ref.n_deferred
+
+
+def test_sharded_chunked_rejects_indivisible_slots(shard_setup):
+    """chunk_windows*capacity must divide over the mesh — each shard's
+    backend serves one slice of the chunk's deferred rows."""
+    if DEVICE_COUNTS[-1] == 1:
+        pytest.skip("needs a multi-device mesh")
+    trace, art, backend = shard_setup
+    with pytest.raises(ValueError):
+        ShardedStreamingServer(art, backend, n_buckets=N_BUCKETS,
+                               capacity=3, chunk_windows=3,
+                               n_shards=DEVICE_COUNTS[-1])
+
+
+# ---------------------------------------------------------------------------
 # eviction / aging
 # ---------------------------------------------------------------------------
 
