@@ -18,7 +18,7 @@ Before any timing, two oracles gate the rows:
   least 2x versus the per-window baseline — the acceptance bar for the
   subsystem (a "batching" path that still invokes per window is a bug).
 
-Results go to ``BENCH_batch.json`` (schema "bench-v1", DESIGN.md §10).
+Results go to ``BENCH_batch.json`` (schema "bench-v1", DESIGN.md §11).
 """
 
 from __future__ import annotations

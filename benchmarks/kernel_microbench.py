@@ -12,7 +12,7 @@
 Every timed pair is first checked bit-identical against the kernels/ref.py
 oracle — a speedup from wrong answers is not a speedup.
 
-Results go to ``BENCH_kernels.json`` (schema "bench-v1", see DESIGN.md §10)
+Results go to ``BENCH_kernels.json`` (schema "bench-v1", see DESIGN.md §11)
 next to the printed table. The headline configuration is the paper's
 feature-scaling regime (wide, shallow forests — Figs 4-5): many feature
 tables, switch-sized decision tables, where the table walk dominates and

@@ -1,15 +1,16 @@
 """Run every paper-table benchmark: ``python -m benchmarks.run``.
 
-One module per paper table/figure (see DESIGN.md §11). Pass --quick for
+One module per paper table/figure (see DESIGN.md §12). Pass --quick for
 reduced sample sizes (CI), --only <name> for a single benchmark.
 
 Besides the printed tables, the suite writes machine-readable
-``BENCH_benchmarks.json`` (schema "bench-v1", see DESIGN.md §10): one row
+``BENCH_benchmarks.json`` (schema "bench-v1", see DESIGN.md §11): one row
 per benchmark with its wall time and whatever its run() returned, so the
 perf trajectory of the repo is tracked run over run. The other bench-v1
 emitters — ``kernel_microbench`` (BENCH_kernels.json), ``stream_bench``
-(BENCH_stream.json), ``shard_stream_bench`` (BENCH_shard.json) and
-``batch_bench`` (BENCH_batch.json) — are separate entry points with
+(BENCH_stream.json), ``shard_stream_bench`` (BENCH_shard.json),
+``batch_bench`` (BENCH_batch.json) and ``scenario_bench``
+(BENCH_scenarios.json) — are separate entry points with
 their own gating oracles; ``--all-suites`` runs them here too, so one
 command refreshes the whole trajectory. A failing sub-suite fails the
 whole run immediately (its exit code is propagated), so a broken oracle
@@ -40,7 +41,7 @@ BENCHES = [
 # benches; each must force its own environment (e.g. shard_stream_bench's
 # multi-device host platform) before its first jax import, hence subprocesses
 EXTRA_SUITES = ("kernel_microbench", "stream_bench", "shard_stream_bench",
-                "batch_bench")
+                "batch_bench", "scenario_bench")
 
 
 def run_suites(suite_modules, quick=False):
@@ -74,9 +75,10 @@ def main(argv=None):
                     help="machine-readable results file (bench-v1 schema)")
     ap.add_argument("--all-suites", action="store_true",
                     help="also run the kernel, streaming, sharded-"
-                         "streaming and cross-window-batching benches "
-                         "(BENCH_kernels/stream/shard/batch.json); fails "
-                         "fast on the first failing suite")
+                         "streaming, cross-window-batching and adversarial-"
+                         "scenario benches (BENCH_kernels/stream/shard/"
+                         "batch/scenarios.json); fails fast on the first "
+                         "failing suite")
     args = ap.parse_args(argv)
 
     n = 6000 if args.quick else 20000

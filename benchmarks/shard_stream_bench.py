@@ -16,7 +16,7 @@ for bit AND the sharded predictions must equal the single-device
 registers or the answers is not a speedup. A second (non-oracle) entry
 exercises the eviction/aging sweep and records lifecycle telemetry.
 
-Results go to ``BENCH_shard.json`` (schema "bench-v1", DESIGN.md §10).
+Results go to ``BENCH_shard.json`` (schema "bench-v1", DESIGN.md §11).
 
 Caveat on the recorded curve: forced host-platform devices all share one
 physical CPU, so the multi-"device" rows pay the partitioning overhead

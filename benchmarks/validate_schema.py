@@ -2,7 +2,7 @@
 
 ``python -m benchmarks.validate_schema [paths...]`` checks every
 ``BENCH_*.json`` (all of them in the CWD when no paths are given)
-against the bench-v1 contract of DESIGN.md §10 and exits nonzero on the
+against the bench-v1 contract of DESIGN.md §11 and exits nonzero on the
 first structural violation — CI runs it after the emitters and before
 the artifact upload, so a malformed emitter fails the workflow instead
 of silently corrupting the diffable time series.
@@ -37,7 +37,7 @@ BENCH_KEYS = {
     "paper_ref": str,
     "ok": bool,
     "wall_s": (int, float),
-    # rows is whatever the bench's run() returned (DESIGN.md §10): a row
+    # rows is whatever the bench's run() returned (DESIGN.md §11): a row
     # list, a keyed table dict, or null when the bench failed
     "rows": (list, dict, type(None)),
 }

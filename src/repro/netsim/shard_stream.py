@@ -134,7 +134,10 @@ def localize_window(w: PacketWindow, n_shards: int, shard_idx):
 def shard_window_update(regs: FlowTableState, w: PacketWindow,
                         n_shards: int, shard_idx, *,
                         evict_age: Optional[float] = None,
-                        saturate: bool = True, readout: bool = True):
+                        saturate: bool = True,
+                        evict_policy: str = "timeout",
+                        lru_occupancy: float = 0.75,
+                        readout: bool = True):
     """One shard's whole per-window register pass (shard_map body core).
 
     update (owned packets only) -> aging sweep -> overflow guard ->
@@ -147,13 +150,21 @@ def shard_window_update(regs: FlowTableState, w: PacketWindow,
     ``netsim.stream.lifecycle_sweep`` (pForest-style window aging, cutoff
     clamped to the window's oldest timestamp so flows seen this window
     always survive it) — one definition with the single-device tier, on
-    which the bit-identity contract depends.
+    which the bit-identity contract depends. ``evict_policy="approx_lru"``
+    runs the pressure-triggered sweep *per shard*: occupancy and the
+    score histogram are computed over this shard's local bucket block, so
+    LRU decisions are shard-local — the sharded table under approx-LRU is
+    NOT bit-identical to a single-device table of the global size (each
+    shard defends its own slice, which is the deployment semantics of a
+    partitioned flow table); the timeout policy keeps the bit-identity
+    contract.
     """
     local, own = localize_window(w, n_shards, shard_idx)
     prev = regs                   # pre-update registers: the overflow guard
     regs = update_flow_table(regs, local)   # counts only newly saturated
     regs, n_ev, n_ov = lifecycle_sweep(regs, w, evict_age, saturate,
-                                       prev=prev)
+                                       prev=prev, evict_policy=evict_policy,
+                                       lru_occupancy=lru_occupancy)
     x = None
     if readout:
         x = flow_table_readout(regs, local.bucket)          # (W, 8)

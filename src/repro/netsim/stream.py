@@ -219,6 +219,88 @@ def saturate_counts(state: FlowTableState, *, limit: float = OVERFLOW_LIMIT,
     return dataclasses.replace(state, **upd), n_over
 
 
+# approx-LRU defaults: 2-bit age counters (pForest's choice) ranked by a
+# 2-bit activity class — 16 score levels total
+LRU_AGE_BITS = 2
+LRU_ACT_BITS = 2
+
+EVICT_POLICIES = ("timeout", "approx_lru")
+
+
+def approx_lru_sweep(state: FlowTableState, w: "PacketWindow",
+                     evict_age: float, *, occupancy: float = 0.75,
+                     age_bits: int = LRU_AGE_BITS,
+                     act_bits: int = LRU_ACT_BITS,
+                     use_pallas=None) -> tuple:
+    """pForest-style approx-LRU eviction: multi-bit age counters ranked by
+    activity, swept only under occupancy pressure.
+
+    The timeout sweep (``age_out``) evicts on idle time alone — under a
+    DDoS flood of single-use flows it either churns the whole table (age
+    too short) or lets dead flows squat until live ones cannot be
+    admitted (age too long). This sweep instead ranks every occupied
+    bucket by a small composite score and evicts only when (and only as
+    much as) the table is under pressure:
+
+      age class   = idle time quantized into ``2**age_bits`` levels so a
+                    flow idle >= ``evict_age`` sits in the top class —
+                    the multi-bit age counter of pForest's approx-LRU;
+      activity    = ``log2(pkt_count)`` clipped to ``2**act_bits``
+                    classes — bigger flows evict later within an age
+                    class (flow-size ranking);
+      score       = ``age_class * 2**act_bits + (2**act_bits - 1 -
+                    act_class)``: oldest-then-smallest first.
+
+    Nothing is evicted while occupancy (fraction of buckets with any
+    packets) is at or below ``occupancy``. Above it, the smallest score
+    threshold whose classes cover the excess is chosen from a score
+    histogram and *every* bucket at or above it is recycled — class
+    granularity is the "approx" in approx-LRU (the sweep may overshoot
+    the high-water mark by up to one class). Flows seen in the current
+    window are never evicted (same clamp discipline as ``evict_cutoff``),
+    and an all-invalid (dead pad) window sweeps nothing. The reset rides
+    the same masked-scatter ``kernels.ops.evict_fill`` as the timeout
+    sweep. Returns (state, n_evicted i32).
+    """
+    n = state.n_buckets
+    n_scores = 1 << (age_bits + act_bits)
+    top_age = jnp.float32((1 << age_bits) - 1)
+    top_act = jnp.float32((1 << act_bits) - 1)
+    now = jnp.max(jnp.where(w.valid, w.ts, -jnp.inf))
+    w_min = jnp.min(jnp.where(w.valid, w.ts, jnp.inf))
+    occupied = state.pkt_count > 0
+    n_occ = jnp.sum(occupied.astype(jnp.int32))
+    high = jnp.int32(int(occupancy * n))
+    pressure = jnp.any(w.valid) & (n_occ > high)
+    # age/activity classes in float (inf-safe), cast after the clip
+    period = jnp.float32(evict_age) / top_age
+    idle = jnp.maximum(now - state.t_max, 0.0)
+    age_cls = jnp.clip(jnp.floor(idle / period), 0.0, top_age)
+    act_cls = jnp.clip(jnp.floor(jnp.log2(state.pkt_count + 1.0)),
+                       0.0, top_act)
+    score = (age_cls * (top_act + 1.0)
+             + (top_act - act_cls)).astype(jnp.int32)
+    protected = state.t_max >= w_min          # seen this window: survives
+    eligible = occupied & ~protected
+    score = jnp.where(eligible, score, -1)
+    # smallest threshold whose classes cover the occupancy excess
+    n_target = n_occ - high
+    s = jnp.arange(n_scores, dtype=jnp.int32)
+    counts = jnp.sum((score[None, :] == s[:, None]).astype(jnp.int32),
+                     axis=1)
+    cum = jnp.cumsum(counts[::-1])[::-1]      # cum[k] = #(score >= k)
+    ok = cum >= n_target
+    thr = jnp.where(jnp.any(ok), jnp.max(jnp.where(ok, s, -1)),
+                    jnp.int32(0))
+    evict = eligible & (score >= thr) & pressure
+    regs = jnp.stack([getattr(state, f) for f in REGISTER_FIELDS])
+    fills = jnp.asarray(EVICT_FILLS, jnp.float32)
+    out = evict_fill(regs, evict, fills, use_pallas=use_pallas)
+    new = FlowTableState(**{f: out[i]
+                            for i, f in enumerate(REGISTER_FIELDS)})
+    return new, jnp.sum(evict.astype(jnp.int32))
+
+
 def evict_cutoff(ts, valid, evict_age: float):
     """Aging cutoff for one window: ``min(now - evict_age, window_min)``.
 
@@ -235,25 +317,39 @@ def evict_cutoff(ts, valid, evict_age: float):
 
 def lifecycle_sweep(state: FlowTableState, w: "PacketWindow",
                     evict_age: Optional[float], saturate: bool,
-                    prev: Optional[FlowTableState] = None) -> tuple:
+                    prev: Optional[FlowTableState] = None, *,
+                    evict_policy: str = "timeout",
+                    lru_occupancy: float = 0.75) -> tuple:
     """Aging sweep + overflow guard for one served window.
 
     The single definition shared by the single-device and sharded serving
     steps — the sharded-vs-single-device bit-identity contract depends on
-    the cutoff semantics never diverging between them. The eviction
-    cutoff is ``min(now - evict_age, window_min_ts)``: strictly no later
-    than every timestamp in this window, so a flow seen in this window
-    always survives it by construction, even when the window's time span
-    exceeds ``evict_age``. ``prev`` (the register file before this
-    window's update) lets the overflow guard count only *newly* saturated
-    slots — see ``saturate_counts``. Returns (state, n_evicted,
-    n_overflow) — both counters zero when the corresponding feature is
-    off.
+    the cutoff semantics never diverging between them. With the default
+    ``evict_policy="timeout"`` the eviction cutoff is ``min(now -
+    evict_age, window_min_ts)``: strictly no later than every timestamp
+    in this window, so a flow seen in this window always survives it by
+    construction, even when the window's time span exceeds ``evict_age``.
+    ``evict_policy="approx_lru"`` substitutes the pressure-triggered
+    pForest-style sweep (see ``approx_lru_sweep``; ``lru_occupancy`` is
+    its high-water fraction) — same survive-this-window clamp, but
+    eviction ranks age *and* activity and fires only above the occupancy
+    mark. ``prev`` (the register file before this window's update) lets
+    the overflow guard count only *newly* saturated slots — see
+    ``saturate_counts``. Returns (state, n_evicted, n_overflow) — both
+    counters zero when the corresponding feature is off.
     """
     n_ev = jnp.zeros((), jnp.int32)
     n_ov = jnp.zeros((), jnp.int32)
+    if evict_policy not in EVICT_POLICIES:
+        raise ValueError(f"evict_policy must be one of {EVICT_POLICIES}, "
+                         f"got {evict_policy!r}")
     if evict_age is not None:
-        state, n_ev = age_out(state, evict_cutoff(w.ts, w.valid, evict_age))
+        if evict_policy == "approx_lru":
+            state, n_ev = approx_lru_sweep(state, w, evict_age,
+                                           occupancy=lru_occupancy)
+        else:
+            state, n_ev = age_out(state,
+                                  evict_cutoff(w.ts, w.valid, evict_age))
     if saturate:
         state, n_ov = saturate_counts(state, prev=prev)
     return state, n_ev, n_ov
@@ -280,6 +376,8 @@ def flow_table_readout(state: FlowTableState,
 def window_update_readout(state: FlowTableState, w: PacketWindow, *,
                           evict_age: Optional[float] = None,
                           saturate: bool = True,
+                          evict_policy: str = "timeout",
+                          lru_occupancy: float = 0.75,
                           use_pallas: Optional[bool] = None,
                           interpret: Optional[bool] = None) -> tuple:
     """Fold one window and read out its touched-flow feature rows.
@@ -293,8 +391,9 @@ def window_update_readout(state: FlowTableState, w: PacketWindow, *,
     oracle. The fusion is exact because
 
       * eviction cannot touch this window's rows (``evict_cutoff`` is
-        clamped to the window minimum, so a flow seen here never evicts
-        here) — sweeping *after* the gather reads the same bits;
+        clamped to the window minimum, and the approx-LRU sweep protects
+        flows seen this window, so a flow seen here never evicts here) —
+        sweeping *after* the gather reads the same bits;
       * clamping commutes with eviction (fills are in-envelope) and
         ``saturate_counts`` on an already-clamped file is a bitwise no-op
         that still counts newly saturated slots against ``prev``.
@@ -305,7 +404,9 @@ def window_update_readout(state: FlowTableState, w: PacketWindow, *,
     if not use_pallas:
         state = update_flow_table(state, w)
         state, n_ev, n_ov = lifecycle_sweep(state, w, evict_age, saturate,
-                                            prev=prev)
+                                            prev=prev,
+                                            evict_policy=evict_policy,
+                                            lru_occupancy=lru_occupancy)
         return state, flow_table_readout(state, w.bucket), n_ev, n_ov
     from repro.kernels.ops import stream_update
     regs = jnp.stack([getattr(state, f) for f in REGISTER_FIELDS])
@@ -318,7 +419,9 @@ def window_update_readout(state: FlowTableState, w: PacketWindow, *,
     # and the clamp already landed in-kernel (saturate_counts is then a
     # bitwise no-op that still counts newly saturated slots vs ``prev``)
     state, n_ev, n_ov = lifecycle_sweep(state, w, evict_age, saturate,
-                                        prev=prev)
+                                        prev=prev,
+                                        evict_policy=evict_policy,
+                                        lru_occupancy=lru_occupancy)
     x = table_from_registers(*(rows[i] for i in range(len(REGISTER_FIELDS))))
     return state, x, n_ev, n_ov
 
@@ -386,6 +489,8 @@ def _pad_columns(cols: dict, n: int, total: int) -> dict:
 def chunk_update_readout(state: FlowTableState, chunk: PacketChunk, *,
                          evict_age: Optional[float] = None,
                          saturate: bool = True,
+                         evict_policy: str = "timeout",
+                         lru_occupancy: float = 0.75,
                          use_pallas: Optional[bool] = None) -> tuple:
     """Whole-chunk sequential register half: fold K windows, emit rows.
 
@@ -420,13 +525,20 @@ def chunk_update_readout(state: FlowTableState, chunk: PacketChunk, *,
     """
     if use_pallas is None:
         use_pallas = jax.default_backend() == "tpu"
-    if use_pallas:
+    # the packed fast path below inlines *timeout* eviction into the scan
+    # body; the approx-LRU sweep (histogram + threshold per window) runs
+    # through the generic per-window body instead — same shape as the
+    # Pallas branch, still one jitted scan megastep
+    generic = use_pallas or (evict_age is not None
+                             and evict_policy != "timeout")
+    if generic:
         def body(state, cw):
             w = PacketWindow(bucket=cw.bucket, ts=cw.ts, length=cw.length,
                              is_fwd=cw.is_fwd, valid=cw.valid)
             state, x, n_ev, n_ov = window_update_readout(
                 state, w, evict_age=evict_age, saturate=saturate,
-                use_pallas=True)
+                evict_policy=evict_policy, lru_occupancy=lru_occupancy,
+                use_pallas=use_pallas)
             return state, (x, n_ev, n_ov)
         state, (xs, n_evs, n_ovs) = jax.lax.scan(body, state, chunk)
         return state, xs, jnp.sum(n_evs), jnp.sum(n_ovs)

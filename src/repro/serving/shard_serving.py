@@ -64,6 +64,7 @@ from repro.netsim.shard_stream import (ShardedFlowTable, init_sharded_table,
                                        n_local_buckets, shard_window_update,
                                        sharded_flow_table, stream_epoch)
 from repro.netsim.stream import FLOW_FEATURES, PacketChunk, PacketWindow
+from repro.serving.faults import FaultPolicy
 from repro.serving.stream_serving import (StreamingHybridServer,
                                           accumulate_stream_stats,
                                           chunk_classify_tail,
@@ -86,7 +87,10 @@ class ShardedStreamingServer(StreamingHybridServer):
                  threshold: float = 0.7, capacity: int = 64,
                  flush_every: int = 1, chunk_windows: Optional[int] = None,
                  flush_occupancy: Optional[float] = None,
+                 flush_deadline: Optional[float] = None,
                  evict_age: Optional[float] = None, saturate: bool = True,
+                 evict_policy: str = "timeout", lru_occupancy: float = 0.75,
+                 fault_policy: Optional[FaultPolicy] = None,
                  mesh: Optional[Mesh] = None, n_shards: Optional[int] = None,
                  use_pallas: bool = False, autotune: bool = False,
                  tiles: Optional[TileConfig] = None,
@@ -113,8 +117,11 @@ class ShardedStreamingServer(StreamingHybridServer):
                          capacity=capacity, flush_every=flush_every,
                          chunk_windows=chunk_windows,
                          flush_occupancy=flush_occupancy,
+                         flush_deadline=flush_deadline,
                          evict_age=evict_age,
-                         saturate=saturate, use_pallas=use_pallas,
+                         saturate=saturate, evict_policy=evict_policy,
+                         lru_occupancy=lru_occupancy,
+                         fault_policy=fault_policy, use_pallas=use_pallas,
                          autotune=autotune, tiles=tiles, fuse=fuse)
 
         def _shard_body(regs, epoch, art, w: PacketWindow, threshold, *,
@@ -128,7 +135,8 @@ class ShardedStreamingServer(StreamingHybridServer):
             sq = jax.tree.map(lambda a: a[0], regs)
             d = jax.lax.axis_index("shard")
             sq, e, own, x, n_ev, n_ov = shard_window_update(
-                sq, w, n_sh, d, evict_age=evict_age, saturate=saturate)
+                sq, w, n_sh, d, evict_age=evict_age, saturate=saturate,
+                evict_policy=evict_policy, lru_occupancy=lru_occupancy)
             sw_pred, conf = fused_classify(art, x, use_pallas=use_pallas,
                                            tiles=self.tiles)
             # exact merges: exactly one shard contributes a nonzero lane
@@ -241,7 +249,8 @@ class ShardedStreamingServer(StreamingHybridServer):
                                  length=cw.length, is_fwd=cw.is_fwd,
                                  valid=cw.valid)
                 sq, e, own, x, n_ev, n_ov = shard_window_update(
-                    sq, w, n_sh, d, evict_age=evict_age, saturate=saturate)
+                    sq, w, n_sh, d, evict_age=evict_age, saturate=saturate,
+                    evict_policy=evict_policy, lru_occupancy=lru_occupancy)
                 return (sq, jnp.minimum(ep, e)), (x, n_ev, n_ov)
 
             (sq, ep), (xs, n_evs, n_ovs) = jax.lax.scan(

@@ -49,11 +49,12 @@ from repro.core.hybrid import (DeferredDispatch, backpatch_pending,
                                dispatch, init_deferred)
 from repro.kernels.ops import fused_classify
 from repro.kernels.tuning import TileConfig
-from repro.netsim.stream import (FLOW_FEATURES, FlowTableState, PacketChunk,
-                                 PacketWindow, chunk_update_readout,
-                                 flow_table_readout, init_flow_table,
-                                 iter_chunks, iter_windows,
+from repro.netsim.stream import (EVICT_POLICIES, FLOW_FEATURES,
+                                 FlowTableState, PacketChunk, PacketWindow,
+                                 chunk_update_readout, flow_table_readout,
+                                 init_flow_table, iter_chunks, iter_windows,
                                  window_update_readout)
+from repro.serving.faults import FaultPolicy, FaultStats, GuardedBackend
 from repro.serving.hybrid_serving import HybridServer, HybridStats
 
 
@@ -73,8 +74,12 @@ class StreamStats:
     deferred: jax.Array       # i32: low-confidence rows past capacity that
                               #      never reached the backend (switch
                               #      answer kept — was silent before)
-    flushes: jax.Array        # i32: backend invocations (one per flush;
-                              #      == windows when flush_every == 1)
+    degraded: jax.Array       # i32: dispatched rows whose backend flush
+                              #      ultimately failed (fault policy) —
+                              #      provisional switch answer kept
+    flushes: jax.Array        # i32: successful backend invocations (one
+                              #      per served flush; == windows when
+                              #      flush_every == 1 and nothing degrades)
     evicted: jax.Array        # i32: buckets recycled by the aging sweep
     overflow: jax.Array       # i32: register slots newly saturated at 2^24
 
@@ -82,7 +87,8 @@ class StreamStats:
     def zero(cls) -> "StreamStats":
         z = lambda: jnp.zeros((), jnp.int32)
         return cls(windows=z(), packets=z(), handled=z(), backend_rows=z(),
-                   deferred=z(), flushes=z(), evicted=z(), overflow=z())
+                   deferred=z(), degraded=z(), flushes=z(), evicted=z(),
+                   overflow=z())
 
     @property
     def n_windows(self) -> int:
@@ -112,14 +118,25 @@ class StreamStats:
         kept the (low-confidence) switch answer. Nonzero means the stream
         wants a larger ``capacity`` or a larger ``flush_every`` — visible
         accounting for what used to be a silent drop. After the final
-        flush, ``handled + backend_rows + deferred == packets``."""
+        flush, ``handled + backend_rows + deferred + degraded ==
+        packets`` (see ``check``)."""
         return int(self.deferred)
 
     @property
+    def n_degraded(self) -> int:
+        """Dispatched rows whose backend flush ultimately failed under a
+        ``FaultPolicy`` — the tier degraded to switch-only for them: the
+        provisional switch prediction was kept, the back-patch skipped.
+        Always 0 without a fault policy (no failure path exists)."""
+        return int(self.degraded)
+
+    @property
     def n_flushes(self) -> int:
-        """Backend invocations so far: one per window at flush_every=1,
-        one per ``flush_every`` windows (plus the end-of-trace flush)
-        under cross-window batching."""
+        """Successful backend invocations so far: one per window at
+        flush_every=1, one per ``flush_every`` windows (plus the
+        end-of-trace flush) under cross-window batching. A flush that
+        ultimately fails under a ``FaultPolicy`` does not count — its
+        rows land in ``degraded``."""
         return int(self.flushes)
 
     @property
@@ -134,12 +151,37 @@ class StreamStats:
         more buckets) — the guard makes that visible, not silent."""
         return int(self.overflow)
 
+    def check(self) -> "StreamStats":
+        """Assert the accounting invariant: every valid packet is answered
+        exactly once — confidently at the switch (``handled``), by the
+        backend (``backend_rows``), by a kept switch answer past dispatch
+        capacity (``deferred``), or by a kept switch answer on a failed
+        flush (``degraded``):
+
+            handled + backend_rows + deferred + degraded == packets
+
+        Holds whenever no flush is pending; ``serve_trace`` calls it after
+        the guaranteed end-of-trace flush. Reading the counters syncs (the
+        caller is already at a sync point there). Returns self."""
+        n = (self.n_handled + self.total_backend_rows + self.n_deferred
+             + self.n_degraded)
+        if n != self.n_packets:
+            raise AssertionError(
+                f"StreamStats accounting invariant violated: "
+                f"handled={self.n_handled}"
+                f" + backend_rows={self.total_backend_rows}"
+                f" + deferred={self.n_deferred}"
+                f" + degraded={self.n_degraded} = {n}"
+                f" != packets={self.n_packets}")
+        return self
+
     def __repr__(self):
         return (f"StreamStats(windows={self.n_windows}, "
                 f"packets={self.n_packets}, "
                 f"fraction_handled={self.fraction_handled:.3f}, "
                 f"backend_rows={self.total_backend_rows}, "
-                f"deferred={self.n_deferred}, flushes={self.n_flushes}, "
+                f"deferred={self.n_deferred}, degraded={self.n_degraded}, "
+                f"flushes={self.n_flushes}, "
                 f"evicted={self.n_evicted}, overflow={self.n_overflow})")
 
 
@@ -161,14 +203,41 @@ def accumulate_stream_stats(stats: StreamStats, w: PacketWindow, sw_pred,
     rows = jnp.sum(valid.astype(jnp.int32))
     frac = (n_handled.astype(jnp.float32)
             / jnp.maximum(n_valid, 1).astype(jnp.float32))
-    stats = StreamStats(windows=stats.windows + 1,
-                        packets=stats.packets + n_valid,
-                        handled=stats.handled + n_handled,
-                        backend_rows=stats.backend_rows + rows,
-                        deferred=stats.deferred + (n_fwd - rows),
-                        flushes=stats.flushes + 1,
-                        evicted=stats.evicted + n_evicted,
-                        overflow=stats.overflow + n_overflow)
+    stats = dataclasses.replace(
+        stats, windows=stats.windows + 1,
+        packets=stats.packets + n_valid,
+        handled=stats.handled + n_handled,
+        backend_rows=stats.backend_rows + rows,
+        deferred=stats.deferred + (n_fwd - rows),
+        flushes=stats.flushes + 1,
+        evicted=stats.evicted + n_evicted,
+        overflow=stats.overflow + n_overflow)
+    return stats, pred, frac, rows
+
+
+def degrade_window_stats(stats: StreamStats, w: PacketWindow, sw_pred, fwd,
+                         valid, n_evicted, n_overflow):
+    """Degraded epilogue for the per-window (flush_every=1) two-phase
+    path: this window's backend flush ultimately failed under the fault
+    policy, so every dispatched row keeps its provisional switch-tier
+    prediction — counted in ``degraded``, not ``backend_rows``, and
+    ``flushes`` does not advance (it counts successful invocations).
+    Returns (stats, pred, frac_handled, rows_degraded)."""
+    pred = jnp.where(w.valid, sw_pred, -1)               # pad lanes
+    n_valid = jnp.sum(w.valid.astype(jnp.int32))
+    n_handled = jnp.sum((w.valid & ~fwd).astype(jnp.int32))
+    n_fwd = jnp.sum(fwd.astype(jnp.int32))
+    rows = jnp.sum(valid.astype(jnp.int32))
+    frac = (n_handled.astype(jnp.float32)
+            / jnp.maximum(n_valid, 1).astype(jnp.float32))
+    stats = dataclasses.replace(
+        stats, windows=stats.windows + 1,
+        packets=stats.packets + n_valid,
+        handled=stats.handled + n_handled,
+        deferred=stats.deferred + (n_fwd - rows),
+        degraded=stats.degraded + rows,
+        evicted=stats.evicted + n_evicted,
+        overflow=stats.overflow + n_overflow)
     return stats, pred, frac, rows
 
 
@@ -199,6 +268,29 @@ def fold_flush_stats(stats: StreamStats, dd: DeferredDispatch) -> StreamStats:
     rows = jnp.sum(dd.valid.astype(jnp.int32))
     return dataclasses.replace(stats, backend_rows=stats.backend_rows + rows,
                                flushes=stats.flushes + 1)
+
+
+def fold_degraded_flush(stats: StreamStats,
+                        dd: DeferredDispatch) -> StreamStats:
+    """Flush-time fold when the backend ultimately failed: the cycle's
+    deferred rows keep their provisional switch predictions (the
+    back-patch is skipped) and land in ``degraded``; ``flushes`` does not
+    advance — it counts successful backend invocations only."""
+    rows = jnp.sum(dd.valid.astype(jnp.int32))
+    return dataclasses.replace(stats, degraded=stats.degraded + rows)
+
+
+def degrade_chunk_stats(stats: StreamStats,
+                        dd: DeferredDispatch) -> StreamStats:
+    """Corrective fold for a degraded chunk flush:
+    ``accumulate_chunk_stats`` folds the backend accounting inside the
+    jitted switch half, *before* the host backend runs — when the flush
+    then ultimately fails, move its rows to ``degraded`` and retract the
+    optimistic flush count."""
+    rows = jnp.sum(dd.valid.astype(jnp.int32))
+    return dataclasses.replace(
+        stats, backend_rows=stats.backend_rows - rows,
+        degraded=stats.degraded + rows, flushes=stats.flushes - 1)
 
 
 def defer_tail(stats, dd, pending, w: PacketWindow, sw_pred, fwd, buf, idx,
@@ -251,8 +343,9 @@ def accumulate_chunk_stats(stats: StreamStats, chunk, fwd,
     live = jnp.sum(jnp.any(chunk.valid, axis=1).astype(jnp.int32))
     frac = (n_handled.astype(jnp.float32)
             / jnp.maximum(n_valid, 1).astype(jnp.float32))
-    stats = StreamStats(
-        windows=stats.windows + live, packets=stats.packets + n_valid,
+    stats = dataclasses.replace(
+        stats, windows=stats.windows + live,
+        packets=stats.packets + n_valid,
         handled=stats.handled + n_handled,
         backend_rows=stats.backend_rows + rows,
         deferred=stats.deferred + (n_fwd - rows),
@@ -275,7 +368,10 @@ class StreamingHybridServer(HybridServer):
                  threshold: float = 0.7, capacity: int = 64,
                  flush_every: int = 1, chunk_windows: Optional[int] = None,
                  flush_occupancy: Optional[float] = None,
+                 flush_deadline: Optional[float] = None,
                  evict_age: Optional[float] = None, saturate: bool = True,
+                 evict_policy: str = "timeout", lru_occupancy: float = 0.75,
+                 fault_policy: Optional[FaultPolicy] = None,
                  use_pallas: bool = False, autotune: bool = False,
                  tiles: Optional[TileConfig] = None,
                  fuse: Optional[bool] = None):
@@ -327,6 +423,34 @@ class StreamingHybridServer(HybridServer):
         per-window deferred-row count costs one host sync per step, so
         the knob is opt-in; None keeps the fixed cadence (and the
         zero-sync step).
+
+        flush_deadline: deadline-triggered early flush for the
+        flush_every > 1 path (the occupancy knob's time-domain twin).
+        The host-side cycle tracker latches the earliest timestamp of
+        the cycle's first deferred window and flushes as soon as any
+        window's newest timestamp is at least this many (rebased)
+        seconds past it — bounding how *stale* a deferred row can get
+        on sparse streams that never fill the buffer. Same contract as
+        flush_occupancy: no recompile (an early flush only splits the
+        cycle), bit-identical final predictions, opt-in because reading
+        the window timestamps costs one host sync per step.
+
+        evict_policy: "timeout" (default) recycles any bucket idle for
+        evict_age seconds; "approx_lru" substitutes the pForest-style
+        pressure-triggered sweep (``netsim.stream.approx_lru_sweep``) —
+        multi-bit idle-age classes ranked by flow activity, evicting
+        only while occupancy exceeds ``lru_occupancy`` and preferring
+        oldest-then-smallest flows. Both need evict_age (for approx-LRU
+        it is the age-class quantization horizon).
+
+        fault_policy: wrap the backend in a ``serving.faults``
+        ``GuardedBackend`` — per-flush timeout, bounded retries with
+        exponential backoff, circuit breaker. Forces the two-phase
+        serving path (the guard runs on host; bit-identical to fused by
+        the equivalence oracle). When a flush ultimately fails the tier
+        degrades: dispatched rows keep their provisional switch-tier
+        predictions, counted in ``StreamStats.degraded``; with zero
+        faults predictions are bit-identical to an unguarded server.
         """
         if flush_every < 1:
             raise ValueError(f"flush_every must be >= 1, got {flush_every}")
@@ -348,6 +472,32 @@ class StreamingHybridServer(HybridServer):
                 raise ValueError("flush_occupancy needs flush_every > 1 "
                                  "(there is no deferral cycle to flush "
                                  "early at flush_every=1)")
+        if flush_deadline is not None:
+            if flush_deadline <= 0:
+                raise ValueError(f"flush_deadline must be > 0, "
+                                 f"got {flush_deadline}")
+            if flush_every == 1:
+                raise ValueError("flush_deadline needs flush_every > 1 "
+                                 "(there is no deferral cycle to flush "
+                                 "early at flush_every=1)")
+        if evict_policy not in EVICT_POLICIES:
+            raise ValueError(f"evict_policy must be one of "
+                             f"{EVICT_POLICIES}, got {evict_policy!r}")
+        if evict_policy == "approx_lru":
+            if evict_age is None:
+                raise ValueError("evict_policy='approx_lru' needs "
+                                 "evict_age (the idle-age quantization "
+                                 "horizon of the age classes)")
+            if not 0.0 < lru_occupancy < 1.0:
+                raise ValueError(f"lru_occupancy must be in (0, 1), "
+                                 f"got {lru_occupancy}")
+        if fault_policy is not None:
+            if fuse:
+                raise ValueError("fault_policy guards the host backend "
+                                 "call and therefore needs the two-phase "
+                                 "serving path; it cannot be combined "
+                                 "with fuse=True")
+            fuse = False
         super().__init__(artifact, backend_fn, threshold=threshold,
                          capacity=capacity, use_pallas=use_pallas,
                          autotune=autotune, tiles=tiles, fuse=fuse)
@@ -356,8 +506,14 @@ class StreamingHybridServer(HybridServer):
         self.flush_every = flush_every
         self.chunk_windows = chunk_windows
         self.flush_occupancy = flush_occupancy
+        self.flush_deadline = flush_deadline
         self.evict_age = evict_age
         self.saturate = saturate
+        self.evict_policy = evict_policy
+        self.lru_occupancy = lru_occupancy
+        self.fault_policy = fault_policy
+        self._guard = (GuardedBackend(backend_fn, fault_policy)
+                       if fault_policy is not None else None)
         self._state = self._make_state()
         self._stats = StreamStats.zero()
         self._reset_deferred()
@@ -372,6 +528,7 @@ class StreamingHybridServer(HybridServer):
             between them."""
             state, x, n_ev, n_ov = window_update_readout(
                 state, w, evict_age=evict_age, saturate=saturate,
+                evict_policy=evict_policy, lru_occupancy=lru_occupancy,
                 use_pallas=use_pallas)
             sw_pred, conf = fused_classify(art, x, use_pallas=use_pallas,
                                            tiles=self.tiles)
@@ -398,6 +555,11 @@ class StreamingHybridServer(HybridServer):
 
         self._stream_epilogue = jax.jit(accumulate_stream_stats,
                                         donate_argnums=(0,))
+
+        # degraded epilogue: the flush_every=1 two-phase window whose
+        # backend flush ultimately failed keeps its switch predictions
+        self._degrade_window = jax.jit(degrade_window_stats,
+                                       donate_argnums=(0,))
 
         # -- cross-window deferred dispatch (flush_every > 1) ---------------
 
@@ -436,6 +598,19 @@ class StreamingHybridServer(HybridServer):
 
         self._flush_patch = jax.jit(flush_patch, donate_argnums=(0, 1, 2))
 
+        def flush_degraded(stats, dd, pending):
+            """Degraded flush: the backend ultimately failed, so the
+            pending set — which already holds the provisional switch
+            predictions — comes back *unpatched* as the flush result;
+            the cycle's rows fold into ``degraded``. ``pending`` is not
+            donated: it is returned as-is."""
+            stats = fold_degraded_flush(stats, dd)
+            return (stats, jax.tree.map(jnp.zeros_like, dd), pending,
+                    jnp.full_like(pending, -1))
+
+        self._flush_degraded = jax.jit(flush_degraded,
+                                       donate_argnums=(0, 1))
+
         # -- device-resident chunked streaming (chunk_windows) --------------
 
         def chunk_switch(art, state, stats, chunk: PacketChunk, threshold):
@@ -451,6 +626,7 @@ class StreamingHybridServer(HybridServer):
             every per-row op is row-independent."""
             state, xs, n_ev, n_ov = chunk_update_readout(
                 state, chunk, evict_age=evict_age, saturate=saturate,
+                evict_policy=evict_policy, lru_occupancy=lru_occupancy,
                 use_pallas=use_pallas)
             stats, dd, pending, frac, rows = chunk_classify_tail(
                 art, stats, chunk, xs, n_ev, n_ov, threshold, capacity,
@@ -477,6 +653,9 @@ class StreamingHybridServer(HybridServer):
 
         self._chunk_patch = jax.jit(chunk_patch, donate_argnums=(0,))
 
+        self._degrade_chunk = jax.jit(degrade_chunk_stats,
+                                      donate_argnums=(0,))
+
     # -- streaming state ----------------------------------------------------
 
     def _make_state(self):
@@ -498,6 +677,7 @@ class StreamingHybridServer(HybridServer):
         chunk.)"""
         self._pending_n = 0
         self._occ_rows = 0
+        self._cycle_born = None
         self._flush_queue = []
         if self.flush_every > 1:
             self._dd = self._make_deferred()
@@ -520,6 +700,22 @@ class StreamingHybridServer(HybridServer):
         """Windows deferred in the current (unflushed) cycle."""
         return self._pending_n
 
+    @property
+    def fault_stats(self) -> Optional[FaultStats]:
+        """Host-side telemetry of the fault-policy guard (None without a
+        ``fault_policy``): attempts, retries, timeouts, breaker
+        transitions — see ``serving.faults.FaultStats``."""
+        return self._guard.stats if self._guard is not None else None
+
+    def _host_backend(self, rows):
+        """The two-phase host backend invocation, fault-guarded when a
+        policy is set. Returns the backend's predictions, or None when
+        the flush ultimately failed and the caller must degrade (keep
+        provisional switch predictions, fold into ``degraded``)."""
+        if self._guard is None:
+            return self.backend_fn(rows)
+        return self._guard(rows)
+
     def flow_table(self) -> jax.Array:
         """(n_buckets, 8) feature table from the current registers."""
         return flow_table_readout(self._state)
@@ -531,6 +727,8 @@ class StreamingHybridServer(HybridServer):
         self._state = self._make_state()
         self._stats = StreamStats.zero()
         self._reset_deferred()
+        if self._guard is not None:
+            self._guard.reset()
 
     # -- serving ------------------------------------------------------------
 
@@ -575,9 +773,14 @@ class StreamingHybridServer(HybridServer):
             (self._state, sw_pred, fwd, buf, idx, valid,
              counts) = self._stream_switch(self.artifact, self._state, w,
                                            tau)
-            be_pred = jnp.asarray(self.backend_fn(buf))
+            be = self._host_backend(buf)
+            if be is None:          # flush failed: degrade to switch-only
+                self._stats, pred, frac, rows = self._degrade_window(
+                    self._stats, w, sw_pred, fwd, valid, *counts)
+                return pred, HybridStats(frac, rows, self.capacity)
             self._stats, pred, frac, rows = self._stream_epilogue(
-                self._stats, w, sw_pred, be_pred, idx, valid, fwd, *counts)
+                self._stats, w, sw_pred, jnp.asarray(be), idx, valid, fwd,
+                *counts)
             return pred, HybridStats(frac, rows, self.capacity)
         # deferred path: no backend here — defer, auto-flush when full
         (self._state, self._stats, self._dd, self._pending, pred, frac,
@@ -592,6 +795,17 @@ class StreamingHybridServer(HybridServer):
             self._occ_rows += int(rows)
             full = (self._occ_rows
                     >= self.flush_occupancy * self._dd.slots)
+        if self.flush_deadline is not None:
+            # deadline-triggered early flush: age the oldest pending
+            # window (earliest ts latched at cycle start) against this
+            # window's newest timestamp — one host sync, opt-in
+            ts = np.asarray(w.ts)[np.asarray(w.valid)]
+            if ts.size:
+                if self._cycle_born is None:
+                    self._cycle_born = float(ts.min())
+                if (not full and float(ts.max()) - self._cycle_born
+                        >= self.flush_deadline):
+                    full = True
         if full:
             # queued, not overwritten: a manual caller who steps through
             # several cycles without consuming loses nothing
@@ -628,6 +842,7 @@ class StreamingHybridServer(HybridServer):
                 self._fused_ok = True
                 self._pending_n = 0
                 self._occ_rows = 0
+                self._cycle_born = None
                 return n, patched
             except (jax.errors.JAXTypeError, TypeError):
                 # tracing failed before execution: nothing was donated
@@ -636,12 +851,18 @@ class StreamingHybridServer(HybridServer):
             self._stats, self._dd, patched, self._pending = \
                 self._flush_fused(self._stats, self._dd, self._pending)
         else:
-            be_pred = jnp.asarray(self.backend_fn(self._flush_rows_host()))
-            self._stats, self._dd, patched, self._pending = \
-                self._flush_patch(self._stats, self._dd, self._pending,
-                                  be_pred)
+            be = self._host_backend(self._flush_rows_host())
+            if be is None:      # flush failed: keep provisional answers
+                self._stats, self._dd, patched, self._pending = \
+                    self._flush_degraded(self._stats, self._dd,
+                                         self._pending)
+            else:
+                self._stats, self._dd, patched, self._pending = \
+                    self._flush_patch(self._stats, self._dd, self._pending,
+                                      jnp.asarray(be))
         self._pending_n = 0
         self._occ_rows = 0
+        self._cycle_born = None
         return n, patched
 
     def consume_flush(self):
@@ -696,8 +917,12 @@ class StreamingHybridServer(HybridServer):
         self._state, self._stats, dd, pending, frac, rows = \
             self._chunk_switch(self.artifact, self._state, self._stats,
                                chunk, tau)
-        be_pred = jnp.asarray(self.backend_fn(self._flush_rows_host(dd)))
-        patched = self._chunk_patch(pending, be_pred, dd)
+        be = self._host_backend(self._flush_rows_host(dd))
+        if be is None:          # flush failed: provisional set unpatched,
+            #                     retract the optimistic in-graph fold
+            self._stats = self._degrade_chunk(self._stats, dd)
+            return pending, HybridStats(frac, rows, self.capacity)
+        patched = self._chunk_patch(pending, jnp.asarray(be), dd)
         return patched, HybridStats(frac, rows, self.capacity)
 
     def serve_trace(self, trace, *, t0: Optional[float] = None):
@@ -730,7 +955,7 @@ class StreamingHybridServer(HybridServer):
             flat = (np.concatenate([np.asarray(p) for p in preds])
                     [:trace.n_packets] if preds
                     else np.zeros((0,), np.int32))
-            return jnp.asarray(flat), self._stats
+            return jnp.asarray(flat), self._stats.check()
         for w in iter_windows(trace, self.window, self.n_buckets, t0=t0):
             pred, _ = self.step(w)
             preds.append(pred)
@@ -744,4 +969,4 @@ class StreamingHybridServer(HybridServer):
             preds[-k:] = [patched[i] for i in range(k)]
         flat = (np.concatenate([np.asarray(p) for p in preds])
                 [:trace.n_packets] if preds else np.zeros((0,), np.int32))
-        return jnp.asarray(flat), self._stats
+        return jnp.asarray(flat), self._stats.check()

@@ -50,9 +50,11 @@ def test_run_suites_empty_returns_cleanly():
 
 def test_all_suites_list_covers_every_emitter():
     """The --all-suites chain names each standalone bench-v1 emitter,
-    including the cross-window batching bench."""
+    including the cross-window batching and adversarial-scenario
+    benches."""
     assert set(EXTRA_SUITES) == {"kernel_microbench", "stream_bench",
-                                 "shard_stream_bench", "batch_bench"}
+                                 "shard_stream_bench", "batch_bench",
+                                 "scenario_bench"}
 
 
 # ---------------------------------------------------------------------------

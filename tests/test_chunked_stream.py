@@ -34,8 +34,9 @@ from repro.ml.trees import fit_random_forest, predict_tree_ensemble
 from repro.netsim.features import flow_features
 from repro.netsim.packets import synth_trace
 from repro.netsim.stream import (OVERFLOW_LIMIT, REGISTER_FIELDS,
-                                 PacketChunk, chunk_update_readout,
-                                 init_flow_table, iter_chunks, iter_windows,
+                                 PacketChunk, PacketWindow,
+                                 chunk_update_readout, init_flow_table,
+                                 iter_chunks, iter_windows,
                                  window_update_readout)
 from repro.serving.stream_serving import StreamingHybridServer
 
@@ -377,3 +378,110 @@ def test_fused_classify_loop_impl_rejected_for_classical():
     with pytest.raises(ValueError):
         fused_classify(art, x, use_pallas=True, interpret=True,
                        tiles=TileConfig(impl="loop"))
+
+
+# ---------------------------------------------------------------------------
+# lifecycle at chunk boundaries: evict / re-admit / saturate mid-chunk
+# ---------------------------------------------------------------------------
+
+def _lane_chunk(entries, k):
+    """(k, 1) chunk with one packet per listed window: entries maps
+    window index -> (bucket, ts, length); unlisted windows are dead."""
+    z = lambda dt, v: jnp.full((k, 1), v, dt)
+    bucket, ts, length = z(jnp.int32, 0), z(jnp.float32, 0.0), \
+        z(jnp.float32, 0.0)
+    valid = jnp.zeros((k, 1), bool)
+    for i, (b, t, ln) in entries.items():
+        bucket = bucket.at[i, 0].set(b)
+        ts = ts.at[i, 0].set(t)
+        length = length.at[i, 0].set(ln)
+        valid = valid.at[i, 0].set(True)
+    return PacketChunk(bucket=bucket, ts=ts, length=length,
+                       is_fwd=jnp.ones((k, 1), jnp.float32), valid=valid)
+
+
+def _windows_of(chunk):
+    return [PacketWindow(**{f: getattr(chunk, f)[i] for f in W_FIELDS})
+            for i in range(chunk.n_windows)]
+
+
+def test_evict_readmit_within_one_chunk_bit_matches_stepwise():
+    """Regression for the carried below-mask: a flow evicted mid-chunk
+    (idle past evict_age) and re-admitted by a *later window of the same
+    chunk* must read out as a fresh one-packet flow, bit-identical to the
+    per-window path — a scan carry that kept any stale register (or the
+    below-threshold mask) across the eviction would diverge here."""
+    # w0: flow in bucket 3; w1: unrelated bucket ages it out (idle 10 >
+    # evict_age 2); w2: bucket 3 re-admitted; w3: it accumulates again
+    entries = {0: (3, 0.0, 100.0), 1: (5, 10.0, 50.0),
+               2: (3, 10.5, 70.0), 3: (3, 10.6, 30.0)}
+    chunk = _lane_chunk(entries, k=4)
+    s_ref = init_flow_table(16)
+    xs_ref, ev_ref = [], 0
+    for w in _windows_of(chunk):
+        s_ref, x, ev, _ = window_update_readout(s_ref, w, evict_age=2.0,
+                                                use_pallas=False)
+        xs_ref.append(np.asarray(x))
+        ev_ref += int(ev)
+    assert ev_ref == 1                        # the mid-chunk eviction fired
+    s = init_flow_table(16)
+    s, xs, ev, _ = chunk_update_readout(s, chunk, evict_age=2.0,
+                                        use_pallas=False)
+    assert int(ev) == 1
+    for i, x_ref in enumerate(xs_ref):
+        np.testing.assert_array_equal(np.asarray(xs)[i], x_ref,
+                                      err_msg=f"window {i}")
+    # the re-admitted readout is a *fresh* flow: 1 packet, 70 bytes
+    assert float(np.asarray(xs)[2, 0, 0]) == 1.0
+    assert float(np.asarray(xs)[2, 0, 1]) == 70.0
+    # and the final registers agree with the stepwise path bitwise
+    for f in REGISTER_FIELDS:
+        np.testing.assert_array_equal(np.asarray(getattr(s, f)),
+                                      np.asarray(getattr(s_ref, f)))
+
+
+def test_saturate_across_chunk_boundary_counts_once():
+    """A register crossing the 2^24 envelope exactly at a chunk boundary:
+    chunk 1 leaves it just below, chunk 2's first window crosses — the
+    overflow must count once, and identically to the stepwise path."""
+    below = OVERFLOW_LIMIT - 512.0
+    c1 = _lane_chunk({0: (3, 0.0, below), 1: (3, 0.1, 256.0)}, k=2)
+    c2 = _lane_chunk({0: (3, 0.2, 1024.0), 1: (3, 0.3, 64.0)}, k=2)
+    s = init_flow_table(16)
+    ov = 0
+    for c in (c1, c2):
+        s, _, _, o = chunk_update_readout(s, c, saturate=True,
+                                          use_pallas=False)
+        ov += int(o)
+    s_ref = init_flow_table(16)
+    ov_ref = 0
+    for c in (c1, c2):
+        for w in _windows_of(c):
+            s_ref, _, _, o = window_update_readout(s_ref, w, saturate=True,
+                                                   use_pallas=False)
+            ov_ref += int(o)
+    # byte_count and fwd_bytes clamp together, once, at the crossing
+    assert ov == ov_ref == 2
+    assert float(s.byte_count[3]) == OVERFLOW_LIMIT
+    for f in REGISTER_FIELDS:
+        np.testing.assert_array_equal(np.asarray(getattr(s, f)),
+                                      np.asarray(getattr(s_ref, f)))
+
+
+def test_serving_evict_readmit_same_chunk_bit_matches(chunk_setup):
+    """Serving-level version of the regression: an aggressive evict_age
+    forces evictions inside nearly every chunk (including re-admissions
+    later in the same chunk); the chunked server must still bit-match the
+    per-window server end to end, and the accounting invariant holds."""
+    trace, art, backend = chunk_setup
+    kw = dict(n_buckets=N_BUCKETS, window=128, threshold=0.9, capacity=32,
+              evict_age=0.25, saturate=True)
+    ref = StreamingHybridServer(art, backend, **kw)
+    p_ref, s_ref = ref.serve_trace(trace)
+    assert s_ref.n_evicted > s_ref.n_windows  # evictions in most windows
+    srv = StreamingHybridServer(art, backend, chunk_windows=4, **kw)
+    p, s = srv.serve_trace(trace)             # serve_trace runs check()
+    np.testing.assert_array_equal(np.asarray(p), np.asarray(p_ref))
+    assert s.n_evicted == s_ref.n_evicted
+    np.testing.assert_array_equal(np.asarray(srv.flow_table()),
+                                  np.asarray(ref.flow_table()))

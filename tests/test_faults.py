@@ -1,0 +1,371 @@
+"""Backend fault tolerance: policy, breaker, injection, and degradation.
+
+The contracts under test (DESIGN.md §9):
+
+* ``GuardedBackend`` applies the FaultPolicy faithfully — bounded retries
+  with the exponential backoff schedule, per-attempt timeouts that
+  abandon the worker, and the CLOSED -> OPEN -> HALF_OPEN breaker state
+  machine with exact telemetry;
+* ``FaultyBackend`` replays the identical fault sequence for identical
+  seeds (an outage never shifts the downstream error pattern), and
+  ``reset()`` rewinds it exactly;
+* zero-fault bit-identity — a server built with a FaultPolicy but no
+  injected faults reproduces the unguarded server's predictions bit for
+  bit on all three serving paths (per-window, deferred flush_every > 1,
+  chunked megastep) and on the sharded tier;
+* graceful degradation — when a flush ultimately fails, serve_trace still
+  completes: degraded rows keep their provisional switch predictions,
+  ``StreamStats.degraded`` counts them, and the accounting invariant
+  ``handled + backend_rows + deferred + degraded == packets`` holds
+  (asserted by ``StreamStats.check()`` on every serve_trace).
+"""
+
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.mapping import map_tree_ensemble
+from repro.ml.trees import fit_random_forest, predict_tree_ensemble
+from repro.netsim.features import flow_features
+from repro.netsim.packets import synth_trace
+from repro.serving.faults import (CLOSED, HALF_OPEN, OPEN, BackendFault,
+                                  FaultPolicy, FaultyBackend,
+                                  GuardedBackend)
+from repro.serving.shard_serving import ShardedStreamingServer
+from repro.serving.stream_serving import StreamingHybridServer
+
+N_BUCKETS = 1 << 12
+
+# a policy with no real waiting anywhere: tests run instantly
+FAST = FaultPolicy(max_retries=1, backoff_base_s=0.0,
+                   breaker_threshold=3, breaker_cooldown=2)
+
+
+@pytest.fixture(scope="module")
+def fault_setup():
+    trace = synth_trace(n_flows=400, seed=3)
+    b, table = flow_features(trace, n_buckets=N_BUCKETS)
+    first_idx = np.unique(np.asarray(trace.flow_id), return_index=True)[1]
+    rows = np.asarray(table)[np.asarray(b)[first_idx]].astype(np.float32)
+    small = fit_random_forest(rows, trace.flow_label, n_classes=2,
+                              n_trees=4, max_depth=3, seed=0)
+    big = fit_random_forest(rows, trace.flow_label, n_classes=2,
+                            n_trees=12, max_depth=5, seed=1)
+    art = map_tree_ensemble(small, rows.shape[1])
+    return trace, art, (lambda r: predict_tree_ensemble(big, r))
+
+
+# ---------------------------------------------------------------------------
+# FaultPolicy validation
+# ---------------------------------------------------------------------------
+
+def test_policy_validation():
+    with pytest.raises(ValueError):
+        FaultPolicy(timeout_s=0.0)
+    with pytest.raises(ValueError):
+        FaultPolicy(max_retries=-1)
+    with pytest.raises(ValueError):
+        FaultPolicy(breaker_threshold=-1)
+    with pytest.raises(ValueError):
+        FaultPolicy(breaker_threshold=2, breaker_cooldown=0)
+    FaultPolicy(breaker_threshold=0, breaker_cooldown=0)   # breaker off: ok
+
+
+# ---------------------------------------------------------------------------
+# GuardedBackend unit behavior (scripted backends, injected sleep)
+# ---------------------------------------------------------------------------
+
+def _scripted(outcomes):
+    """Backend failing/succeeding per a script of bools (True = ok)."""
+    it = iter(outcomes)
+
+    def fn(rows):
+        if not next(it):
+            raise BackendFault("scripted")
+        return np.asarray(rows)[:, 0]
+    return fn
+
+
+def test_guard_success_passthrough():
+    g = GuardedBackend(_scripted([True]), FAST, sleep=lambda s: None)
+    out = g(np.ones((3, 2)))
+    np.testing.assert_array_equal(out, [1.0, 1.0, 1.0])
+    assert g.stats.flushes_ok == 1 and g.stats.attempts == 1
+    assert g.stats.retries == 0 and g.state == CLOSED
+
+
+def test_guard_retries_then_succeeds_with_backoff_schedule():
+    slept = []
+    p = FaultPolicy(max_retries=3, backoff_base_s=0.01, backoff_factor=2.0,
+                    breaker_threshold=0)
+    g = GuardedBackend(_scripted([False, False, True]), p,
+                       sleep=slept.append)
+    assert g(np.ones((2, 2))) is not None
+    assert g.stats.attempts == 3 and g.stats.retries == 2
+    assert slept == [0.01, 0.02]            # base * factor**i, exponential
+    assert g.stats.flushes_ok == 1 and g.stats.flushes_failed == 0
+
+
+def test_guard_exhausted_retries_returns_none():
+    g = GuardedBackend(_scripted([False] * 2), FAST, sleep=lambda s: None)
+    assert g(np.ones((2, 2))) is None
+    assert g.stats.flushes_failed == 1 and g.stats.attempts == 2
+    assert g.consecutive_failures == 1 and g.state == CLOSED
+
+
+def test_guard_timeout_abandons_attempt():
+    import threading
+    release = threading.Event()
+
+    def slow(rows):
+        release.wait(5.0)
+        return np.zeros(len(rows))
+
+    p = FaultPolicy(timeout_s=0.05, max_retries=0, breaker_threshold=0)
+    g = GuardedBackend(slow, p)
+    try:
+        assert g(np.ones((2, 2))) is None
+        assert g.stats.timeouts == 1 and g.stats.flushes_failed == 1
+    finally:
+        release.set()                       # unstick the abandoned worker
+
+
+def test_breaker_opens_rejects_probes_and_closes():
+    # 3 consecutive failed flushes open; 2 rejected during cooldown; the
+    # HALF_OPEN probe (single attempt) succeeds and closes the breaker
+    script = [False] * 6 + [True, True]
+    g = GuardedBackend(_scripted(script), FAST, sleep=lambda s: None)
+    for _ in range(3):                      # 2 attempts each -> 6 failures
+        assert g(np.ones((1, 1))) is None
+    assert g.state == OPEN and g.stats.breaker_opens == 1
+    for _ in range(2):                      # cooldown: no backend call
+        assert g(np.ones((1, 1))) is None
+    assert g.stats.rejected == 2 and g.stats.attempts == 6
+    assert g(np.ones((1, 1))) is not None   # the probe: 1 attempt, closes
+    assert g.state == CLOSED and g.stats.breaker_closes == 1
+    assert g.stats.attempts == 7            # probe got exactly one attempt
+    assert g(np.ones((1, 1))) is not None   # back to normal service
+
+
+def test_breaker_failed_probe_reopens():
+    script = [False] * 6 + [False] + [True]
+    g = GuardedBackend(_scripted(script), FAST, sleep=lambda s: None)
+    for _ in range(3 + 2):                  # open + drain cooldown
+        g(np.ones((1, 1)))
+    assert g(np.ones((1, 1))) is None       # HALF_OPEN probe fails
+    assert g.state == OPEN and g.stats.breaker_opens == 2
+    assert g.stats.attempts == 7            # the probe was single-attempt
+
+
+def test_guard_reset_restores_closed_breaker():
+    g = GuardedBackend(_scripted([False] * 6), FAST, sleep=lambda s: None)
+    for _ in range(3):
+        g(np.ones((1, 1)))
+    assert g.state == OPEN
+    g.reset()
+    assert g.state == CLOSED and g.stats.attempts == 0
+    assert g.consecutive_failures == 0
+
+
+# ---------------------------------------------------------------------------
+# FaultyBackend injection
+# ---------------------------------------------------------------------------
+
+def test_faulty_backend_validation():
+    ok = lambda r: r
+    with pytest.raises(ValueError):
+        FaultyBackend(ok, error_rate=1.5)
+    with pytest.raises(ValueError):
+        FaultyBackend(ok, spike_rate=-0.1)
+
+
+def _fault_pattern(fb, n):
+    pat = []
+    for _ in range(n):
+        try:
+            fb(np.ones((1, 1)))
+            pat.append(False)
+        except BackendFault:
+            pat.append(True)
+    return pat
+
+
+def test_faulty_backend_seeded_determinism_and_reset():
+    mk = lambda: FaultyBackend(lambda r: r, error_rate=0.5, seed=11)
+    a, b = mk(), mk()
+    pa = _fault_pattern(a, 40)
+    assert pa == _fault_pattern(b, 40)      # same seed, same sequence
+    assert any(pa) and not all(pa)
+    a.reset()
+    assert _fault_pattern(a, 40) == pa      # reset rewinds exactly
+    c = FaultyBackend(lambda r: r, error_rate=0.5, seed=12)
+    assert _fault_pattern(c, 40) != pa      # different seed differs
+
+
+def test_faulty_backend_outages_dont_shift_error_pattern():
+    # both variates are drawn unconditionally per call, so adding an
+    # outage window changes only the outage calls' outcomes
+    base = _fault_pattern(
+        FaultyBackend(lambda r: r, error_rate=0.3, seed=5), 30)
+    out = _fault_pattern(
+        FaultyBackend(lambda r: r, error_rate=0.3, seed=5,
+                      outages=range(10, 14)), 30)
+    assert all(out[i] for i in range(10, 14))
+    assert out[:10] == base[:10] and out[14:] == base[14:]
+
+
+# ---------------------------------------------------------------------------
+# serving integration: zero-fault bit-identity + graceful degradation
+# ---------------------------------------------------------------------------
+
+PATHS = [dict(), dict(flush_every=4), dict(chunk_windows=4)]
+
+
+@pytest.mark.parametrize("path_kw", PATHS,
+                         ids=["per_window", "deferred", "chunked"])
+def test_zero_fault_bit_identity(fault_setup, path_kw):
+    """A policy-guarded server with a clean backend is invisible: its
+    predictions equal the unguarded server's bit for bit on every path."""
+    trace, art, backend = fault_setup
+    kw = dict(n_buckets=N_BUCKETS, window=256, threshold=0.9, capacity=32,
+              **path_kw)
+    ref, _ = StreamingHybridServer(art, backend, **kw).serve_trace(trace)
+    srv = StreamingHybridServer(art, backend, fault_policy=FAST, **kw)
+    got, stats = srv.serve_trace(trace)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+    assert stats.n_degraded == 0
+    assert srv.fault_stats.flushes_failed == 0
+    assert srv.fault_stats.flushes_ok == stats.n_flushes
+
+
+@pytest.mark.parametrize("path_kw", PATHS,
+                         ids=["per_window", "deferred", "chunked"])
+def test_degraded_rows_keep_switch_predictions(fault_setup, path_kw):
+    """With injected flush failures, serve_trace completes; degraded rows
+    carry the provisional switch answer and the accounting invariant
+    (asserted by serve_trace via StreamStats.check) balances."""
+    trace, art, backend = fault_setup
+    kw = dict(n_buckets=N_BUCKETS, window=256, threshold=0.9, capacity=32,
+              **path_kw)
+    # the outage window hard-fails backend calls 0-3 — both attempts of
+    # the first two flushes — so degradation fires deterministically on
+    # every path regardless of how the 40% error dice land
+    faulty = FaultyBackend(backend, error_rate=0.4, seed=9,
+                           outages=range(0, 4))
+    srv = StreamingHybridServer(art, faulty, fault_policy=FAST, **kw)
+    preds, stats = srv.serve_trace(trace)     # check() runs inside
+    assert stats.n_degraded > 0
+    assert preds.shape == (trace.n_packets,)
+    assert (stats.n_handled + stats.total_backend_rows + stats.n_deferred
+            + stats.n_degraded == stats.n_packets)
+    g = srv.fault_stats
+    assert g.flushes_failed > 0
+    # flushes telemetry counts only successful backend invocations
+    assert stats.n_flushes == g.flushes_ok
+    # the degraded predictions are the switch tier's: still in label range
+    assert set(np.unique(np.asarray(preds))) <= {0, 1}
+
+
+def test_degraded_predictions_match_switch_tier(fault_setup):
+    """Under a total outage every window degrades — the stream's answers
+    must equal a switch-only server (threshold accept + provisional
+    low-confidence answers, no backend corrections anywhere)."""
+    trace, art, backend = fault_setup
+    kw = dict(n_buckets=N_BUCKETS, window=256, threshold=0.9, capacity=32)
+    dead = FaultyBackend(backend, error_rate=1.0, seed=0)
+    srv = StreamingHybridServer(art, dead, fault_policy=FAST, **kw)
+    preds, stats = srv.serve_trace(trace)
+    assert stats.total_backend_rows == 0 and stats.n_flushes == 0
+    assert stats.n_degraded > 0
+    # capacity-overflow rows stay in `deferred` even under a dead backend
+    assert (stats.n_handled + stats.n_deferred + stats.n_degraded
+            == stats.n_packets)
+    # switch-only oracle: the same server with the backend never invoked
+    # because nothing clears the confidence bar -> threshold=ignored here;
+    # instead compare against the guarded server's own switch half by
+    # re-serving with capacity=0 (no rows ever reach a backend)
+    srv0 = StreamingHybridServer(art, backend, n_buckets=N_BUCKETS,
+                                 window=256, threshold=0.9, capacity=0)
+    ref, _ = srv0.serve_trace(trace)
+    np.testing.assert_array_equal(np.asarray(preds), np.asarray(ref))
+
+
+def test_breaker_opens_under_sustained_faults(fault_setup):
+    trace, art, backend = fault_setup
+    faulty = FaultyBackend(backend, error_rate=0.9, seed=2)
+    srv = StreamingHybridServer(art, faulty, fault_policy=FAST,
+                                n_buckets=N_BUCKETS, window=256,
+                                threshold=0.9, capacity=32)
+    _, stats = srv.serve_trace(trace)
+    g = srv.fault_stats
+    assert g.breaker_opens >= 1
+    assert g.rejected >= 1                  # some flushes short-circuited
+    assert stats.n_degraded > 0
+
+
+def test_fault_policy_rejects_fused(fault_setup):
+    trace, art, backend = fault_setup
+    with pytest.raises(ValueError):
+        StreamingHybridServer(art, backend, n_buckets=N_BUCKETS,
+                              window=256, fault_policy=FAST, fuse=True)
+
+
+def test_server_reset_resets_guard(fault_setup):
+    """reset() starts a fresh guard epoch: identical reruns see identical
+    breaker behavior and per-run telemetry."""
+    trace, art, backend = fault_setup
+    faulty = FaultyBackend(backend, error_rate=0.4, seed=9)
+    srv = StreamingHybridServer(art, faulty, fault_policy=FAST,
+                                n_buckets=N_BUCKETS, window=256,
+                                threshold=0.9, capacity=32)
+    p1, s1 = srv.serve_trace(trace)
+    g1 = dataclasses.asdict(srv.fault_stats)
+    srv.reset()
+    faulty.reset()
+    p2, s2 = srv.serve_trace(trace)
+    np.testing.assert_array_equal(np.asarray(p1), np.asarray(p2))
+    assert s1.n_degraded == s2.n_degraded
+    assert dataclasses.asdict(srv.fault_stats) == g1
+
+
+# ---------------------------------------------------------------------------
+# sharded tier: the degradation machinery is layout-agnostic
+# ---------------------------------------------------------------------------
+
+SHARDS = [d for d in (1, 2) if jax.device_count() % d == 0
+          and d <= jax.device_count()]
+
+
+@pytest.mark.parametrize("n_shards", SHARDS)
+def test_sharded_zero_fault_bit_identity(fault_setup, n_shards):
+    trace, art, backend = fault_setup
+    kw = dict(n_buckets=N_BUCKETS, window=256, threshold=0.9, capacity=32,
+              n_shards=n_shards)
+    ref, _ = ShardedStreamingServer(art, backend, **kw).serve_trace(trace)
+    srv = ShardedStreamingServer(art, backend, fault_policy=FAST, **kw)
+    got, stats = srv.serve_trace(trace)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+    assert stats.n_degraded == 0
+
+
+@pytest.mark.parametrize("n_shards", SHARDS)
+def test_sharded_degrades_like_single_device(fault_setup, n_shards):
+    """The sharded tier under the same fault sequence degrades the same
+    rows to the same provisional answers as the single-device tier."""
+    trace, art, backend = fault_setup
+    kw = dict(window=256, threshold=0.9, capacity=32)
+    f1 = FaultyBackend(backend, error_rate=0.4, seed=9,
+                       outages=range(0, 4))
+    ref, rstats = StreamingHybridServer(
+        art, f1, fault_policy=FAST, n_buckets=N_BUCKETS,
+        **kw).serve_trace(trace)
+    f2 = FaultyBackend(backend, error_rate=0.4, seed=9,
+                       outages=range(0, 4))
+    srv = ShardedStreamingServer(art, f2, fault_policy=FAST,
+                                 n_buckets=N_BUCKETS, n_shards=n_shards,
+                                 **kw)
+    got, stats = srv.serve_trace(trace)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+    assert stats.n_degraded == rstats.n_degraded > 0

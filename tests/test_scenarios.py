@@ -1,0 +1,260 @@
+"""Adversarial scenario generators + approx-LRU eviction under attack.
+
+The contracts under test:
+
+* every generator in ``netsim.scenarios`` returns a well-formed
+  ``PacketTrace`` (time-sorted, valid flow ids, per-flow labels with
+  attack flows labeled 1) and replays identically for identical seeds;
+* ``collision_storm`` actually lands its attack flows in exactly the
+  targeted buckets of the same ``fnv1a_hash`` the serving tiers use;
+* the pForest-style approx-LRU sweep evicts only under occupancy
+  pressure, prefers idle/low-activity buckets, never evicts a bucket
+  seen in the current window, and stays a no-op on quiet tables (the
+  slow-loris resistance a timeout sweep lacks);
+* serving-level: the chunked megastep under ``evict_policy="approx_lru"``
+  is bit-identical to the per-window path on the same trace.
+"""
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.mapping import map_tree_ensemble
+from repro.ml.trees import fit_random_forest, predict_tree_ensemble
+from repro.netsim.features import flow_features, fnv1a_hash
+from repro.netsim.scenarios import (SCENARIOS, collision_storm, ddos_flood,
+                                    elephant_mice, make_scenario,
+                                    merge_traces, slow_loris)
+from repro.netsim.packets import PacketTrace, synth_trace
+from repro.netsim.stream import (EVICT_POLICIES, approx_lru_sweep,
+                                 init_flow_table, lifecycle_sweep,
+                                 update_flow_table)
+from repro.serving.stream_serving import StreamingHybridServer
+
+N_BUCKETS = 1 << 10
+
+
+def _bucket_of(tr, n_buckets=N_BUCKETS):
+    return np.asarray(fnv1a_hash(tr.src_ip, tr.dst_ip, tr.sport, tr.dport,
+                                 tr.proto, n_buckets=n_buckets))
+
+
+# ---------------------------------------------------------------------------
+# generator well-formedness + determinism
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", SCENARIOS)
+def test_scenario_well_formed_and_deterministic(name):
+    kw = dict(seed=5)
+    if name == "collision_storm":
+        kw["n_buckets"] = N_BUCKETS
+    a = make_scenario(name, **kw)
+    assert isinstance(a, PacketTrace)
+    ts = np.asarray(a.ts)
+    assert (np.diff(ts) >= 0).all()                    # time-sorted
+    fid = np.asarray(a.flow_id)
+    assert fid.min() >= 0 and fid.max() < a.n_flows
+    labels = np.asarray(a.flow_label)
+    assert set(np.unique(labels)) <= {0, 1}
+    assert labels.sum() > 0                            # attack flows exist
+    b = make_scenario(name, **kw)
+    for f in dataclasses.fields(PacketTrace):
+        np.testing.assert_array_equal(getattr(a, f.name),
+                                      getattr(b, f.name))
+    c = make_scenario(name, **{**kw, "seed": 6})
+    assert not np.array_equal(np.asarray(c.ts), ts)    # seeds matter
+
+
+def test_make_scenario_unknown_name():
+    with pytest.raises(ValueError, match="unknown scenario"):
+        make_scenario("teardrop")
+
+
+def test_merge_traces_preserves_labels_and_order():
+    a = synth_trace(n_flows=50, seed=0)
+    b = synth_trace(n_flows=30, seed=1)
+    la = np.asarray(a.flow_label)[np.asarray(a.flow_id)]
+    lb = np.asarray(b.flow_label)[np.asarray(b.flow_id)]
+    m = merge_traces(a, b)
+    assert m.n_flows == 80 and m.n_packets == a.n_packets + b.n_packets
+    assert (np.diff(np.asarray(m.ts)) >= 0).all()
+    lm = np.asarray(m.flow_label)[np.asarray(m.flow_id)]
+    # per-packet labels survive the merge: match on (ts, length) identity
+    order = np.argsort(np.concatenate([a.ts, b.ts]), kind="stable")
+    np.testing.assert_array_equal(lm, np.concatenate([la, lb])[order])
+
+
+def test_ddos_flood_single_use_flows():
+    # attack flow ids sit past the background's (merge_traces offsets
+    # them); label alone won't do — the synth background has its own
+    # ~13% anomalous flows
+    t = ddos_flood(n_background=50, n_attack=500, seed=2)
+    atk = np.asarray(t.flow_id) >= 50
+    # every attack flow is single-packet (maximum admission churn)
+    ids, counts = np.unique(np.asarray(t.flow_id)[atk], return_counts=True)
+    assert len(ids) == 500 and (counts == 1).all()
+    # all converge on one victim
+    assert len(np.unique(np.asarray(t.dst_ip)[atk])) == 1
+
+
+def test_collision_storm_lands_in_target_buckets():
+    t = collision_storm(n_background=50, n_attack=400,
+                        n_buckets=N_BUCKETS, n_target_buckets=4, seed=3)
+    atk = np.asarray(t.flow_id) >= 50
+    hit = np.unique(_bucket_of(t)[atk])
+    assert len(hit) == 4        # thousands of flows, exactly 4 buckets
+
+
+def test_slow_loris_idle_gaps():
+    t = slow_loris(n_background=50, n_slow=8, n_probes=5, idle_gap=30.0,
+                   seed=4)
+    atk = np.asarray(t.flow_id) >= 50
+    fid = np.asarray(t.flow_id)[atk]
+    ts = np.asarray(t.ts)[atk]
+    for f in np.unique(fid):
+        gaps = np.diff(np.sort(ts[fid == f]))
+        assert (gaps > 25.0).all()          # probes idle far past any age
+
+
+def test_elephant_mice_skew():
+    t = elephant_mice(n_mice=100, n_elephants=4, elephant_pkts=500, seed=5)
+    atk = np.asarray(t.flow_id) >= 100
+    _, counts = np.unique(np.asarray(t.flow_id)[atk], return_counts=True)
+    assert (counts == 500).all() and len(counts) == 4
+
+
+# ---------------------------------------------------------------------------
+# approx-LRU sweep unit behavior
+# ---------------------------------------------------------------------------
+
+def _table_with(n, occupied_rows, *, t_max, pkt_count=1.0):
+    """A table with the given rows occupied (t_min=0, given t_max/count)."""
+    s = init_flow_table(n)
+    idx = np.asarray(occupied_rows)
+    upd = lambda a, v: a.at[idx].set(np.broadcast_to(v, idx.shape).astype(
+        np.float32))
+    return dataclasses.replace(
+        s, pkt_count=upd(s.pkt_count, pkt_count),
+        byte_count=upd(s.byte_count, 100.0),
+        t_min=upd(s.t_min, 0.0), t_max=upd(s.t_max, t_max))
+
+
+def _window_at(ts, bucket=0, n=8):
+    from repro.netsim.stream import PacketWindow
+    return PacketWindow(
+        bucket=jnp.full(n, bucket, jnp.int32),
+        ts=jnp.full(n, ts, jnp.float32),
+        length=jnp.full(n, 100.0, jnp.float32),
+        is_fwd=jnp.ones(n, jnp.float32), valid=jnp.ones(n, bool))
+
+
+def test_approx_lru_no_pressure_is_noop():
+    # 4 of 32 occupied, high-water 24: no sweep regardless of age
+    s = _table_with(32, [1, 2, 3, 4], t_max=[0.0, 1.0, 2.0, 3.0])
+    w = _window_at(100.0, bucket=1)
+    s2, n_ev = approx_lru_sweep(s, w, 5.0, occupancy=0.75)
+    assert int(n_ev) == 0
+    np.testing.assert_array_equal(np.asarray(s2.pkt_count),
+                                  np.asarray(s.pkt_count))
+
+
+def test_approx_lru_pressure_evicts_idle_low_activity_first():
+    n = 8
+    # 7 of 8 occupied (> 0.5 high water): rows 1-3 idle singles, rows 4-5
+    # recent singles, row 6 idle elephant, row 7 recent elephant
+    s = _table_with(n, [1, 2, 3], t_max=0.0)
+    s = dataclasses.replace(
+        s, pkt_count=s.pkt_count.at[np.r_[4:8]].set(
+            jnp.asarray([1., 1., 500., 500.])),
+        byte_count=s.byte_count.at[np.r_[4:8]].set(100.0),
+        t_min=s.t_min.at[np.r_[4:8]].set(0.0),
+        t_max=s.t_max.at[np.r_[4:8]].set(
+            jnp.asarray([99.9, 99.9, 0., 99.9])))
+    w = _window_at(100.0, bucket=0)
+    s2, n_ev = approx_lru_sweep(s, w, 10.0, occupancy=0.5)
+    evicted = np.asarray(s2.pkt_count) == 0
+    # the idle singles go first; the active elephant survives
+    assert evicted[[1, 2, 3]].all()
+    assert not evicted[7]
+    assert int(n_ev) == int(evicted[1:].sum())
+
+
+def test_approx_lru_never_evicts_current_window():
+    n = 8
+    s = _table_with(n, list(range(7)), t_max=0.0)   # all ancient, 7/8 full
+    w = _window_at(100.0, bucket=3)
+    s = update_flow_table(s, w)                      # bucket 3 seen now
+    s2, n_ev = approx_lru_sweep(s, w, 5.0, occupancy=0.5)
+    assert int(n_ev) > 0
+    assert float(s2.pkt_count[3]) > 0                # survivor: seen now
+
+
+def test_lifecycle_sweep_rejects_unknown_policy():
+    s = init_flow_table(8)
+    w = _window_at(0.0)
+    with pytest.raises(ValueError, match="evict_policy"):
+        lifecycle_sweep(s, w, 5.0, True, evict_policy="mru")
+    assert "approx_lru" in EVICT_POLICIES
+
+
+# ---------------------------------------------------------------------------
+# approx-LRU vs timeout under the scenarios (the design motivation)
+# ---------------------------------------------------------------------------
+
+def _serve(trace, *, evict_policy, evict_age=5.0, **kw):
+    b, table = flow_features(trace, n_buckets=N_BUCKETS)
+    first = np.unique(np.asarray(trace.flow_id), return_index=True)[1]
+    rows = np.asarray(table)[np.asarray(b)[first]].astype(np.float32)
+    small = fit_random_forest(rows, trace.flow_label, n_classes=2,
+                              n_trees=4, max_depth=3, seed=0)
+    art = map_tree_ensemble(small, rows.shape[1])
+    backend = lambda r: predict_tree_ensemble(small, r)
+    srv = StreamingHybridServer(art, backend, n_buckets=N_BUCKETS,
+                                window=256, threshold=0.9, capacity=32,
+                                evict_age=evict_age,
+                                evict_policy=evict_policy, **kw)
+    preds, stats = srv.serve_trace(trace)
+    return np.asarray(preds), stats
+
+
+def test_slow_loris_timeout_churns_lru_spares():
+    """The scenario approx-LRU exists for: a timeout sweep evicts the
+    idle-but-live slow flows between every probe pair; the pressure
+    trigger never fires on this small population, so approx-LRU keeps
+    every flow's features accumulating."""
+    t = slow_loris(n_background=60, n_slow=16, n_probes=4, idle_gap=20.0,
+                   seed=7)
+    _, st_timeout = _serve(t, evict_policy="timeout")
+    _, st_lru = _serve(t, evict_policy="approx_lru", lru_occupancy=0.75)
+    assert st_timeout.n_evicted > 0           # churn on idle time alone
+    assert st_lru.n_evicted == 0              # no pressure, no sweep
+
+
+def test_ddos_flood_lru_evicts_under_pressure():
+    """Against a flood of single-use flows the roles flip: the table
+    fills past the high-water mark and approx-LRU recycles the dead
+    attack buckets."""
+    t = ddos_flood(n_background=60, n_attack=2500, seed=8)
+    _, st = _serve(t, evict_policy="approx_lru", lru_occupancy=0.5)
+    assert st.n_evicted > 0
+    st.check()                                # accounting still balances
+
+
+def test_chunked_approx_lru_bit_matches_per_window():
+    t = ddos_flood(n_background=60, n_attack=1500, seed=9)
+    p_ref, st_ref = _serve(t, evict_policy="approx_lru", lru_occupancy=0.5)
+    p_chunk, st_chunk = _serve(t, evict_policy="approx_lru",
+                               lru_occupancy=0.5, chunk_windows=4)
+    np.testing.assert_array_equal(p_chunk, p_ref)
+    assert st_chunk.n_evicted == st_ref.n_evicted
+
+
+def test_evict_policy_validation():
+    with pytest.raises(ValueError):
+        # approx_lru without evict_age is meaningless
+        _serve(synth_trace(n_flows=20, seed=0), evict_policy="approx_lru",
+               evict_age=None)
+    with pytest.raises(ValueError):
+        _serve(synth_trace(n_flows=20, seed=0), evict_policy="bogus")
