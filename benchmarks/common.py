@@ -105,6 +105,30 @@ def table_pred_maybe_flip(art, x):
     return pred, conf
 
 
+def trace_models(trace, n_buckets, *, small=(4, 3, 0), big=(16, 6, 1)):
+    """Switch-size RF artifact + backend RF for a synthetic packet trace.
+    -> (artifact, backend_fn).
+
+    The streaming-bench model recipe (previously copy-pasted across
+    stream_bench, shard_stream_bench and scenario_bench): train both
+    forests on the trace's own batch flow features — one row per flow,
+    read out at the flow's bucket — map the small (n_trees, max_depth,
+    seed) forest to the switch table artifact and close the big one over
+    ``predict_tree_ensemble`` as the row-wise backend."""
+    from repro.netsim.features import flow_features
+    b, table = flow_features(trace, n_buckets=n_buckets)
+    first_idx = np.unique(np.asarray(trace.flow_id), return_index=True)[1]
+    rows = np.asarray(table)[np.asarray(b)[first_idx]].astype(np.float32)
+    s_trees, s_depth, s_seed = small
+    b_trees, b_depth, b_seed = big
+    sm = fit_random_forest(rows, trace.flow_label, n_classes=2,
+                           n_trees=s_trees, max_depth=s_depth, seed=s_seed)
+    bg = fit_random_forest(rows, trace.flow_label, n_classes=2,
+                           n_trees=b_trees, max_depth=b_depth, seed=b_seed)
+    return map_tree_ensemble(sm, rows.shape[1]), \
+        (lambda r: predict_tree_ensemble(bg, r))
+
+
 def jsonable(obj):
     """Best-effort conversion of benchmark rows to JSON-safe values."""
     if isinstance(obj, dict):

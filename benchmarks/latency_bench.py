@@ -1,0 +1,209 @@
+"""Packet-to-prediction latency percentiles for the ingest pipeline.
+
+``python -m benchmarks.latency_bench`` drives ``serve_stream`` — the
+ring-buffered, open-ended serving loop (DESIGN.md §13) — over a
+batch-paced replay of a synthetic trace and reports what ``serve_trace``
+throughput numbers cannot: per-packet admit->prediction wall latency
+(p50/p95/p99), with and without the prefetch double-buffer, plus the
+init-time chunk-size autotune row.
+
+Every number is gated before it counts:
+
+* **bit-identity** — each configuration's predictions (prefetch on/off,
+  batch-paced, autotuned K) must equal the offline ``serve_trace``
+  replay bit for bit, and ``serve_trace`` itself must equal a manual
+  ``iter_chunks`` + ``step_chunk`` loop (the wrapper contract);
+* **prefetch must not regress** — zero-sync throughput with the
+  prefetch thread on must stay >= ``prefetch_floor`` of the
+  prefetch-off pipeline (overlap is allowed to be neutral on a CPU
+  host where transfers are memcpy, never clearly harmful);
+* **autotune must not regress** — serving at the measured-sweep K must
+  stay >= ``auto_floor`` of the fixed-default K (the sweep's argmin
+  contains the default by construction; this re-checks it end to end).
+
+Latency rows are measured with ``record_latency=True`` (one host sync
+per chunk — the documented cost of the knob), throughput rows with it
+off (the zero-sync loop). Results go to ``BENCH_latency.json``
+(schema "bench-v1", DESIGN.md §11).
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from benchmarks.common import print_table, trace_models, write_bench_json
+from repro.netsim.ingest import replay_source
+from repro.netsim.packets import synth_trace
+from repro.netsim.stream import iter_chunks
+from repro.serving.stream_serving import (DEFAULT_CHUNK_WINDOWS,
+                                          StreamingHybridServer,
+                                          autotune_chunk_windows)
+
+
+def _serve_wall(srv, trace, batch, *, prefetch, repeats):
+    """min-over-reps zero-sync serve_stream wall time (warm server)."""
+    best, preds = float("inf"), None
+    for _ in range(repeats):
+        srv.reset()
+        t0 = time.perf_counter()
+        preds, _ = srv.serve_stream(replay_source(trace, batch=batch),
+                                    prefetch=prefetch)
+        best = min(best, time.perf_counter() - t0)
+    return best, np.asarray(preds)
+
+
+def run(n_flows=4000, window=256, chunk_windows=16, n_buckets=1 << 13,
+        threshold=0.9, capacity=64, repeats=3, seed=0,
+        batches_per_chunk=1.0, prefetch_floor=0.85, auto_floor=0.9,
+        auto_candidates=(4, 8, 16, 32), out="BENCH_latency.json"):
+    t_suite = time.time()
+    trace = synth_trace(n_flows=n_flows, seed=seed)
+    art, backend = trace_models(trace, n_buckets)
+    kw = dict(n_buckets=n_buckets, window=window, threshold=threshold,
+              capacity=capacity)
+    batch = max(1, int(chunk_windows * window * batches_per_chunk))
+
+    # -- oracle chain: manual chunk loop == serve_trace == serve_stream --
+    manual = StreamingHybridServer(art, backend, chunk_windows=chunk_windows,
+                                   **kw)
+    mpreds = []
+    for c in iter_chunks(trace, window, chunk_windows, n_buckets):
+        pred, _ = manual.step_chunk(c)
+        mpreds.append(np.asarray(pred).reshape(-1))
+    ref_preds = np.concatenate(mpreds)[:trace.n_packets]
+    ref_stats = manual.stats.check()
+
+    srv = StreamingHybridServer(art, backend, chunk_windows=chunk_windows,
+                                **kw)
+    tr_preds, tr_stats = srv.serve_trace(trace)
+    np.testing.assert_array_equal(np.asarray(tr_preds), ref_preds)
+    assert tr_stats == ref_stats, (tr_stats, ref_stats)
+    print(f"oracle: serve_trace == manual iter_chunks loop "
+          f"({trace.n_packets} pkts, K={chunk_windows}, W={window})")
+
+    # -- throughput: prefetch on vs off (zero-sync), interleaved --------
+    t_off, t_on = float("inf"), float("inf")
+    for _ in range(max(repeats, 2)):
+        w_off, p_off = _serve_wall(srv, trace, batch, prefetch=False,
+                                   repeats=1)
+        w_on, p_on = _serve_wall(srv, trace, batch, prefetch=True,
+                                 repeats=1)
+        t_off, t_on = min(t_off, w_off), min(t_on, w_on)
+    np.testing.assert_array_equal(p_off, ref_preds)
+    np.testing.assert_array_equal(p_on, ref_preds)
+
+    # -- latency percentiles (record_latency syncs once per chunk) ------
+    rows = []
+    for label, pf, wall in (("prefetch_off", False, t_off),
+                            ("prefetch_on", True, t_on)):
+        srv.reset()
+        preds, stats = srv.serve_stream(
+            replay_source(trace, batch=batch), prefetch=pf,
+            record_latency=True)
+        np.testing.assert_array_equal(np.asarray(preds), ref_preds)
+        summ = srv.latency.summary()
+        assert summ["n"] == trace.n_packets, (summ["n"], trace.n_packets)
+        ing = srv.ingest_stats
+        rows.append({
+            "config": label, "prefetch": pf,
+            "window": window, "chunk_windows": chunk_windows,
+            "batch": batch, "n_packets": trace.n_packets,
+            "p50_ms": round(summ["p50_ms"], 4),
+            "p95_ms": round(summ["p95_ms"], 4),
+            "p99_ms": round(summ["p99_ms"], 4),
+            "mean_ms": round(summ["mean_ms"], 4),
+            "wall_s": round(wall, 4),
+            "pkts_per_s": round(trace.n_packets / wall, 1),
+            "cuts": ing.cuts, "dropped": ing.dropped,
+            "bit_identical": True,
+        })
+
+    print_table("Ingest pipeline — admit->prediction latency "
+                f"(window={window}, K={chunk_windows})",
+                ["config", "p50_ms", "p95_ms", "p99_ms", "mean_ms",
+                 "pkts/s", "cuts"],
+                [[r["config"], r["p50_ms"], r["p95_ms"], r["p99_ms"],
+                  r["mean_ms"], r["pkts_per_s"], r["cuts"]] for r in rows])
+
+    speedup = t_off / t_on
+    assert speedup >= prefetch_floor, (
+        f"prefetch regressed zero-sync throughput: {speedup:.3f}x of the "
+        f"prefetch-off pipeline (floor {prefetch_floor}x)")
+    print(f"prefetch throughput: {speedup:.3f}x of prefetch-off "
+          f"(floor {prefetch_floor}x)")
+
+    # -- init-time chunk-size autotune: measured K sweep ----------------
+    k_auto = autotune_chunk_windows(
+        lambda k: StreamingHybridServer(art, backend, chunk_windows=k,
+                                        **kw),
+        window=window, n_buckets=n_buckets, candidates=auto_candidates,
+        default=DEFAULT_CHUNK_WINDOWS, verbose=True)
+    srv_auto = StreamingHybridServer(art, backend, chunk_windows=k_auto,
+                                     **kw)
+    srv_dflt = StreamingHybridServer(art, backend,
+                                     chunk_windows=DEFAULT_CHUNK_WINDOWS,
+                                     **kw)
+    # warm both, then interleave
+    _serve_wall(srv_auto, trace, batch, prefetch=False, repeats=1)
+    _serve_wall(srv_dflt, trace, batch, prefetch=False, repeats=1)
+    t_auto, t_dflt = float("inf"), float("inf")
+    for _ in range(max(repeats, 2)):
+        w_a, p_a = _serve_wall(srv_auto, trace, batch, prefetch=False,
+                               repeats=1)
+        w_d, _ = _serve_wall(srv_dflt, trace, batch, prefetch=False,
+                             repeats=1)
+        t_auto, t_dflt = min(t_auto, w_a), min(t_dflt, w_d)
+    np.testing.assert_array_equal(p_a, ref_preds)
+    ratio = t_dflt / t_auto
+    assert ratio >= auto_floor, (
+        f"autotuned K={k_auto} regressed vs default "
+        f"K={DEFAULT_CHUNK_WINDOWS}: {ratio:.3f}x (floor {auto_floor}x)")
+    a_row = {
+        "config": "autotune", "chunk_windows": k_auto,
+        "default_chunk_windows": DEFAULT_CHUNK_WINDOWS,
+        "window": window, "candidates": list(auto_candidates),
+        "pkts_per_s": round(trace.n_packets / t_auto, 1),
+        "default_pkts_per_s": round(trace.n_packets / t_dflt, 1),
+        "speedup_vs_default": round(ratio, 3),
+        "bit_identical": True,
+    }
+    rows.append(a_row)
+    print(f"autotune picked K={k_auto}: {ratio:.3f}x of default "
+          f"K={DEFAULT_CHUNK_WINDOWS} (floor {auto_floor}x)")
+
+    wall = round(time.time() - t_suite, 3)
+    benches = [{"name": "ingest_latency", "paper_ref": "§5 / pForest "
+                "real-time classification", "ok": True, "rows": rows,
+                "wall_s": wall}]
+    if out:
+        write_bench_json(out, "latency", benches,
+                         config={"n_flows": n_flows, "window": window,
+                                 "chunk_windows": chunk_windows,
+                                 "n_buckets": n_buckets,
+                                 "threshold": threshold,
+                                 "capacity": capacity, "repeats": repeats,
+                                 "batch": batch,
+                                 "prefetch_floor": prefetch_floor,
+                                 "auto_floor": auto_floor})
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--out", default="BENCH_latency.json")
+    args = ap.parse_args(argv)
+    if args.quick:
+        # short trace, two autotune candidates (the sweep compiles one
+        # megastep per K); same gates as the full run
+        run(n_flows=1200, chunk_windows=8, repeats=2,
+            auto_candidates=(8, 16), out=args.out)
+    else:
+        run(out=args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -37,10 +37,8 @@ import time
 
 import numpy as np
 
-from benchmarks.common import print_table, write_bench_json
-from repro.core.mapping import map_tree_ensemble
-from repro.ml.trees import fit_random_forest, predict_tree_ensemble
-from repro.netsim.features import flow_features
+from benchmarks.common import print_table, trace_models, \
+    write_bench_json
 from repro.netsim.scenarios import make_scenario
 from repro.serving.faults import FaultPolicy, FaultyBackend
 from repro.serving.stream_serving import StreamingHybridServer
@@ -54,20 +52,6 @@ FAULT_PROFILES = {
 
 POLICY = FaultPolicy(max_retries=1, backoff_base_s=0.0,
                      breaker_threshold=3, breaker_cooldown=4)
-
-
-def _models(trace, n_buckets):
-    """Switch-size RF + backend RF trained on the scenario's own batch
-    flow features (same recipe as stream_bench)."""
-    b, table = flow_features(trace, n_buckets=n_buckets)
-    first_idx = np.unique(np.asarray(trace.flow_id), return_index=True)[1]
-    rows = np.asarray(table)[np.asarray(b)[first_idx]].astype(np.float32)
-    small = fit_random_forest(rows, trace.flow_label, n_classes=2,
-                              n_trees=4, max_depth=3, seed=0)
-    big = fit_random_forest(rows, trace.flow_label, n_classes=2,
-                            n_trees=16, max_depth=6, seed=1)
-    return map_tree_ensemble(small, rows.shape[1]), \
-        (lambda r: predict_tree_ensemble(big, r))
 
 
 def _serve(art, backend, trace, *, repeats, **kw):
@@ -112,7 +96,7 @@ def run(*, scale=1.0, n_buckets=4096, window=256, capacity=64,
     for name, skw in scenario_kw.items():
         trace = make_scenario(name, seed=0, **skw)
         truth = np.asarray(trace.flow_label)[np.asarray(trace.flow_id)]
-        art, backend = _models(trace, n_buckets)
+        art, backend = trace_models(trace, n_buckets)
 
         # unguarded reference + the zero-fault bit-identity oracle: the
         # guarded server with no faults must be invisible

@@ -40,7 +40,7 @@ def run(n_flows=4000, window=1024, n_buckets=1 << 13, device_counts=None,
     import numpy as np
 
     from benchmarks.common import print_table, write_bench_json
-    from benchmarks.stream_bench import _models
+    from benchmarks.common import trace_models
     from repro.distributed.sharding import flow_shard_mesh
     from repro.netsim.features import flow_features
     from repro.netsim.packets import synth_trace
@@ -55,7 +55,7 @@ def run(n_flows=4000, window=1024, n_buckets=1 << 13, device_counts=None,
         device_counts = [d for d in (1, 2, 4, 8) if d <= avail]
     trace = synth_trace(n_flows=n_flows, seed=seed)
     _, batch_table = flow_features(trace, n_buckets=n_buckets)
-    art, backend = _models(trace, n_buckets)
+    art, backend = trace_models(trace, n_buckets)
 
     # single-device reference: the bit-consistency oracle's answer key
     ref = StreamingHybridServer(art, backend, n_buckets=n_buckets,

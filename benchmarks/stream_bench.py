@@ -35,28 +35,12 @@ import time
 import jax
 import numpy as np
 
-from benchmarks.common import print_table, write_bench_json
-from repro.core.mapping import map_tree_ensemble
-from repro.ml.trees import fit_random_forest, predict_tree_ensemble
+from benchmarks.common import print_table, trace_models, write_bench_json
 from repro.netsim.features import flow_features
 from repro.netsim.packets import synth_trace
 from repro.netsim.stream import iter_chunks, iter_windows, \
     stream_flow_features
 from repro.serving.stream_serving import StreamingHybridServer
-
-
-def _models(trace, n_buckets):
-    """Train the switch-size RF + backend RF on batch flow features."""
-    b, table = flow_features(trace, n_buckets=n_buckets)
-    first_idx = np.unique(np.asarray(trace.flow_id), return_index=True)[1]
-    rows = np.asarray(table)[np.asarray(b)[first_idx]].astype(np.float32)
-    labels = trace.flow_label
-    small = fit_random_forest(rows, labels, n_classes=2, n_trees=4,
-                              max_depth=3, seed=0)
-    big = fit_random_forest(rows, labels, n_classes=2, n_trees=16,
-                            max_depth=6, seed=1)
-    art = map_tree_ensemble(small, rows.shape[1])
-    return art, (lambda r: predict_tree_ensemble(big, r))
 
 
 def run(n_flows=4000, windows=(256, 1024, 4096), chunks=(4, 16, 64),
@@ -66,7 +50,7 @@ def run(n_flows=4000, windows=(256, 1024, 4096), chunks=(4, 16, 64),
     trace = synth_trace(n_flows=n_flows, seed=seed)
     _, batch_table = flow_features(trace, n_buckets=n_buckets)
 
-    art, backend = _models(trace, n_buckets)
+    art, backend = trace_models(trace, n_buckets)
     kw = dict(n_buckets=n_buckets, threshold=threshold, capacity=capacity)
     rows = []
     base_preds = None

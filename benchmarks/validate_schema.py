@@ -23,7 +23,7 @@ import sys
 SCHEMA = "bench-v1"
 
 # key -> allowed types, shared by every emitter (run / kernel_microbench /
-# stream_bench / shard_stream_bench / batch_bench)
+# stream_bench / shard_stream_bench / batch_bench / latency_bench)
 TOP_KEYS = {
     "schema": str,
     "suite": str,
@@ -40,6 +40,15 @@ BENCH_KEYS = {
     # rows is whatever the bench's run() returned (DESIGN.md §11): a row
     # list, a keyed table dict, or null when the bench failed
     "rows": (list, dict, type(None)),
+}
+# suite "latency" (latency_bench) additionally promises percentile keys
+# on every row that carries a prefetch flag — the downstream trajectory
+# diff keys on them, so a renamed field must fail here, not there
+LATENCY_ROW_KEYS = {
+    "p50_ms": (int, float),
+    "p95_ms": (int, float),
+    "p99_ms": (int, float),
+    "bit_identical": bool,
 }
 
 
@@ -73,6 +82,16 @@ def validate_bench_payload(payload, path="<payload>"):
             _require(isinstance(bench[key], types), where,
                      f"{key!r} must be {types}, "
                      f"got {type(bench[key]).__name__}")
+        if payload["suite"] == "latency" and isinstance(bench["rows"], list):
+            for j, row in enumerate(bench["rows"]):
+                if not (isinstance(row, dict) and "prefetch" in row):
+                    continue            # autotune/summary rows
+                rwhere = f"{where}.rows[{j}]"
+                for key, types in LATENCY_ROW_KEYS.items():
+                    _require(key in row, rwhere, f"missing key {key!r}")
+                    _require(isinstance(row[key], types), rwhere,
+                             f"{key!r} must be {types}, "
+                             f"got {type(row[key]).__name__}")
 
 
 def validate_bench_json(path):

@@ -66,6 +66,50 @@ def _artifact_key(art) -> tuple:
     return ("classical", art.agg, tuple(art.vtable.q.shape))
 
 
+def measure_min(fn, reps: int, warmup: int = 1) -> float:
+    """min-over-reps wall time of ``fn()`` (which must block until the
+    work is done). Warmup runs absorb compilation / first-trace cost;
+    the minimum is robust to host load spikes — the measurement
+    discipline every autotuner here shares."""
+    for _ in range(warmup):
+        fn()
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def sweep_best(candidates, time_one, *, default, verbose: bool = False,
+               label: str = "autotune") -> tuple:
+    """Time each candidate, return (best, timings dict).
+
+    ``default`` is ALWAYS timed (appended when missing from
+    ``candidates``) and the winner is the measured argmin over a set
+    containing it — so by construction the sweep can never select a
+    config that regresses versus the default on the tuned shape. A
+    candidate whose ``time_one`` raises is skipped (unsupported
+    config), mirroring the tile sweep; if every candidate fails the
+    default wins untimed.
+    """
+    cands = list(candidates)
+    if default not in cands:
+        cands.append(default)
+    timings, best, best_dt = {}, default, float("inf")
+    for cand in cands:
+        try:
+            dt = time_one(cand)
+        except Exception:                           # config unsupported: skip
+            continue
+        timings[cand] = dt
+        if verbose:
+            print(f"{label} {cand} -> {dt * 1e3:.3f} ms")
+        if dt < best_dt:
+            best, best_dt = cand, dt
+    return best, timings
+
+
 def _time_config(art, x, tiles: TileConfig, reps: int) -> float:
     from repro.kernels import ops as _ops
 
@@ -73,13 +117,7 @@ def _time_config(art, x, tiles: TileConfig, reps: int) -> float:
     def run(art, x, tiles):
         return _ops.fused_classify(art, x, use_pallas=True, tiles=tiles)[0]
 
-    run(art, x, tiles).block_until_ready()          # compile / first trace
-    best = float("inf")                             # min: load-spike robust
-    for _ in range(reps):
-        t0 = time.perf_counter()
-        run(art, x, tiles).block_until_ready()
-        best = min(best, time.perf_counter() - t0)
-    return best
+    return measure_min(lambda: run(art, x, tiles).block_until_ready(), reps)
 
 
 def candidate_tiles(batch: int) -> list:
@@ -123,15 +161,9 @@ def autotune_tiles(art, *, batch: int = 2048, reps: int = 2,
     x = jax.random.uniform(jax.random.PRNGKey(seed),
                            (batch, art.n_features), jnp.float32,
                            lo - 0.1 * span, hi + 0.1 * span)
-    best, best_dt = DEFAULT_TILES, float("inf")
-    for tiles in (candidates or candidate_tiles(batch)):
-        try:
-            dt = _time_config(art, x, tiles, reps)
-        except Exception:                           # config unsupported: skip
-            continue
-        if verbose:
-            print(f"autotune {tiles} -> {dt * 1e3:.2f} ms")
-        if dt < best_dt:
-            best, best_dt = tiles, dt
+    best, _ = sweep_best(candidates or candidate_tiles(batch),
+                         lambda tiles: _time_config(art, x, tiles, reps),
+                         default=DEFAULT_TILES, verbose=verbose,
+                         label="autotune")
     _TILE_CACHE[key] = best
     return best

@@ -33,6 +33,18 @@ from repro.netsim.stream import (
     age_out,
     saturate_counts,
     lifecycle_sweep,
+    pack_chunk_columns,
+    trace_columns,
+)
+from repro.netsim.ingest import (
+    HostCut,
+    IngestStats,
+    LatencyRecorder,
+    PacketRingBuffer,
+    cut_stream,
+    prefetch_iter,
+    replay_source,
+    slice_trace,
 )
 from repro.netsim.shard_stream import (
     ShardedFlowTable,

@@ -1,0 +1,441 @@
+"""Open-ended packet ingest: host ring buffer -> window-granular cuts.
+
+``serve_trace`` takes a complete, finite trace — a benchmark shape. The
+deployment shape (DESIGN.md §13) is a stream that never ends: packets are
+*admitted* into a host-side ring buffer as they arrive and *cut* into
+``PacketChunk``s by whichever fires first —
+
+  count cut     ``chunk_windows`` complete windows are buffered (the
+                steady-state path: a full (K, W) chunk, no padding)
+  deadline cut  the oldest buffered packet has waited ``deadline`` wall
+                seconds and at least one complete window is buffered
+  drain cut     the source is exhausted; whatever remains (including a
+                ragged partial window) is flushed
+
+Every cut is **window-granular**: it emits only *complete* windows (the
+drain cut's ragged tail is the one exception, exactly like the final
+``iter_windows`` window). This is what makes the ring bit-identical to
+the offline iterators: window boundaries — and therefore per-packet
+register readouts, classifications and dispatch groupings — are a pure
+function of packet arrival order, never of cut timing. A deadline cut
+only changes how many chunks the same windows are grouped into.
+
+The packing discipline is shared with ``iter_chunks`` via
+``stream.pack_chunk_columns`` (ragged live window replicate-pads the last
+packet with valid=False; missing windows are dead — all-zero, all
+invalid), so replaying a finite trace through the ring produces bitwise
+the same chunks as ``iter_chunks`` (the property test in
+tests/test_ingest.py sweeps cut boundaries).
+
+Backpressure: the ring is *pull-based* when driven by ``cut_stream`` —
+admission pauses (the source iterator is simply not advanced) while the
+buffer is full, so nothing is ever dropped and ``capacity`` bounds host
+memory, not correctness. Push-style callers that cannot pause admission
+construct the ring with ``drop=True`` and ``admit`` tail-drops instead
+(counted in ``IngestStats.dropped``) rather than raising.
+
+``prefetch_iter`` is the transfer/compute overlap half: it runs the
+cut->device pipeline in a background thread with a small bounded queue,
+so chunk k+1's (K, W) columns are already in flight while chunk k runs
+in the scan megastep (the MaxText latency-hiding discipline).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+import time
+from typing import Callable, Iterable, Iterator, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.netsim.stream import (PacketChunk, PacketWindow,
+                                 pack_chunk_columns, trace_columns)
+
+# host column layout of one admitted packet (dtypes match trace_columns)
+COLUMN_DTYPES = (("bucket", np.int32), ("ts", np.float32),
+                 ("length", np.float32), ("is_fwd", np.float32))
+
+CUT_KINDS = ("count", "deadline", "drain")
+
+
+@dataclasses.dataclass
+class IngestStats:
+    """Host-side ring telemetry (wall-clock domain, unlike StreamStats)."""
+    admitted: int = 0          # packets accepted into the ring
+    dropped: int = 0           # packets tail-dropped (drop=True rings only)
+    count_cuts: int = 0        # full (K, W) chunks cut by occupancy
+    deadline_cuts: int = 0     # partial chunks cut by admit-age deadline
+    drain_cuts: int = 0        # end-of-source flush cuts
+
+    @property
+    def cuts(self) -> int:
+        return self.count_cuts + self.deadline_cuts + self.drain_cuts
+
+
+@dataclasses.dataclass
+class HostCut:
+    """One window-granular cut: host columns for up to ``rows`` windows.
+
+    ``cols``/``valid`` are flat (rows*window,) arrays in the
+    ``pack_chunk_columns`` layout — live packets first, replicate-padded
+    ragged window, then dead windows. ``admit_time`` holds the wall
+    clock each of the ``n`` live packets entered the ring (latency
+    accounting); ``kind`` records which trigger fired.
+    """
+    cols: dict
+    valid: np.ndarray
+    admit_time: np.ndarray   # (n,) float64 wall seconds
+    n: int                   # live packets
+    window: int
+    rows: int                # total windows incl. dead padding
+    kind: str
+
+    @property
+    def n_windows(self) -> int:
+        """Live (non-dead) windows in this cut."""
+        return -(-self.n // self.window) if self.n else 0
+
+    def to_chunk(self) -> PacketChunk:
+        """Device (rows, window) chunk — the step_chunk input. Calling
+        this on the prefetch thread starts the transfer early."""
+        shape = (self.rows, self.window)
+        return PacketChunk(
+            valid=jnp.asarray(self.valid.reshape(shape)),
+            **{k: jnp.asarray(v.reshape(shape)) for k, v in self.cols.items()})
+
+    def to_windows(self) -> Iterator[PacketWindow]:
+        """The cut's *live* windows one by one — the per-window serving
+        path's input (dead padding windows are skipped; the per-window
+        path has no static chunk shape to satisfy)."""
+        for r in range(self.n_windows):
+            sl = slice(r * self.window, (r + 1) * self.window)
+            yield PacketWindow(
+                valid=jnp.asarray(self.valid[sl]),
+                **{k: jnp.asarray(v[sl]) for k, v in self.cols.items()})
+
+
+class PacketRingBuffer:
+    """Fixed-capacity circular buffer of admitted packets, cut window-wise.
+
+    window/chunk_windows fix the cut geometry (a cut is at most
+    ``chunk_windows`` complete windows, packed to exactly that many rows
+    with dead padding); ``n_buckets`` sizes the flow hash the admit path
+    computes. ``t0`` is the stream epoch: None latches the first admitted
+    batch's minimum timestamp (the offline iterators' default on a
+    single-batch replay — the bit-identity contract), open-ended
+    multi-batch sources that may open out of order pass an explicit
+    provisional t0 (the sharded tier's min-merged epoch register corrects
+    at readout, DESIGN.md §5).
+
+    ``capacity`` (default ``4 * chunk_windows * window``) must be at
+    least ``(chunk_windows + 1) * window - 1`` lanes: a full ring then
+    always holds a complete chunk, so a pull-driven loop (``cut_stream``)
+    can always make progress without dropping. ``deadline`` (wall
+    seconds, via ``clock``) bounds how long an admitted packet can sit
+    uncut; None disables deadline cuts.
+    """
+
+    def __init__(self, window: int, chunk_windows: int = 1,
+                 n_buckets: int = 4096, *, t0: Optional[float] = None,
+                 capacity: Optional[int] = None,
+                 deadline: Optional[float] = None, drop: bool = False,
+                 clock: Callable[[], float] = time.monotonic):
+        if window < 1:
+            raise ValueError(f"window must be >= 1, got {window}")
+        if chunk_windows < 1:
+            raise ValueError(
+                f"chunk_windows must be >= 1, got {chunk_windows}")
+        if deadline is not None and deadline <= 0:
+            raise ValueError(f"deadline must be > 0, got {deadline}")
+        if capacity is None:
+            capacity = 4 * chunk_windows * window
+        floor = (chunk_windows + 1) * window - 1
+        if capacity < floor:
+            raise ValueError(
+                f"capacity={capacity} cannot guarantee cut progress: a "
+                f"full ring must always contain {chunk_windows} complete "
+                f"windows, which needs >= {floor} lanes "
+                f"((chunk_windows+1)*window - 1)")
+        self.window = window
+        self.chunk_windows = chunk_windows
+        self.n_buckets = n_buckets
+        self.capacity = capacity
+        self.deadline = deadline
+        self.drop = drop
+        self.t0 = t0
+        self._clock = clock
+        self._store = {k: np.zeros(capacity, dt) for k, dt in COLUMN_DTYPES}
+        self._atime = np.zeros(capacity, np.float64)
+        self._head = 0          # read position of the oldest packet
+        self._count = 0
+        self.stats = IngestStats()
+
+    # -- occupancy ----------------------------------------------------------
+
+    @property
+    def buffered(self) -> int:
+        return self._count
+
+    @property
+    def free(self) -> int:
+        return self.capacity - self._count
+
+    @property
+    def complete_windows(self) -> int:
+        return self._count // self.window
+
+    def ready(self) -> bool:
+        """A full count cut is available."""
+        return self.complete_windows >= self.chunk_windows
+
+    def deadline_due(self, now: Optional[float] = None) -> bool:
+        """The oldest admitted packet has aged past ``deadline`` and at
+        least one *complete* window is buffered (cuts are window-
+        granular; a lone partial window waits for more packets or the
+        drain)."""
+        if self.deadline is None or self.complete_windows < 1:
+            return False
+        if now is None:
+            now = self._clock()
+        return now - float(self._atime[self._head]) >= self.deadline
+
+    # -- admission ----------------------------------------------------------
+
+    def _latch_t0(self, t0: float) -> None:
+        if self.t0 is None:
+            self.t0 = t0
+
+    def admit_cols(self, cols: dict, lo: int, hi: int,
+                   now: Optional[float] = None) -> int:
+        """Admit packets [lo, hi) of precomputed host columns (the
+        ``trace_columns`` layout, already rebased against this ring's
+        t0). Returns the number admitted; the remainder is tail-dropped
+        when ``drop=True`` (counted), otherwise the caller asked for
+        more than ``free`` and gets a ValueError."""
+        m = hi - lo
+        take = min(m, self.free)
+        if take < m and not self.drop:
+            raise ValueError(
+                f"ring full: {m} packets offered, {self.free} lanes free "
+                f"(pull-driven ingest should cut first; push-style "
+                f"callers construct the ring with drop=True)")
+        if now is None:
+            now = self._clock()
+        w = (self._head + self._count) % self.capacity
+        first = min(take, self.capacity - w)
+        for k, _ in COLUMN_DTYPES:
+            src = cols[k]
+            self._store[k][w:w + first] = src[lo:lo + first]
+            if take > first:
+                self._store[k][:take - first] = src[lo + first:lo + take]
+        self._atime[w:w + first] = now
+        if take > first:
+            self._atime[:take - first] = now
+        self._count += take
+        self.stats.admitted += take
+        self.stats.dropped += m - take
+        return take
+
+    def admit(self, trace, now: Optional[float] = None) -> int:
+        """Admit a PacketTrace batch: hash + rebase (latching t0 from the
+        first batch when unset), then ``admit_cols`` the lot."""
+        cols, t0 = trace_columns(trace, self.n_buckets, t0=self.t0)
+        self._latch_t0(t0)
+        return self.admit_cols(cols, 0, len(cols["ts"]), now=now)
+
+    # -- cutting ------------------------------------------------------------
+
+    def _pop(self, n: int) -> tuple:
+        """Remove the oldest ``n`` packets -> (contiguous cols, times)."""
+        h, c = self._head, self.capacity
+        idx = (h + np.arange(n)) % c if h + n > c else slice(h, h + n)
+        cols = {k: np.ascontiguousarray(self._store[k][idx])
+                for k, _ in COLUMN_DTYPES}
+        times = np.ascontiguousarray(self._atime[idx])
+        self._head = (h + n) % c
+        self._count -= n
+        return cols, times
+
+    def cut(self, kind: str = "count") -> HostCut:
+        """Cut up to ``chunk_windows`` complete windows (all buffered
+        packets for ``kind='drain'``, including a ragged tail window)
+        into one HostCut packed to the full (chunk_windows, window)
+        shape."""
+        if kind not in CUT_KINDS:
+            raise ValueError(f"kind must be one of {CUT_KINDS}, got {kind!r}")
+        if kind == "drain":
+            n = self._count
+        else:
+            n = min(self.complete_windows, self.chunk_windows) * self.window
+        if n == 0:
+            raise ValueError(f"nothing to cut ({kind}): "
+                             f"{self._count} packets buffered")
+        cols, times = self._pop(n)
+        full, valid = pack_chunk_columns(cols, n, self.window,
+                                         self.chunk_windows)
+        setattr(self.stats, f"{kind}_cuts",
+                getattr(self.stats, f"{kind}_cuts") + 1)
+        return HostCut(cols=full, valid=valid, admit_time=times, n=n,
+                       window=self.window, rows=self.chunk_windows,
+                       kind=kind)
+
+    def drain(self) -> Optional[HostCut]:
+        """End-of-source flush: everything buffered (ragged tail padded
+        like the final ``iter_chunks`` chunk), or None when empty."""
+        return self.cut("drain") if self._count else None
+
+
+def slice_trace(trace, lo: int, hi: int):
+    """Per-packet slice [lo, hi) of a PacketTrace (flow arrays shared)."""
+    return dataclasses.replace(
+        trace, ts=trace.ts[lo:hi], src_ip=trace.src_ip[lo:hi],
+        dst_ip=trace.dst_ip[lo:hi], sport=trace.sport[lo:hi],
+        dport=trace.dport[lo:hi], proto=trace.proto[lo:hi],
+        length=trace.length[lo:hi], direction=trace.direction[lo:hi],
+        flow_id=trace.flow_id[lo:hi])
+
+
+def replay_source(trace, batch: Optional[int] = None) -> Iterator:
+    """A finite trace as an ingest source: the whole trace in one batch
+    (batch=None — the ``serve_trace`` replay shape, which latches the
+    offline iterators' t0 and is bit-identical to them including cut
+    grouping), or consecutive ``batch``-packet slices (arrival-paced
+    sources for tests/benchmarks; same predictions, cut grouping may
+    differ)."""
+    if batch is None:
+        yield trace
+        return
+    if batch < 1:
+        raise ValueError(f"batch must be >= 1, got {batch}")
+    for lo in range(0, trace.n_packets, batch):
+        yield slice_trace(trace, lo, min(lo + batch, trace.n_packets))
+
+
+def cut_stream(ring: PacketRingBuffer, source: Iterable
+               ) -> Iterator[HostCut]:
+    """Pull-driven ingest loop: admit ``source`` batches into ``ring``,
+    yielding cuts as they become ready; drain at exhaustion.
+
+    Oversized batches are admitted in slices as cuts free lanes (the
+    backpressure contract: the ring bounds memory, the source just waits),
+    so nothing is dropped regardless of batch size. Precedence when both
+    triggers are due: count cuts first (a ready ring always cuts full
+    chunks), then one deadline cut of whatever complete windows remain.
+    Deadlines are evaluated at admission boundaries — a pull loop has no
+    other opportunity to act — so a sparse source that blocks for long
+    stretches should slice its batches (``replay_source(trace, batch=...)``)
+    to give the deadline a chance to fire.
+    """
+    for tr in source:
+        m = tr.n_packets
+        if not m:
+            continue
+        cols, t0 = trace_columns(tr, ring.n_buckets, t0=ring.t0)
+        ring._latch_t0(t0)
+        now = ring._clock()
+        off = 0
+        while off < m:
+            off += ring.admit_cols(cols, off, min(off + ring.free, m),
+                                   now=now)
+            while ring.ready():
+                yield ring.cut("count")
+        if ring.deadline_due():
+            yield ring.cut("deadline")
+    final = ring.drain()
+    if final is not None:
+        yield final
+
+
+def prefetch_iter(it: Iterable, depth: int = 2) -> Iterator:
+    """Run ``it`` on a background thread, holding up to ``depth`` items
+    ready ahead of the consumer.
+
+    The double-buffer half of the ingest pipeline: the producer maps cuts
+    to device chunks (``HostCut.to_chunk`` -> ``jnp.asarray`` starts the
+    H2D transfer), so chunk k+1 is in flight while the consumer's scan
+    megastep runs chunk k. depth=2 is classic double buffering; deeper
+    only helps when transfer time is burstier than compute. The producer
+    blocks (bounded queue) rather than running ahead unboundedly, and a
+    consumer that abandons the iterator mid-stream stops the thread
+    promptly (GeneratorExit -> stop flag) instead of leaking it.
+    """
+    if depth < 1:
+        raise ValueError(f"depth must be >= 1, got {depth}")
+    q: queue.Queue = queue.Queue(maxsize=depth)
+    stop = threading.Event()
+    done = object()
+    err: list = []
+
+    def worker():
+        try:
+            for item in it:
+                while not stop.is_set():
+                    try:
+                        q.put(item, timeout=0.05)
+                        break
+                    except queue.Full:
+                        continue
+                if stop.is_set():
+                    return
+        except BaseException as e:          # re-raised on the consumer side
+            err.append(e)
+        finally:
+            while not stop.is_set():
+                try:
+                    q.put(done, timeout=0.05)
+                    break
+                except queue.Full:
+                    continue
+
+    t = threading.Thread(target=worker, daemon=True,
+                         name="ingest-prefetch")
+    t.start()
+    try:
+        while True:
+            item = q.get()
+            if item is done:
+                break
+            yield item
+    finally:
+        stop.set()
+        t.join()
+    if err:
+        raise err[0]
+
+
+class LatencyRecorder:
+    """Per-packet admit->prediction latency accumulator.
+
+    ``record`` takes the admit wall-times of a cut's live packets and the
+    wall time their *final* predictions became available (after the host
+    sync); ``summary`` reduces to the percentile row the latency bench
+    and telemetry report (milliseconds)."""
+
+    def __init__(self):
+        self._spans: list = []
+
+    def record(self, admit_time: np.ndarray, finish: float) -> None:
+        if len(admit_time):
+            self._spans.append(finish - np.asarray(admit_time, np.float64))
+
+    @property
+    def n(self) -> int:
+        return sum(len(s) for s in self._spans)
+
+    def latencies(self) -> np.ndarray:
+        """(n,) float64 seconds, admit order."""
+        return (np.concatenate(self._spans) if self._spans
+                else np.zeros(0, np.float64))
+
+    def summary(self) -> dict:
+        lat = self.latencies() * 1e3
+        if not lat.size:
+            return {"n": 0, "p50_ms": None, "p95_ms": None, "p99_ms": None,
+                    "mean_ms": None, "max_ms": None}
+        p50, p95, p99 = np.percentile(lat, (50, 95, 99))
+        return {"n": int(lat.size), "p50_ms": float(p50),
+                "p95_ms": float(p95), "p99_ms": float(p99),
+                "mean_ms": float(lat.mean()), "max_ms": float(lat.max())}

@@ -455,12 +455,17 @@ class PacketChunk:
         return self.bucket.shape[1]
 
 
-def _trace_columns(trace, n_buckets: int, t0: Optional[float], bucket):
-    """Host-side per-packet columns shared by every window/chunk iterator.
+def trace_columns(trace, n_buckets: int, *, t0: Optional[float] = None,
+                  bucket=None) -> tuple:
+    """Host-side per-packet columns shared by every window/chunk iterator
+    AND the open-ended ingest ring (``netsim.ingest``). -> (cols, t0_used).
 
     Rebasing stays in float64 on host (see module docstring) and the
-    bucket hash is order-free, so both iterators present bit-identical
-    lanes to the jitted steps.
+    bucket hash is elementwise (order-free), so every consumer — batch,
+    per-window, chunked, or ring-buffered — presents bit-identical lanes
+    to the jitted steps. t0=None latches the batch's minimum timestamp;
+    the returned t0_used lets an open-ended caller latch it once on the
+    first batch and rebase every later batch against the same epoch.
     """
     ts64 = np.asarray(trace.ts, np.float64)
     if t0 is None:
@@ -473,7 +478,12 @@ def _trace_columns(trace, n_buckets: int, t0: Optional[float], bucket):
                 ts=rebase_ts_np(ts64, t0),
                 length=np.asarray(trace.length, np.float32),
                 is_fwd=(np.asarray(trace.direction) == 0)
-                .astype(np.float32))
+                .astype(np.float32)), t0
+
+
+def _trace_columns(trace, n_buckets: int, t0: Optional[float], bucket):
+    cols, _ = trace_columns(trace, n_buckets, t0=t0, bucket=bucket)
+    return cols
 
 
 def _pad_columns(cols: dict, n: int, total: int) -> dict:
@@ -484,6 +494,32 @@ def _pad_columns(cols: dict, n: int, total: int) -> dict:
         return cols
     return {k: np.concatenate([v, np.repeat(v[n - 1:n], total - n, axis=0)])
             for k, v in cols.items()}
+
+
+def pack_chunk_columns(cols: dict, n: int, window: int, rows: int) -> tuple:
+    """Pack ``n`` packets of host columns into ``rows`` windows of
+    ``window`` lanes. -> (full_cols, valid) as flat (rows*window,) arrays.
+
+    The single padding discipline shared by ``iter_chunks`` and the
+    ingest ring's deadline/drain cuts (``netsim.ingest``): the ragged
+    final *live* window replicate-pads the last packet (valid=False on
+    the pad lanes), and any windows beyond the live ones are *dead* —
+    all-zero columns, every lane invalid — so they fold nothing into the
+    registers, dispatch nothing, and report -1 on every lane. Both
+    callers produce bitwise-identical chunks because this is the only
+    place the layout is defined.
+    """
+    n_win = -(-n // window) if n else 0
+    if n_win > rows:
+        raise ValueError(f"{n} packets need {n_win} windows of {window} "
+                         f"lanes, only {rows} rows available")
+    live = _pad_columns(cols, n, n_win * window)
+    full = {k: np.zeros((rows * window,), v.dtype) for k, v in live.items()}
+    for k, v in live.items():
+        full[k][:n_win * window] = v
+    valid = np.zeros((rows * window,), bool)
+    valid[:n_win * window] = np.arange(n_win * window) < n
+    return full, valid
 
 
 def chunk_update_readout(state: FlowTableState, chunk: PacketChunk, *,
@@ -671,14 +707,9 @@ def iter_chunks(trace, window: int, chunk_windows: int, n_buckets: int, *,
     n_win = -(-n // window)
     n_chunks = -(-n_win // chunk_windows)
     rows = n_chunks * chunk_windows
-    cols = _pad_columns(cols, n, n_win * window)
-    lane_valid = np.arange(n_win * window) < n
-    # dead pad windows: all-zero lanes, valid=False (they fold nothing)
-    full = {k: np.zeros((rows * window,), v.dtype) for k, v in cols.items()}
-    for k, v in cols.items():
-        full[k][:n_win * window] = v
-    valid = np.zeros((rows * window,), bool)
-    valid[:n_win * window] = lane_valid
+    # shared packing discipline (ragged live window replicate-pads, dead
+    # pad windows are all-zero/invalid) — see pack_chunk_columns
+    full, valid = pack_chunk_columns(cols, n, window, rows)
     dev = {k: jnp.asarray(v.reshape(rows, window)) for k, v in full.items()}
     valid = jnp.asarray(valid.reshape(rows, window))
     for c in range(n_chunks):

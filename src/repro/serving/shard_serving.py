@@ -107,7 +107,12 @@ class ShardedStreamingServer(StreamingHybridServer):
                 f"flush_every*capacity={flush_every * capacity} must divide "
                 f"evenly over {n_sh} shards (each shard's backend serves "
                 f"one slice of the deferral buffer per flush)")
-        if chunk_windows is not None and (chunk_windows * capacity) % n_sh:
+        # "auto" resolves inside the parent init (through the
+        # _auto_chunk_filter override below, which enforces this same
+        # divisibility on every candidate), so only explicit ints are
+        # checked here
+        if (isinstance(chunk_windows, int)
+                and (chunk_windows * capacity) % n_sh):
             raise ValueError(
                 f"chunk_windows*capacity={chunk_windows * capacity} must "
                 f"divide evenly over {n_sh} shards (each shard's backend "
@@ -306,6 +311,20 @@ class ShardedStreamingServer(StreamingHybridServer):
         # _chunk_patch (two-phase epilogue) is inherited — the chunk's
         # deferred rows are already complete, so the host path needs no
         # shard-dim sum either.
+
+    # -- chunk-size autotune hooks ------------------------------------------
+
+    def _auto_chunk_server(self, k: int, artifact, backend_fn, **kw):
+        """Sweep throwaways share this server's mesh so candidate
+        timings include the real collectives."""
+        return ShardedStreamingServer(artifact, backend_fn, chunk_windows=k,
+                                      mesh=self.mesh, **kw)
+
+    def _auto_chunk_filter(self, capacity: int):
+        """Only Ks whose chunk deferral buffer divides over the mesh
+        (the per-shard backend-slice constraint validated in __init__)."""
+        n_sh = self.n_shards
+        return lambda k: (k * capacity) % n_sh == 0
 
     # -- streaming state ----------------------------------------------------
 

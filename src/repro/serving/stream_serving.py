@@ -32,11 +32,21 @@ pending prediction set at their recorded (window, lane) return
 addresses. ``flush_every=1`` (default) is the unchanged per-window path
 — the equivalence oracle; final predictions are bit-identical either
 way for row-wise backends.
+
+Open-ended ingest (DESIGN.md §13): ``serve_stream(source)`` is the
+primary serving loop — a pull-based pipeline over ``netsim.ingest``'s
+ring buffer (count/deadline window-granular cuts, optional prefetch
+double-buffering of chunk transfers, per-packet admit->prediction
+latency percentiles). ``serve_trace`` is its thin finite-replay wrapper,
+bit-identical to the pre-refactor trace loop. ``chunk_windows="auto"``
+runs a measured K sweep at init (``autotune_chunk_windows``) that can
+never select a chunk size regressing versus ``DEFAULT_CHUNK_WINDOWS``.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Callable, Optional
 
 import jax
@@ -48,12 +58,14 @@ from repro.core.hybrid import (DeferredDispatch, backpatch_pending,
                                chunk_dispatch, combine, defer_window,
                                dispatch, init_deferred)
 from repro.kernels.ops import fused_classify
-from repro.kernels.tuning import TileConfig
+from repro.kernels.tuning import (TileConfig, measure_min, sweep_best,
+                                  _artifact_key)
+from repro.netsim.ingest import (LatencyRecorder, PacketRingBuffer,
+                                 cut_stream, prefetch_iter, replay_source)
 from repro.netsim.stream import (EVICT_POLICIES, FLOW_FEATURES,
                                  FlowTableState, PacketChunk, PacketWindow,
                                  chunk_update_readout, flow_table_readout,
-                                 init_flow_table, iter_chunks, iter_windows,
-                                 window_update_readout)
+                                 init_flow_table, window_update_readout)
 from repro.serving.faults import FaultPolicy, FaultStats, GuardedBackend
 from repro.serving.hybrid_serving import HybridServer, HybridStats
 
@@ -355,6 +367,97 @@ def accumulate_chunk_stats(stats: StreamStats, chunk, fwd,
     return stats, frac, rows
 
 
+# -- chunk-size autotuning ---------------------------------------------------
+
+DEFAULT_CHUNK_WINDOWS = 16
+CHUNK_WINDOW_CANDIDATES = (4, 8, 16, 32)
+
+_CHUNK_TUNE_CACHE: dict = {}
+
+
+def clear_chunk_tune_cache() -> None:
+    _CHUNK_TUNE_CACHE.clear()
+
+
+def probe_chunk(window: int, k: int, n_buckets: int,
+                seed: int = 0) -> PacketChunk:
+    """Synthetic all-valid (k, window) chunk for timing sweeps: uniform
+    bucket ids (realistic scatter conflicts), monotone timestamps,
+    in-distribution lengths."""
+    rng = np.random.RandomState(seed)
+    n = k * window
+    shp = (k, window)
+    return PacketChunk(
+        bucket=jnp.asarray(rng.randint(0, n_buckets, n)
+                           .astype(np.int32).reshape(shp)),
+        ts=jnp.asarray(np.linspace(0.0, 1.0, n, dtype=np.float32)
+                       .reshape(shp)),
+        length=jnp.asarray(rng.uniform(60.0, 1500.0, n)
+                           .astype(np.float32).reshape(shp)),
+        is_fwd=jnp.asarray((rng.rand(n) < 0.5)
+                           .astype(np.float32).reshape(shp)),
+        valid=jnp.asarray(np.ones(shp, bool)))
+
+
+def autotune_chunk_windows(make_server, *, window: int, n_buckets: int,
+                           candidates=CHUNK_WINDOW_CANDIDATES,
+                           default: int = DEFAULT_CHUNK_WINDOWS,
+                           candidate_filter=None, reps: int = 3,
+                           seed: int = 0, cache_key=None, time_fn=None,
+                           verbose: bool = False) -> int:
+    """Measured K sweep at server init: pick ``chunk_windows``.
+
+    ``make_server(k)`` builds a throwaway server compiled for chunk size
+    k; each candidate is timed (``kernels.tuning.measure_min`` — warmup
+    absorbs compilation) on one synthetic ``probe_chunk`` and scored
+    per *packet* so different K compete fairly. The fixed ``default`` is
+    always timed too and the winner is the measured argmin over a set
+    containing it (``kernels.tuning.sweep_best``), so the sweep can
+    never pick a chunk size that regresses versus the default on the
+    tuned shape — the same no-tuned-regression contract as the kernel
+    tile autotuner. ``candidate_filter`` drops Ks a config cannot use
+    (the sharded tier's per-shard backend-slice divisibility); when it
+    rejects the default itself, the first surviving candidate takes over
+    the default's role. ``time_fn(k) -> seconds`` replaces the
+    measurement (deterministic tests); ``cache_key`` memoizes the
+    winner per (artifact shape, backend, geometry).
+
+    Timing probes call the real ``backend_fn`` — a *stateful* backend
+    (e.g. an injected-fault schedule keyed on call count) will observe
+    those extra calls, so combine "auto" with stateless backends or
+    pass an explicit chunk_windows.
+    """
+    if cache_key is not None:
+        hit = _CHUNK_TUNE_CACHE.get(cache_key)
+        if hit is not None:
+            return hit
+    cands = [k for k in candidates
+             if candidate_filter is None or candidate_filter(k)]
+    if candidate_filter is not None and not candidate_filter(default):
+        if not cands:
+            raise ValueError(
+                "no chunk_windows candidate satisfies this configuration "
+                f"(candidates={tuple(candidates)})")
+        default = cands[0]
+
+    def time_k(k: int) -> float:
+        if time_fn is not None:
+            return float(time_fn(k)) / (k * window)
+        srv = make_server(k)
+        chunk = probe_chunk(window, k, n_buckets, seed)
+
+        def one():
+            pred, _ = srv.step_chunk(chunk)
+            jax.block_until_ready(pred)
+        return measure_min(one, reps) / (k * window)   # per-packet seconds
+
+    best, _ = sweep_best(cands, time_k, default=default, verbose=verbose,
+                         label="chunk-autotune")
+    if cache_key is not None:
+        _CHUNK_TUNE_CACHE[cache_key] = best
+    return best
+
+
 class StreamingHybridServer(HybridServer):
     """HybridServer over a packet stream with per-flow register state.
 
@@ -410,7 +513,10 @@ class StreamingHybridServer(HybridServer):
         back-patched before the megastep returns — bit-identical to the
         per-window path for row-wise backends (the oracle tests and
         ``benchmarks/stream_bench.py`` assert). Mutually exclusive with
-        flush_every > 1: the chunk IS the flush cycle.
+        flush_every > 1: the chunk IS the flush cycle. Pass the string
+        ``"auto"`` to pick K by a measured init-time sweep
+        (``autotune_chunk_windows`` — cached per artifact/geometry,
+        never a regression versus ``DEFAULT_CHUNK_WINDOWS``).
 
         flush_occupancy: occupancy-triggered early flush for the
         flush_every > 1 path. A host-side policy (the host already
@@ -454,6 +560,16 @@ class StreamingHybridServer(HybridServer):
         """
         if flush_every < 1:
             raise ValueError(f"flush_every must be >= 1, got {flush_every}")
+        if chunk_windows == "auto":
+            # measured K sweep (never a regression vs the fixed default —
+            # see autotune_chunk_windows); resolved before the validation
+            # arithmetic below so every downstream check sees an int
+            chunk_windows = self._resolve_auto_chunk_windows(
+                artifact, backend_fn, n_buckets=n_buckets, window=window,
+                threshold=threshold, capacity=capacity,
+                evict_age=evict_age, saturate=saturate,
+                evict_policy=evict_policy, lru_occupancy=lru_occupancy,
+                use_pallas=use_pallas, tiles=tiles, fuse=fuse)
         if chunk_windows is not None:
             if chunk_windows < 1:
                 raise ValueError(
@@ -517,6 +633,8 @@ class StreamingHybridServer(HybridServer):
         self._state = self._make_state()
         self._stats = StreamStats.zero()
         self._reset_deferred()
+        self._ingest = None      # ring telemetry of the last serve_stream
+        self._latency = None     # LatencyRecorder of the last serve_stream
 
         def _switch_half(art, state, w: PacketWindow, threshold):
             """update registers -> aging sweep -> overflow guard -> read
@@ -706,6 +824,50 @@ class StreamingHybridServer(HybridServer):
         ``fault_policy``): attempts, retries, timeouts, breaker
         transitions — see ``serving.faults.FaultStats``."""
         return self._guard.stats if self._guard is not None else None
+
+    @property
+    def ingest_stats(self):
+        """``netsim.ingest.IngestStats`` of the most recent (or running)
+        ``serve_stream`` — admitted/dropped packets, count vs deadline vs
+        drain cuts. None before the first serve_stream."""
+        return self._ingest
+
+    @property
+    def latency(self) -> Optional[LatencyRecorder]:
+        """Admit->prediction LatencyRecorder of the most recent
+        ``serve_stream(record_latency=True)``; ``.summary()`` gives the
+        p50/p95/p99 row. None otherwise."""
+        return self._latency
+
+    # -- chunk-size autotune hooks ------------------------------------------
+
+    def _auto_chunk_server(self, k: int, artifact, backend_fn, **kw):
+        """Throwaway same-tier server compiled for chunk size k — the
+        sweep's timing target. The sharded tier overrides to pin its
+        mesh. fault_policy is deliberately not forwarded: probe timings
+        should measure the serving path, not retry/backoff schedules
+        (and "auto" is documented as a stateless-backend knob)."""
+        return StreamingHybridServer(artifact, backend_fn,
+                                     chunk_windows=k, **kw)
+
+    def _auto_chunk_filter(self, capacity: int):
+        """Candidate predicate (None = all Ks valid); the sharded tier
+        restricts to Ks whose deferral buffer divides over the mesh."""
+        return None
+
+    def _resolve_auto_chunk_windows(self, artifact, backend_fn, *,
+                                    n_buckets, window, capacity,
+                                    **kw) -> int:
+        key = (type(self).__name__, getattr(self, "n_shards", 1),
+               _artifact_key(artifact), id(backend_fn),
+               jax.default_backend(), window, n_buckets, capacity)
+        return autotune_chunk_windows(
+            lambda k: self._auto_chunk_server(
+                k, artifact, backend_fn, n_buckets=n_buckets,
+                window=window, capacity=capacity, **kw),
+            window=window, n_buckets=n_buckets,
+            candidate_filter=self._auto_chunk_filter(capacity),
+            cache_key=key)
 
     def _host_backend(self, rows):
         """The two-phase host backend invocation, fault-guarded when a
@@ -925,48 +1087,150 @@ class StreamingHybridServer(HybridServer):
         patched = self._chunk_patch(pending, jnp.asarray(be), dd)
         return patched, HybridStats(frac, rows, self.capacity)
 
-    def serve_trace(self, trace, *, t0: Optional[float] = None):
-        """Stream a whole PacketTrace through step(). -> (pred (P,), stats).
+    # -- open-ended serving --------------------------------------------------
 
-        Per-packet predictions concatenated in arrival order (pad lanes
-        stripped); the only host sync is the final concatenation. Under
-        deferred dispatch (flush_every > 1) every auto-flush back-patches
-        the backend answers over the provisional windows, and the trailing
-        partial cycle is flushed before returning — the predictions are
-        always final, bit-identical to flush_every=1 for row-wise
-        backends. Windows still pending from manual step() calls are
-        flushed (and their patches dropped, along with any unconsumed
-        queue) on entry: they belong to a different prediction stream
-        and must not patch into this trace's output.
+    def serve_stream(self, source, *, t0: Optional[float] = None,
+                     deadline: Optional[float] = None,
+                     ring_capacity: Optional[int] = None,
+                     prefetch: Optional[bool] = None,
+                     prefetch_depth: int = 2,
+                     record_latency: bool = False,
+                     clock: Callable[[], float] = time.monotonic):
+        """The primary serving loop: pull packets from an open-ended
+        ``source`` through the ingest ring. -> (pred (P,), stats).
 
-        With ``chunk_windows`` set the trace streams through
-        ``step_chunk`` instead: one (K, W) transfer and one scan
-        megastep per K windows, backend once per chunk, already-final
-        predictions — same output bit for bit.
+        ``source`` is any iterable of PacketTrace batches (a live
+        capture adapter, ``netsim.ingest.replay_source`` for finite
+        traces, a generator pacing a scenario). Batches are admitted
+        into a ``PacketRingBuffer`` and cut into window-granular chunks
+        by count or ``deadline`` (wall seconds an admitted packet may
+        wait), whichever fires first — see ``netsim.ingest``. Because
+        cuts never move window boundaries, predictions, the flow table
+        and every StreamStats field except ``flushes`` are bit-identical
+        under ANY cut grouping; replaying a finite trace in one batch
+        reproduces the offline grouping exactly (``serve_trace``'s
+        contract, oracle-gated by tests/test_ingest.py).
+
+        Ingest is pull-based, so backpressure is "the source waits":
+        nothing is dropped, ``ring_capacity`` (default 4 chunks) bounds
+        host memory. Push-style admission with tail-drop is the ring's
+        own ``drop=True`` mode, not this loop.
+
+        On the chunked path (``chunk_windows`` set) ``prefetch`` (default
+        on) maps cuts to device chunks on a background thread with a
+        bounded ``prefetch_depth`` queue — chunk k+1's (K, W) transfer
+        is in flight while chunk k runs in the scan megastep. The
+        per-window path has no chunk transfer to overlap: prefetch=True
+        there is a configuration error (ValueError); the default (None)
+        auto-disables.
+
+        record_latency=True records every packet's admit->prediction
+        wall latency into ``self.latency`` (p50/p95/p99 via
+        ``.summary()``) — *final*-prediction semantics: a chunk's
+        packets complete when the megastep's back-patched predictions
+        are host-visible; under deferred dispatch (flush_every > 1) a
+        window's packets complete at the flush that back-patches its
+        cycle (deferred rows' extra wait is therefore included). The
+        required per-cut host sync costs throughput, so the knob is
+        opt-in; off keeps the zero-sync loop.
+
+        Composition with the flush knobs (documented precedence): the
+        ingest ``deadline`` acts in the *wall-clock* domain on admitted
+        packets and only changes cut grouping; ``flush_deadline`` /
+        ``flush_occupancy`` act in the *data-time / occupancy* domain on
+        the deferral cycle inside ``step`` and only change flush
+        grouping. They compose freely (flush knobs require
+        flush_every > 1, which excludes the chunked path, so at most one
+        of {chunk prefetch, flush knobs} is ever active); when a count
+        cut and a deadline cut are both due, the count cut wins.
+        ``self.ingest_stats`` reports admitted/dropped/cut telemetry.
         """
+        chunked = bool(self.chunk_windows)
+        if prefetch is None:
+            prefetch = chunked
+        if prefetch and not chunked:
+            raise ValueError(
+                "prefetch double-buffers (K, W) chunk transfers and "
+                "needs the chunked path — build the server with "
+                "chunk_windows (prefetch=None auto-disables on the "
+                "per-window path)")
+        ring = PacketRingBuffer(self.window,
+                                self.chunk_windows if chunked else 1,
+                                self.n_buckets, t0=t0,
+                                capacity=ring_capacity, deadline=deadline,
+                                clock=clock)
+        self._ingest = ring.stats
+        rec = LatencyRecorder() if record_latency else None
+        self._latency = rec
+        # windows pending from manual step() calls belong to a different
+        # prediction stream: flush them, drop their patches
         self.flush()
         self._flush_queue = []
         preds = []
-        if self.chunk_windows:
-            for c in iter_chunks(trace, self.window, self.chunk_windows,
-                                 self.n_buckets, t0=t0):
-                pred, _ = self.step_chunk(c)
-                preds.append(pred.reshape(-1))
+        cuts = cut_stream(ring, source)
+
+        def _done(x) -> float:
+            jax.block_until_ready(x)
+            return clock()
+
+        if chunked:
+            pairs = ((c, c.to_chunk()) for c in cuts)
+            if prefetch:
+                pairs = prefetch_iter(pairs, depth=prefetch_depth)
+            for cut, chunk in pairs:
+                pred, _ = self.step_chunk(chunk)
+                flat = pred.reshape(-1)[:cut.n]   # live rows lead; pad/-1
+                #                                   lanes only trail them
+                if rec is not None:
+                    rec.record(cut.admit_time, _done(flat))
+                preds.append(flat)
             flat = (np.concatenate([np.asarray(p) for p in preds])
-                    [:trace.n_packets] if preds
-                    else np.zeros((0,), np.int32))
+                    if preds else np.zeros((0,), np.int32))
             return jnp.asarray(flat), self._stats.check()
-        for w in iter_windows(trace, self.window, self.n_buckets, t0=t0):
-            pred, _ = self.step(w)
-            preds.append(pred)
-            fl = self.consume_flush()
-            if fl is not None:
-                k, patched = fl
-                preds[-k:] = [patched[i] for i in range(k)]
-        fl = self.flush()                    # guaranteed end-of-trace flush
-        if fl is not None:
+
+        # per-window path (incl. deferred dispatch); one window per cut
+        times = []                    # admit times aligned with preds
+        n_live = 0
+
+        def _patch(fl):
             k, patched = fl
             preds[-k:] = [patched[i] for i in range(k)]
-        flat = (np.concatenate([np.asarray(p) for p in preds])
-                [:trace.n_packets] if preds else np.zeros((0,), np.int32))
+            if rec is not None:
+                done = _done(patched)
+                for at in times[len(times) - k:]:
+                    rec.record(at, done)
+
+        for cut in cuts:
+            for w in cut.to_windows():
+                pred, _ = self.step(w)
+                preds.append(pred)
+                times.append(cut.admit_time)
+                n_live += cut.n
+                if rec is not None and self.flush_every == 1:
+                    rec.record(cut.admit_time, _done(pred))
+                fl = self.consume_flush()
+                if fl is not None:
+                    _patch(fl)
+        fl = self.flush()             # guaranteed end-of-stream flush
+        if fl is not None:
+            _patch(fl)
+        flat = (np.concatenate([np.asarray(p) for p in preds])[:n_live]
+                if preds else np.zeros((0,), np.int32))
         return jnp.asarray(flat), self._stats.check()
+
+    def serve_trace(self, trace, *, t0: Optional[float] = None):
+        """Stream a whole PacketTrace. -> (pred (P,), stats).
+
+        A thin finite-replay wrapper over ``serve_stream``: the trace
+        enters the ingest ring as one batch, so t0 latches to the trace
+        minimum (the offline iterators' epoch), every cut is a count cut
+        and the grouping — hence predictions, flow table and StreamStats
+        including ``flushes`` — is bit-identical to driving
+        ``iter_chunks``/``iter_windows`` through ``step_chunk``/``step``
+        directly (the pre-refactor loop; tests/test_ingest.py keeps the
+        oracle). Per-packet predictions return concatenated in arrival
+        order with pad lanes stripped; under deferred dispatch they are
+        final (every cycle back-patched, trailing cycle flushed).
+        Prefetch is left at its default (on for the chunked path).
+        """
+        return self.serve_stream(replay_source(trace), t0=t0)

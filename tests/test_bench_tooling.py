@@ -50,11 +50,11 @@ def test_run_suites_empty_returns_cleanly():
 
 def test_all_suites_list_covers_every_emitter():
     """The --all-suites chain names each standalone bench-v1 emitter,
-    including the cross-window batching and adversarial-scenario
-    benches."""
+    including the cross-window batching, adversarial-scenario and
+    ingest-latency benches."""
     assert set(EXTRA_SUITES) == {"kernel_microbench", "stream_bench",
                                  "shard_stream_bench", "batch_bench",
-                                 "scenario_bench"}
+                                 "scenario_bench", "latency_bench"}
 
 
 # ---------------------------------------------------------------------------
@@ -125,3 +125,30 @@ def test_validator_cli_requires_files(tmp_path, monkeypatch):
     with pytest.raises(SystemExit) as e:
         validate_main([])
     assert e.value.code not in (0, None)
+
+
+def _latency_payload():
+    return {
+        "schema": "bench-v1", "suite": "latency", "generated_unix": 0.0,
+        "backend": "cpu", "config": {},
+        "benches": [{"name": "ingest_latency", "paper_ref": "§5",
+                     "ok": True, "wall_s": 0.1,
+                     "rows": [{"config": "prefetch_on", "prefetch": True,
+                               "p50_ms": 1.0, "p95_ms": 2.0, "p99_ms": 3.0,
+                               "bit_identical": True},
+                              {"config": "autotune",
+                               "chunk_windows": 16}]}],
+    }
+
+
+def test_validator_latency_rows_require_percentiles():
+    validate_bench_payload(_latency_payload(), "ok")   # autotune row exempt
+    for strip in ("p50_ms", "p95_ms", "p99_ms", "bit_identical"):
+        payload = _latency_payload()
+        payload["benches"][0]["rows"][0].pop(strip)
+        with pytest.raises(SchemaError, match=strip):
+            validate_bench_payload(payload, "stripped")
+    payload = _latency_payload()
+    payload["benches"][0]["rows"][0]["p95_ms"] = "slow"   # wrong type
+    with pytest.raises(SchemaError, match="p95_ms"):
+        validate_bench_payload(payload, "typed")

@@ -1,0 +1,492 @@
+"""Open-ended ingest pipeline: ring buffer, serve_stream, autotune.
+
+The contracts under test (DESIGN.md §13):
+
+* window-granular cuts — the ring never moves a window boundary, so
+  predictions, the flow table and every StreamStats field except
+  ``flushes`` are invariant under ANY cut grouping; single-batch replay
+  reproduces the offline ``iter_chunks`` grouping exactly, which makes
+  ``serve_trace`` a bit-identical thin wrapper over ``serve_stream``;
+* the prefetch double-buffer changes wall time only, never a bit;
+* the chunk-size autotune is an argmin over a set that always contains
+  the fixed default — it can never pick a regressing K;
+* latency accounting covers every admitted packet exactly once,
+  including rows back-patched by a later deferred flush.
+"""
+
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.mapping import map_tree_ensemble
+from repro.ml.trees import fit_random_forest, predict_tree_ensemble
+from repro.netsim.features import flow_features
+from repro.netsim.ingest import (HostCut, PacketRingBuffer, cut_stream,
+                                 LatencyRecorder, prefetch_iter,
+                                 replay_source, slice_trace)
+from repro.netsim.packets import synth_trace
+from repro.netsim.stream import iter_chunks, pack_chunk_columns, \
+    trace_columns
+from repro.serving.faults import FaultPolicy, FaultyBackend
+from repro.serving.shard_serving import ShardedStreamingServer
+from repro.serving.stream_serving import (CHUNK_WINDOW_CANDIDATES,
+                                          DEFAULT_CHUNK_WINDOWS,
+                                          StreamingHybridServer,
+                                          autotune_chunk_windows,
+                                          clear_chunk_tune_cache)
+
+N_BUCKETS = 1 << 11
+WINDOW = 64
+K = 4
+
+DEVICE_COUNTS = [d for d in (1, 2) if jax.device_count() % d == 0
+                 and d <= jax.device_count()]
+
+FAST = FaultPolicy(max_retries=1, backoff_base_s=0.0,
+                   breaker_threshold=3, breaker_cooldown=2)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    trace = synth_trace(n_flows=300, seed=3)
+    b, table = flow_features(trace, n_buckets=N_BUCKETS)
+    first_idx = np.unique(np.asarray(trace.flow_id), return_index=True)[1]
+    rows = np.asarray(table)[np.asarray(b)[first_idx]].astype(np.float32)
+    small = fit_random_forest(rows, trace.flow_label, n_classes=2,
+                              n_trees=4, max_depth=3, seed=0)
+    big = fit_random_forest(rows, trace.flow_label, n_classes=2,
+                            n_trees=12, max_depth=5, seed=1)
+    art = map_tree_ensemble(small, rows.shape[1])
+    return trace, art, (lambda r: predict_tree_ensemble(big, r))
+
+
+def _fake_clock(step=0.0, start=100.0):
+    """Deterministic wall clock advancing ``step`` seconds per call."""
+    state = {"t": start}
+
+    def clock():
+        state["t"] += step
+        return state["t"]
+    return clock
+
+
+def _served(srv, trace, **kw):
+    """(preds, stats, flow_table) — serve_trace, or serve_stream over a
+    ``replay={...}``-configured replay_source when given."""
+    if "replay" in kw:
+        source = replay_source(trace, **kw.pop("replay"))
+        pred, stats = srv.serve_stream(source, **kw)
+    else:
+        pred, stats = srv.serve_trace(trace, **kw)
+    return np.asarray(pred), stats, np.asarray(srv.flow_table())
+
+
+def _assert_same_serving(got, ref, *, ignore_flushes=False):
+    (gp, gs, gt), (rp, rs, rt) = got, ref
+    np.testing.assert_array_equal(gp, rp)
+    np.testing.assert_array_equal(gt, rt)
+    for f in dataclasses.fields(rs):
+        if ignore_flushes and f.name == "flushes":
+            continue
+        assert getattr(gs, f.name) == getattr(rs, f.name), f.name
+
+
+# ---------------------------------------------------------------------------
+# ring mechanics (host-only, no serving)
+# ---------------------------------------------------------------------------
+
+def test_ring_capacity_floor_validation():
+    # floor (K+1)*W - 1: a full ring must always hold a ready chunk,
+    # otherwise the pull loop could fill up without ever cutting
+    floor = (K + 1) * WINDOW - 1
+    with pytest.raises(ValueError):
+        PacketRingBuffer(WINDOW, K, N_BUCKETS, capacity=floor - 1)
+    ring = PacketRingBuffer(WINDOW, K, N_BUCKETS, capacity=floor)
+    assert ring.free == floor
+
+
+def test_full_ring_always_has_a_ready_chunk():
+    tr = synth_trace(n_flows=120, seed=1)
+    ring = PacketRingBuffer(WINDOW, K, N_BUCKETS,
+                            capacity=(K + 1) * WINDOW - 1)
+    n = ring.admit(slice_trace(tr, 0, ring.free))
+    assert n == ring.buffered and ring.free == 0
+    assert ring.ready()                      # progress guarantee
+    cut = ring.cut("count")
+    assert cut.kind == "count" and cut.n == K * WINDOW
+    assert cut.rows == K and cut.n_windows == K
+
+
+def test_push_admit_tail_drop_and_overflow():
+    tr = synth_trace(n_flows=120, seed=1)
+    cap = (K + 1) * WINDOW - 1
+    strict = PacketRingBuffer(WINDOW, K, N_BUCKETS, capacity=cap)
+    with pytest.raises(ValueError):
+        strict.admit(slice_trace(tr, 0, cap + 1))
+    lossy = PacketRingBuffer(WINDOW, K, N_BUCKETS, capacity=cap, drop=True)
+    n = lossy.admit(slice_trace(tr, 0, cap + 10))
+    assert n == cap and lossy.buffered == cap
+    assert lossy.stats.admitted == cap and lossy.stats.dropped == 10
+
+
+def test_drain_pops_ragged_tail():
+    tr = synth_trace(n_flows=120, seed=1)
+    m = K * WINDOW + WINDOW + 7                    # K full + 1 + ragged
+    ring = PacketRingBuffer(WINDOW, K, N_BUCKETS)
+    ring.admit(slice_trace(tr, 0, m))
+    assert ring.cut("count").n == K * WINDOW
+    tail = ring.drain()
+    assert tail.kind == "drain" and tail.n == WINDOW + 7
+    assert tail.n_windows == 2 and ring.buffered == 0
+    assert ring.drain() is None
+    s = ring.stats
+    assert (s.count_cuts, s.drain_cuts, s.cuts) == (1, 1, 2)
+
+
+def test_deadline_due_tracks_oldest_admit():
+    ring = PacketRingBuffer(WINDOW, K, N_BUCKETS, deadline=5.0,
+                            clock=lambda: 100.0)
+    tr = synth_trace(n_flows=120, seed=1)
+    assert not ring.deadline_due(now=200.0)  # empty: nothing can be due
+    ring.admit(slice_trace(tr, 0, WINDOW), now=100.0)
+    assert not ring.deadline_due(now=104.0)
+    assert ring.deadline_due(now=105.0)      # oldest admit aged past 5s
+    assert ring.cut("deadline").kind == "deadline"
+    ring.admit(slice_trace(tr, 0, WINDOW // 2), now=100.0)
+    assert not ring.deadline_due(now=200.0)  # incomplete window never cuts
+
+
+def test_count_cut_wins_over_deadline():
+    # clock jumps far past the deadline on every call: both triggers are
+    # due the moment a chunk completes, and the count cut must win
+    tr = synth_trace(n_flows=200, seed=2)
+    ring = PacketRingBuffer(WINDOW, K, N_BUCKETS, deadline=0.5,
+                            clock=_fake_clock(step=10.0))
+    kinds = [c.kind for c in cut_stream(ring, replay_source(tr, batch=None))]
+    assert kinds[0] == "count"
+    assert ring.stats.count_cuts >= 1
+
+
+def test_single_batch_replay_bit_identical_to_iter_chunks(setup):
+    trace, _, _ = setup
+    ring = PacketRingBuffer(WINDOW, K, N_BUCKETS)
+    cuts = list(cut_stream(ring, replay_source(trace)))
+    ref = list(iter_chunks(trace, WINDOW, K, N_BUCKETS))
+    assert len(cuts) == len(ref)
+    for cut, rc in zip(cuts, ref):
+        got = cut.to_chunk()
+        for f in ("bucket", "ts", "length", "is_fwd", "valid"):
+            np.testing.assert_array_equal(np.asarray(getattr(got, f)),
+                                          np.asarray(getattr(rc, f)), f)
+    total = sum(c.n for c in cuts)
+    assert total == trace.n_packets
+    assert ring.stats.admitted == trace.n_packets
+
+
+def test_pack_chunk_columns_layout():
+    cols, _ = trace_columns(synth_trace(n_flows=40, seed=5), N_BUCKETS)
+    n = len(cols["bucket"])
+    rows = -(-n // WINDOW) + 1                       # one dead pad window
+    full, valid = pack_chunk_columns(cols, n, WINDOW, rows)
+    assert valid.shape == (rows * WINDOW,)
+    assert valid[:n].all() and not valid[n:].any()   # live lanes lead
+    np.testing.assert_array_equal(full["bucket"][:n], cols["bucket"])
+    # replicate-last pad inside the ragged window, zeros in dead windows
+    live_w = -(-n // WINDOW)
+    if n % WINDOW:
+        np.testing.assert_array_equal(
+            full["bucket"][n:live_w * WINDOW],
+            np.repeat(cols["bucket"][-1], live_w * WINDOW - n))
+    assert (full["bucket"][live_w * WINDOW:] == 0).all()
+
+
+def test_prefetch_iter_preserves_order_and_propagates_errors():
+    assert list(prefetch_iter(iter(range(100)), depth=2)) == list(range(100))
+
+    def boom():
+        yield 1
+        raise RuntimeError("source died")
+    it = prefetch_iter(boom(), depth=2)
+    assert next(it) == 1
+    with pytest.raises(RuntimeError, match="source died"):
+        next(it)
+
+
+def test_latency_recorder_summary():
+    rec = LatencyRecorder()
+    assert rec.summary()["n"] == 0
+    rec.record(np.array([0.0, 0.1, 0.2]), 1.0)
+    rec.record(np.array([0.5]), 1.0)
+    s = rec.summary()
+    assert s["n"] == rec.n == 4
+    assert s["p50_ms"] <= s["p95_ms"] <= s["p99_ms"] <= s["max_ms"]
+    assert s["max_ms"] == pytest.approx(1000.0)
+
+
+# ---------------------------------------------------------------------------
+# serve_stream == serve_trace (the thin-wrapper contract)
+# ---------------------------------------------------------------------------
+
+def test_serve_stream_dribbled_equals_serve_trace_chunked(setup):
+    trace, art, backend = setup
+    kw = dict(n_buckets=N_BUCKETS, window=WINDOW, chunk_windows=K,
+              capacity=32)
+    ref = _served(StreamingHybridServer(art, backend, **kw), trace)
+    srv = StreamingHybridServer(art, backend, **kw)
+    for batch in (None, 97, WINDOW * K):     # one-shot, ragged, chunk-sized
+        srv.reset()                          # each replay is a new epoch
+        got = _served(srv, trace, replay={"batch": batch})
+        _assert_same_serving(got, ref)
+    assert srv.ingest_stats.admitted == trace.n_packets
+    assert srv.ingest_stats.dropped == 0
+
+
+def test_serve_trace_is_serve_stream_replay(setup):
+    trace, art, backend = setup
+    kw = dict(n_buckets=N_BUCKETS, window=WINDOW, chunk_windows=K,
+              capacity=32)
+    srv = StreamingHybridServer(art, backend, **kw)
+    pred, stats = srv.serve_trace(trace)
+    assert srv.ingest_stats is not None      # it really went through the ring
+    ref = StreamingHybridServer(art, backend, **kw)
+    rp, rs = ref.serve_stream(replay_source(trace))
+    np.testing.assert_array_equal(np.asarray(pred), np.asarray(rp))
+    assert stats == rs
+
+
+def test_prefetch_bit_identical_and_per_window_rejected(setup):
+    trace, art, backend = setup
+    kw = dict(n_buckets=N_BUCKETS, window=WINDOW, capacity=32)
+    srv = StreamingHybridServer(art, backend, chunk_windows=K, **kw)
+    on = _served(srv, trace, replay={"batch": 113}, prefetch=True)
+    srv.reset()
+    off = _served(srv, trace, replay={"batch": 113}, prefetch=False)
+    _assert_same_serving(on, off)
+    pw = StreamingHybridServer(art, backend, **kw)
+    with pytest.raises(ValueError, match="prefetch"):
+        pw.serve_stream(replay_source(trace), prefetch=True)
+    pred, _ = pw.serve_stream(replay_source(trace))   # None auto-disables
+    assert np.asarray(pred).shape == (trace.n_packets,)
+
+
+def test_serve_stream_per_window_deferred_dribbled(setup):
+    trace, art, backend = setup
+    kw = dict(n_buckets=N_BUCKETS, window=WINDOW, flush_every=3,
+              capacity=32)
+    ref = _served(StreamingHybridServer(art, backend, **kw), trace)
+    srv = StreamingHybridServer(art, backend, **kw)
+    got = _served(srv, trace, replay={"batch": 151}, record_latency=True)
+    _assert_same_serving(got, ref)
+    # every packet's final (back-patched) prediction was timed once
+    assert srv.latency.n == trace.n_packets
+
+
+def test_deadline_cuts_change_flushes_only(setup):
+    trace, art, backend = setup
+    kw = dict(n_buckets=N_BUCKETS, window=WINDOW, chunk_windows=K,
+              capacity=32)
+    ref = _served(StreamingHybridServer(art, backend, **kw), trace)
+    srv = StreamingHybridServer(art, backend, **kw)
+    # every batch ages the ring 10 fake seconds past the 1s deadline, so
+    # sub-chunk groups of complete windows are cut early
+    got = _served(srv, trace, replay={"batch": WINDOW + 11}, deadline=1.0,
+                  clock=_fake_clock(step=10.0))
+    assert srv.ingest_stats.deadline_cuts > 0
+    _assert_same_serving(got, ref, ignore_flushes=True)
+
+
+def test_serve_stream_with_eviction_bit_identical(setup):
+    trace, art, backend = setup
+    kw = dict(n_buckets=N_BUCKETS, window=WINDOW, chunk_windows=K,
+              capacity=32, evict_age=0.5)
+    ref = _served(StreamingHybridServer(art, backend, **kw), trace)
+    srv = StreamingHybridServer(art, backend, **kw)
+    got = _served(srv, trace, replay={"batch": 89})
+    _assert_same_serving(got, ref)
+    assert ref[1].evicted > 0                # the knob actually fired
+
+
+def test_serve_stream_fault_injection_replay(setup):
+    # an injected-fault schedule is a pure function of (seed, call index);
+    # count cuts keep the flush grouping identical, so the dribbled
+    # stream must replay the exact degradation sequence of serve_trace
+    trace, art, backend = setup
+    kw = dict(n_buckets=N_BUCKETS, window=WINDOW, flush_every=2,
+              capacity=32, fault_policy=FAST)
+    ref_srv = StreamingHybridServer(
+        art, FaultyBackend(backend, error_rate=0.4, seed=9), **kw)
+    ref = _served(ref_srv, trace)
+    srv = StreamingHybridServer(
+        art, FaultyBackend(backend, error_rate=0.4, seed=9), **kw)
+    got = _served(srv, trace, replay={"batch": 201})
+    _assert_same_serving(got, ref)
+    assert ref[1].degraded > 0               # faults actually landed
+
+
+def test_latency_recorder_covers_chunked_path(setup):
+    trace, art, backend = setup
+    srv = StreamingHybridServer(art, backend, n_buckets=N_BUCKETS,
+                                window=WINDOW, chunk_windows=K, capacity=32)
+    srv.serve_stream(replay_source(trace, batch=177), record_latency=True)
+    s = srv.latency.summary()
+    assert s["n"] == trace.n_packets
+    assert 0.0 <= s["p50_ms"] <= s["p95_ms"] <= s["p99_ms"]
+    srv.serve_stream(replay_source(trace))   # off again: zero-sync loop
+    assert srv.latency is None
+
+
+# ---------------------------------------------------------------------------
+# flush-knob composition (wall-clock cuts x data-time flushes)
+# ---------------------------------------------------------------------------
+
+def test_flush_knobs_need_deferral_and_exclude_chunked(setup):
+    _, art, backend = setup
+    kw = dict(n_buckets=N_BUCKETS, window=WINDOW)
+    with pytest.raises(ValueError, match="flush_every"):
+        StreamingHybridServer(art, backend, flush_occupancy=0.5, **kw)
+    with pytest.raises(ValueError, match="flush_every"):
+        StreamingHybridServer(art, backend, flush_deadline=1.0, **kw)
+    with pytest.raises(ValueError):
+        StreamingHybridServer(art, backend, chunk_windows=K,
+                              flush_every=4, flush_occupancy=0.5, **kw)
+
+
+@pytest.mark.parametrize("knob", [{"flush_occupancy": 0.5},
+                                  {"flush_deadline": 0.25}])
+def test_flush_knobs_compose_with_ingest_deadline(setup, knob):
+    # ingest deadline (wall clock) regroups cuts; flush knobs (data time
+    # / occupancy) regroup flushes — composed, predictions and the flow
+    # table must still match the offline replay bit for bit. On the
+    # per-window path (the only one flush knobs can reach) cuts are one
+    # window, so count-cut precedence consumes every complete window the
+    # moment it exists and the wall-clock deadline is provably inert —
+    # the documented "count wins" precedence, asserted here
+    trace, art, backend = setup
+    kw = dict(n_buckets=N_BUCKETS, window=WINDOW, flush_every=4,
+              capacity=32, **knob)
+    ref = _served(StreamingHybridServer(art, backend, **kw), trace)
+    srv = StreamingHybridServer(art, backend, **kw)
+    got = _served(srv, trace, replay={"batch": WINDOW * 2 + 5},
+                  deadline=1.0, clock=_fake_clock(step=10.0))
+    assert srv.ingest_stats.deadline_cuts == 0
+    assert srv.ingest_stats.count_cuts > 0
+    _assert_same_serving(got, ref)
+
+
+# ---------------------------------------------------------------------------
+# chunk-size autotune
+# ---------------------------------------------------------------------------
+
+def _mk(setup_tuple, **extra):
+    _, art, backend = setup_tuple
+    return lambda k: StreamingHybridServer(
+        art, backend, n_buckets=N_BUCKETS, window=WINDOW, chunk_windows=k,
+        capacity=32, **extra)
+
+
+def test_autotune_picks_per_packet_argmin(setup):
+    # time_fn gives wall seconds per chunk step; per-packet scoring must
+    # divide by k*window — equal wall times mean the largest K wins
+    k = autotune_chunk_windows(
+        _mk(setup), window=WINDOW, n_buckets=N_BUCKETS,
+        candidates=(4, 8, 16), default=4, time_fn=lambda k: 1.0)
+    assert k == 16
+    k = autotune_chunk_windows(
+        _mk(setup), window=WINDOW, n_buckets=N_BUCKETS,
+        candidates=(4, 8, 16), default=4,
+        time_fn={4: 1.0, 8: 3.0, 16: 9.0}.__getitem__)
+    assert k == 4                            # sublinear growth: smallest
+
+
+def test_autotune_never_drops_the_default(setup):
+    # the default is timed even when absent from candidates, and wins
+    # when it measures fastest — the no-regression contract
+    times = {4: 5.0, 8: 5.0, 16: 0.1}
+    k = autotune_chunk_windows(
+        _mk(setup), window=WINDOW, n_buckets=N_BUCKETS,
+        candidates=(4, 8), default=16, time_fn=times.__getitem__)
+    assert k == 16
+
+
+def test_autotune_candidate_filter(setup):
+    calls = []
+    k = autotune_chunk_windows(
+        _mk(setup), window=WINDOW, n_buckets=N_BUCKETS,
+        candidates=(4, 6, 8), default=4,
+        candidate_filter=lambda k: k % 4 == 0,
+        time_fn=lambda k: calls.append(k) or 1.0)
+    assert k in (4, 8) and 6 not in calls
+    # filter rejects the default too: first survivor takes its role
+    k = autotune_chunk_windows(
+        _mk(setup), window=WINDOW, n_buckets=N_BUCKETS,
+        candidates=(6, 12), default=4, candidate_filter=lambda k: k % 3 == 0,
+        time_fn=lambda k: 1.0)
+    assert k == 12                           # per-packet argmin of 6, 12
+    with pytest.raises(ValueError, match="candidate"):
+        autotune_chunk_windows(
+            _mk(setup), window=WINDOW, n_buckets=N_BUCKETS,
+            candidates=(6,), default=4, candidate_filter=lambda k: False,
+            time_fn=lambda k: 1.0)
+
+
+def test_autotune_cache_short_circuits(setup):
+    clear_chunk_tune_cache()
+    calls = []
+
+    def timer(k):
+        calls.append(k)
+        return float(k)
+    key = ("test", "cache")
+    k1 = autotune_chunk_windows(_mk(setup), window=WINDOW,
+                                n_buckets=N_BUCKETS, candidates=(4, 8),
+                                default=4, time_fn=timer, cache_key=key)
+    n_timed = len(calls)
+    k2 = autotune_chunk_windows(_mk(setup), window=WINDOW,
+                                n_buckets=N_BUCKETS, candidates=(4, 8),
+                                default=4, time_fn=timer, cache_key=key)
+    assert k1 == k2 and len(calls) == n_timed
+    clear_chunk_tune_cache()
+
+
+def test_chunk_windows_auto_resolves_and_serves(setup):
+    trace, art, backend = setup
+    clear_chunk_tune_cache()
+    srv = StreamingHybridServer(art, backend, n_buckets=N_BUCKETS,
+                                window=WINDOW, chunk_windows="auto",
+                                capacity=32)
+    assert srv.chunk_windows in CHUNK_WINDOW_CANDIDATES + \
+        (DEFAULT_CHUNK_WINDOWS,)
+    ref = _served(StreamingHybridServer(art, backend, n_buckets=N_BUCKETS,
+                                        window=WINDOW,
+                                        chunk_windows=srv.chunk_windows,
+                                        capacity=32), trace)
+    _assert_same_serving(_served(srv, trace), ref)
+    clear_chunk_tune_cache()
+
+
+# ---------------------------------------------------------------------------
+# sharded tier
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n_shards", DEVICE_COUNTS)
+def test_sharded_serve_stream_equals_serve_trace(setup, n_shards):
+    trace, art, backend = setup
+    kw = dict(n_buckets=N_BUCKETS, window=WINDOW, chunk_windows=K,
+              capacity=32, n_shards=n_shards)
+    ref = _served(ShardedStreamingServer(art, backend, **kw), trace)
+    srv = ShardedStreamingServer(art, backend, **kw)
+    got = _served(srv, trace, replay={"batch": 131})
+    _assert_same_serving(got, ref)
+
+
+@pytest.mark.parametrize("n_shards", DEVICE_COUNTS)
+def test_sharded_auto_respects_divisibility(setup, n_shards):
+    _, art, backend = setup
+    clear_chunk_tune_cache()
+    srv = ShardedStreamingServer(art, backend, n_buckets=N_BUCKETS,
+                                 window=WINDOW, chunk_windows="auto",
+                                 capacity=32, n_shards=n_shards)
+    assert (srv.chunk_windows * 32) % n_shards == 0
+    clear_chunk_tune_cache()
