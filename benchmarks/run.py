@@ -41,7 +41,8 @@ BENCHES = [
 # benches; each must force its own environment (e.g. shard_stream_bench's
 # multi-device host platform) before its first jax import, hence subprocesses
 EXTRA_SUITES = ("kernel_microbench", "stream_bench", "shard_stream_bench",
-                "batch_bench", "scenario_bench", "latency_bench")
+                "batch_bench", "scenario_bench", "latency_bench",
+                "obs_bench")
 
 
 def run_suites(suite_modules, quick=False):

@@ -40,7 +40,7 @@ import numpy as np
 from benchmarks.common import print_table, trace_models, \
     write_bench_json
 from repro.netsim.scenarios import make_scenario
-from repro.serving.faults import FaultPolicy, FaultyBackend
+from repro.serving.faults import FaultPolicy, FaultStats, FaultyBackend
 from repro.serving.stream_serving import StreamingHybridServer
 
 # fault profiles: kwargs for FaultyBackend (None = unguarded reference)
@@ -127,6 +127,7 @@ def run(*, scale=1.0, n_buckets=4096, window=256, capacity=64,
                 "retries": g.retries,
                 "rejected": g.rejected,
                 "breaker_opens": g.breaker_opens,
+                "fault_stats": g.as_dict(),
                 "zero_fault_bit_identical": fkw is None,
             })
 
@@ -151,6 +152,9 @@ def run(*, scale=1.0, n_buckets=4096, window=256, capacity=64,
             "flushes": stats.n_flushes,
             "flushes_failed": 0, "retries": 0, "rejected": 0,
             "breaker_opens": 0,
+            # unguarded run: no GuardedBackend, so an all-zero snapshot
+            # keeps the row shape uniform with the fault-profile rows
+            "fault_stats": FaultStats().as_dict(),
             "zero_fault_bit_identical": False,
         })
 

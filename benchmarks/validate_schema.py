@@ -50,6 +50,19 @@ LATENCY_ROW_KEYS = {
     "p99_ms": (int, float),
     "bit_identical": bool,
 }
+# suite "obs" (obs_bench): overhead rows (carrying an obs_on flag) pin
+# the oracle + throughput-ratio keys; drift rows (carrying a scenario)
+# pin the detector verdicts — both feed the trajectory diff
+OBS_OVERHEAD_ROW_KEYS = {
+    "pkts_per_s": (int, float),
+    "throughput_ratio": (int, float),
+    "bit_identical": bool,
+}
+OBS_DRIFT_ROW_KEYS = {
+    "fired": bool,
+    "detectors": list,
+    "expected_fired": bool,
+}
 
 
 class SchemaError(ValueError):
@@ -88,6 +101,20 @@ def validate_bench_payload(payload, path="<payload>"):
                     continue            # autotune/summary rows
                 rwhere = f"{where}.rows[{j}]"
                 for key, types in LATENCY_ROW_KEYS.items():
+                    _require(key in row, rwhere, f"missing key {key!r}")
+                    _require(isinstance(row[key], types), rwhere,
+                             f"{key!r} must be {types}, "
+                             f"got {type(row[key]).__name__}")
+        if payload["suite"] == "obs" and isinstance(bench["rows"], list):
+            for j, row in enumerate(bench["rows"]):
+                if not isinstance(row, dict):
+                    continue
+                keys = (OBS_OVERHEAD_ROW_KEYS if "obs_on" in row else
+                        OBS_DRIFT_ROW_KEYS if "scenario" in row else None)
+                if keys is None:
+                    continue
+                rwhere = f"{where}.rows[{j}]"
+                for key, types in keys.items():
                     _require(key in row, rwhere, f"missing key {key!r}")
                     _require(isinstance(row[key], types), rwhere,
                              f"{key!r} must be {types}, "

@@ -74,6 +74,12 @@ class IngestStats:
     def cuts(self) -> int:
         return self.count_cuts + self.deadline_cuts + self.drain_cuts
 
+    def as_dict(self) -> dict:
+        """Snapshot contract shared with StreamStats/FaultStats — the
+        form the obs metrics registry reports (derived ``cuts``
+        included)."""
+        return dict(dataclasses.asdict(self), cuts=self.cuts)
+
 
 @dataclasses.dataclass
 class HostCut:
@@ -412,30 +418,77 @@ class LatencyRecorder:
     ``record`` takes the admit wall-times of a cut's live packets and the
     wall time their *final* predictions became available (after the host
     sync); ``summary`` reduces to the percentile row the latency bench
-    and telemetry report (milliseconds)."""
+    and telemetry report (milliseconds).
 
-    def __init__(self):
-        self._spans: list = []
+    ``max_samples=None`` (the default) keeps every span — exact
+    percentiles, memory linear in stream length, right for bounded
+    traces. On an *open-ended* stream that is an unbounded leak, so
+    ``max_samples=k`` switches to a seeded uniform reservoir (Algorithm
+    R): memory is O(k), percentiles come from the reservoir (exact until
+    the k+1-th packet, an unbiased sample after), while ``n`` / ``mean``
+    / ``max`` stay exact over *all* packets seen via running
+    accumulators. ``latencies()`` returns the reservoir in bounded mode
+    — a uniform sample, not the full admit-order sequence."""
+
+    def __init__(self, max_samples: Optional[int] = None, seed: int = 0):
+        if max_samples is not None and max_samples < 1:
+            raise ValueError(f"max_samples must be >= 1 or None, "
+                             f"got {max_samples}")
+        self.max_samples = max_samples
+        self._spans: list = []              # unbounded mode
+        self._reservoir: Optional[np.ndarray] = (
+            None if max_samples is None
+            else np.zeros(max_samples, np.float64))
+        self._rng = np.random.default_rng(seed)
+        self._n_seen = 0
+        self._sum = 0.0
+        self._max: Optional[float] = None
 
     def record(self, admit_time: np.ndarray, finish: float) -> None:
-        if len(admit_time):
-            self._spans.append(finish - np.asarray(admit_time, np.float64))
+        if not len(admit_time):
+            return
+        spans = finish - np.asarray(admit_time, np.float64)
+        self._sum += float(spans.sum())
+        mx = float(spans.max())
+        self._max = mx if self._max is None else max(self._max, mx)
+        if self.max_samples is None:
+            self._n_seen += len(spans)
+            self._spans.append(spans)
+            return
+        k = self.max_samples
+        for v in spans:                     # Algorithm R, element-wise
+            i = self._n_seen
+            self._n_seen += 1
+            if i < k:
+                self._reservoir[i] = v
+            else:
+                j = int(self._rng.integers(0, i + 1))
+                if j < k:
+                    self._reservoir[j] = v
 
     @property
     def n(self) -> int:
-        return sum(len(s) for s in self._spans)
+        """Total packets seen (NOT the reservoir size in bounded mode)."""
+        return self._n_seen
 
     def latencies(self) -> np.ndarray:
-        """(n,) float64 seconds, admit order."""
-        return (np.concatenate(self._spans) if self._spans
-                else np.zeros(0, np.float64))
+        """(m,) float64 seconds. Unbounded mode: every span, admit
+        order. Bounded mode: the reservoir sample (m = min(n, k))."""
+        if self.max_samples is None:
+            return (np.concatenate(self._spans) if self._spans
+                    else np.zeros(0, np.float64))
+        return self._reservoir[:min(self._n_seen, self.max_samples)].copy()
 
     def summary(self) -> dict:
-        lat = self.latencies() * 1e3
-        if not lat.size:
+        """Milliseconds row. ``n``/``mean_ms``/``max_ms`` are exact over
+        all packets seen; percentiles are reservoir-approximate once
+        bounded mode has evicted (n > max_samples)."""
+        if not self._n_seen:
             return {"n": 0, "p50_ms": None, "p95_ms": None, "p99_ms": None,
                     "mean_ms": None, "max_ms": None}
+        lat = self.latencies() * 1e3
         p50, p95, p99 = np.percentile(lat, (50, 95, 99))
-        return {"n": int(lat.size), "p50_ms": float(p50),
+        return {"n": self._n_seen, "p50_ms": float(p50),
                 "p95_ms": float(p95), "p99_ms": float(p99),
-                "mean_ms": float(lat.mean()), "max_ms": float(lat.max())}
+                "mean_ms": self._sum / self._n_seen * 1e3,
+                "max_ms": self._max * 1e3}

@@ -1,0 +1,144 @@
+"""Per-stage timing for the serving pipeline, with sampled device sync.
+
+JAX serving is asynchronous: ``step_chunk`` *enqueues* a megastep and
+returns, so naive host timers around it measure dispatch latency, not
+device work. The honest decomposition this module provides:
+
+* ``StageTimer.stage(name)`` — wall-time a pipeline stage (ring cut,
+  host pack, H2D transfer, megastep dispatch, backend flush,
+  back-patch). Durations accumulate per stage with a bounded sample
+  ring for percentiles; thread-safe enough for the prefetch thread
+  (list/deque appends are atomic under the GIL).
+
+* **sampled synchronization** — every ``sync_every``-th chunk (the
+  knob; 0 = never, the default) the serving loop blocks until that
+  chunk's predictions are device-complete inside a ``*_synced`` stage,
+  so the sampled duration covers enqueue + device execution. Sampling
+  bounds the pipelining cost: a sync drains the dispatch queue, which
+  is exactly why it is off by default and why N trades fidelity against
+  throughput. Sync changes *when* the host waits, never a value — the
+  bit-identity oracle covers it.
+
+* ``annotation(name)`` — ``jax.profiler.TraceAnnotation`` context for
+  the megastep when a profiler trace is being captured (shows the
+  serving loop's phases in TensorBoard/Perfetto); a null context when
+  disabled so the default path stays allocation-free.
+
+Stage vocabulary used by the serving tiers (DESIGN.md §14): ``ring_cut``
+(pull source + admit + window-granular pack), ``h2d`` (HostCut ->
+device PacketChunk transfer; queue wait when the prefetch thread owns
+the transfer), ``megastep`` (step dispatch), ``megastep_synced``
+(sampled: dispatch + device completion), ``backend_flush`` (host
+backend call on the two-phase path), ``backpatch`` (jitted back-patch
+dispatch). The register scan and fused classify live *inside* the
+megastep's single dispatch — they are separated with ``jax.named_scope``
+metadata in the jitted graphs (zero runtime cost) and show up in
+profiler traces, not host timers.
+"""
+
+from __future__ import annotations
+
+import collections
+import contextlib
+import time
+from typing import Callable, Optional
+
+import numpy as np
+
+STAGES = ("ring_cut", "h2d", "megastep", "megastep_synced",
+          "backend_flush", "backpatch")
+
+
+class StageTimer:
+    """Accumulate wall durations per named stage (bounded memory)."""
+
+    def __init__(self, *, clock: Callable[[], float] = time.perf_counter,
+                 max_samples: int = 4096):
+        self._clock = clock
+        self._max = max_samples
+        self._acc: dict = {}     # name -> [n, total_s, max_s, deque]
+
+    @contextlib.contextmanager
+    def stage(self, name: str):
+        t0 = self._clock()
+        try:
+            yield
+        finally:
+            self.record(name, self._clock() - t0)
+
+    def record(self, name: str, seconds: float) -> None:
+        acc = self._acc.get(name)
+        if acc is None:
+            acc = self._acc[name] = [0, 0.0, 0.0,
+                                     collections.deque(maxlen=self._max)]
+        acc[0] += 1
+        acc[1] += seconds
+        acc[2] = max(acc[2], seconds)
+        acc[3].append(seconds)
+
+    @property
+    def stages(self) -> tuple:
+        return tuple(self._acc)
+
+    def count(self, name: str) -> int:
+        acc = self._acc.get(name)
+        return acc[0] if acc else 0
+
+    def total(self, name: str) -> float:
+        acc = self._acc.get(name)
+        return acc[1] if acc else 0.0
+
+    def summary(self) -> dict:
+        """stage -> {n, total_s, mean_ms, p50_ms, p95_ms, max_ms}."""
+        out = {}
+        for name, (n, total, mx, samples) in sorted(self._acc.items()):
+            s = np.fromiter(samples, np.float64) * 1e3
+            p50, p95 = (np.percentile(s, (50, 95)) if s.size
+                        else (float("nan"), float("nan")))
+            out[name] = {"n": n, "total_s": total,
+                         "mean_ms": total / n * 1e3 if n else None,
+                         "p50_ms": float(p50) if s.size else None,
+                         "p95_ms": float(p95) if s.size else None,
+                         "max_ms": mx * 1e3}
+        return out
+
+    def reset(self) -> None:
+        self._acc.clear()
+
+
+class SampledSync:
+    """Every-N counter deciding which chunks get a blocking device sync.
+
+    ``due()`` advances the counter and returns True on the N-th, 2N-th,
+    ... call; ``every=0`` (default) never syncs — the zero-sync serving
+    loop is preserved exactly.
+    """
+
+    def __init__(self, every: int = 0):
+        if every < 0:
+            raise ValueError(f"sync_every must be >= 0, got {every}")
+        self.every = every
+        self._i = 0
+
+    def due(self) -> bool:
+        if not self.every:
+            return False
+        self._i += 1
+        if self._i >= self.every:
+            self._i = 0
+            return True
+        return False
+
+
+def annotation(name: str, enabled: bool = True):
+    """``jax.profiler.TraceAnnotation`` context when enabled (and the
+    profiler is importable), else a null context. Annotations are only
+    visible inside a captured profiler trace; outside one they cost a
+    TraceMe no-op."""
+    if not enabled:
+        return contextlib.nullcontext()
+    try:
+        import jax.profiler
+        return jax.profiler.TraceAnnotation(name)
+    except Exception:            # pragma: no cover - profiler unavailable
+        return contextlib.nullcontext()

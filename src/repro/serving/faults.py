@@ -128,16 +128,29 @@ class GuardedBackend:
     attempt* are treated as faults.
 
     ``sleep`` is injectable so tests can assert the backoff schedule
-    without real waiting.
+    without real waiting. ``events`` takes an ``EventBus``
+    (repro.obs.events): when set, the guard narrates its lifecycle —
+    ``backend_attempt`` / ``backend_timeout`` / ``backend_error`` /
+    ``backend_retry`` per attempt, ``flush_ok`` / ``flush_failed`` /
+    ``flush_rejected`` per flush, and ``breaker_open`` /
+    ``breaker_half_open`` / ``breaker_close`` on state transitions —
+    the exact sequence tests/test_obs.py pins.
     """
 
     def __init__(self, backend_fn: Callable, policy: FaultPolicy, *,
-                 sleep: Callable[[float], None] = time.sleep):
+                 sleep: Callable[[float], None] = time.sleep,
+                 events=None):
         self.backend_fn = backend_fn
         self.policy = policy
         self._sleep = sleep
         self._executor = None
+        self._events = None        # init-time reset() emits nothing
         self.reset()
+        self._events = events
+
+    def _emit(self, kind: str, **fields) -> None:
+        if self._events is not None:
+            self._events.emit(kind, **fields)
 
     def reset(self):
         """Fresh telemetry and a CLOSED breaker (a new stream epoch —
@@ -147,12 +160,15 @@ class GuardedBackend:
         self.state = CLOSED
         self.consecutive_failures = 0
         self._cooldown_left = 0
+        self._emit("guard_reset")
 
     # -- timeout plumbing ---------------------------------------------------
 
     def _attempt(self, rows):
         """One backend attempt under the per-attempt timeout."""
         self.stats.attempts += 1
+        self._emit("backend_attempt", attempt=self.stats.attempts,
+                   state=self.state)
         if self.policy.timeout_s is None:
             return self.backend_fn(rows)
         if self._executor is None:
@@ -176,6 +192,8 @@ class GuardedBackend:
     def _record_failure(self):
         self.stats.flushes_failed += 1
         self.consecutive_failures += 1
+        self._emit("flush_failed",
+                   consecutive_failures=self.consecutive_failures)
         p = self.policy
         if not p.breaker_threshold:
             return
@@ -185,13 +203,16 @@ class GuardedBackend:
             self.state = OPEN
             self._cooldown_left = p.breaker_cooldown
             self.stats.breaker_opens += 1
+            self._emit("breaker_open", cooldown=p.breaker_cooldown)
 
     def _record_success(self):
         self.stats.flushes_ok += 1
         self.consecutive_failures = 0
+        self._emit("flush_ok")
         if self.state != CLOSED:
             self.state = CLOSED
             self.stats.breaker_closes += 1
+            self._emit("breaker_close")
 
     # -- the guarded flush --------------------------------------------------
 
@@ -202,16 +223,23 @@ class GuardedBackend:
                 self._cooldown_left -= 1
                 self.stats.rejected += 1
                 self.stats.flushes_failed += 1
+                self._emit("flush_rejected",
+                           cooldown_left=self._cooldown_left)
                 return None
             self.state = HALF_OPEN          # cooldown over: one probe
+            self._emit("breaker_half_open")
         attempts = 1 if self.state == HALF_OPEN else 1 + p.max_retries
         for i in range(attempts):
             if i:
                 self.stats.retries += 1
+                self._emit("backend_retry", retry=i)
                 self._sleep(p.backoff_base_s * p.backoff_factor ** (i - 1))
             try:
                 out = self._attempt(rows)
-            except Exception:
+            except Exception as e:
+                kind = ("backend_timeout" if isinstance(e, BackendTimeout)
+                        else "backend_error")
+                self._emit(kind, error=f"{type(e).__name__}: {e}")
                 continue
             self._record_success()
             return np.asarray(out)

@@ -94,7 +94,7 @@ class ShardedStreamingServer(StreamingHybridServer):
                  mesh: Optional[Mesh] = None, n_shards: Optional[int] = None,
                  use_pallas: bool = False, autotune: bool = False,
                  tiles: Optional[TileConfig] = None,
-                 fuse: Optional[bool] = None):
+                 fuse: Optional[bool] = None, obs=None):
         # mesh before super().__init__: the parent allocates the register
         # file through the _make_state hook, which needs it
         self.mesh = mesh if mesh is not None else flow_shard_mesh(n_shards)
@@ -127,7 +127,7 @@ class ShardedStreamingServer(StreamingHybridServer):
                          saturate=saturate, evict_policy=evict_policy,
                          lru_occupancy=lru_occupancy,
                          fault_policy=fault_policy, use_pallas=use_pallas,
-                         autotune=autotune, tiles=tiles, fuse=fuse)
+                         autotune=autotune, tiles=tiles, fuse=fuse, obs=obs)
 
         def _shard_body(regs, epoch, art, w: PacketWindow, threshold, *,
                         merge_buf):
@@ -154,33 +154,33 @@ class ShardedStreamingServer(StreamingHybridServer):
                       jax.lax.psum(n_ov, "shard"))
             return (jax.tree.map(lambda a: a[None], sq),
                     jnp.minimum(epoch, e),
-                    sw_pred, fwd, buf, idx, valid, counts)
+                    sw_pred, fwd, buf, idx, valid, conf, counts)
 
         state_specs = (P("shard", None), P("shard"), P(), P(), P())
         shard_half = shard_map(
             functools.partial(_shard_body, merge_buf=True), mesh=self.mesh,
             in_specs=state_specs,
             out_specs=(P("shard", None), P("shard"),
-                       P(), P(), P(), P(), P(), P()))
+                       P(), P(), P(), P(), P(), P(), P()))
         defer_half = shard_map(
             functools.partial(_shard_body, merge_buf=False), mesh=self.mesh,
             in_specs=state_specs,
             out_specs=(P("shard", None), P("shard"),
-                       P(), P(), P("shard", None, None), P(), P(), P()))
+                       P(), P(), P("shard", None, None), P(), P(), P(), P()))
 
         def _switch_half(art, state: ShardedFlowTable, w, threshold, *,
                          half=shard_half):
-            (regs, epoch, sw_pred, fwd, buf, idx, valid,
+            (regs, epoch, sw_pred, fwd, buf, idx, valid, conf,
              counts) = half(state.regs, state.epoch, art, w, threshold)
             return (ShardedFlowTable(regs=regs, epoch=epoch),
-                    sw_pred, fwd, buf, idx, valid, counts)
+                    sw_pred, fwd, buf, idx, valid, conf, counts)
 
         def stream_step(art, state, stats, w: PacketWindow, threshold):
-            state, sw_pred, fwd, buf, idx, valid, counts = _switch_half(
-                art, state, w, threshold)
+            (state, sw_pred, fwd, buf, idx, valid, conf,
+             counts) = _switch_half(art, state, w, threshold)
             be_pred = jnp.asarray(backend_fn(buf))
             stats, pred, frac, rows = accumulate_stream_stats(
-                stats, w, sw_pred, be_pred, idx, valid, fwd, *counts)
+                stats, w, sw_pred, be_pred, idx, valid, fwd, conf, *counts)
             return state, stats, pred, frac, rows
 
         self._stream_step = jax.jit(stream_step, donate_argnums=(1, 2))
@@ -198,11 +198,12 @@ class ShardedStreamingServer(StreamingHybridServer):
             dispatch buffer stays per-shard partial ((n_shards, capacity,
             F), the rows each shard owns, zeros elsewhere) — no
             per-window psum."""
-            state, sw_pred, fwd, buf, idx, valid, counts = _switch_half(
-                art, state, w, threshold, half=defer_half)
+            (state, sw_pred, fwd, buf, idx, valid, conf,
+             counts) = _switch_half(art, state, w, threshold,
+                                    half=defer_half)
             stats, dd, pending, pred, frac, rows = defer_tail(
                 stats, dd, pending, w, sw_pred, fwd, buf, idx, valid,
-                counts, pos)
+                conf, counts, pos)
             return state, stats, dd, pending, pred, frac, rows
 
         self._defer_step = jax.jit(defer_step, donate_argnums=(1, 2, 3, 4))

@@ -66,6 +66,7 @@ from repro.netsim.stream import (EVICT_POLICIES, FLOW_FEATURES,
                                  FlowTableState, PacketChunk, PacketWindow,
                                  chunk_update_readout, flow_table_readout,
                                  init_flow_table, window_update_readout)
+from repro.obs import Observability
 from repro.serving.faults import FaultPolicy, FaultStats, GuardedBackend
 from repro.serving.hybrid_serving import HybridServer, HybridStats
 
@@ -94,13 +95,17 @@ class StreamStats:
                               #      flush_every == 1 and nothing degrades)
     evicted: jax.Array        # i32: buckets recycled by the aging sweep
     overflow: jax.Array       # i32: register slots newly saturated at 2^24
+    conf_sum: jax.Array       # f32: switch confidence summed over valid
+                              #      lanes — mean_conf = conf_sum/packets
+                              #      is the drift monitors' confidence-
+                              #      collapse signal (ROADMAP item 1)
 
     @classmethod
     def zero(cls) -> "StreamStats":
         z = lambda: jnp.zeros((), jnp.int32)
         return cls(windows=z(), packets=z(), handled=z(), backend_rows=z(),
                    deferred=z(), degraded=z(), flushes=z(), evicted=z(),
-                   overflow=z())
+                   overflow=z(), conf_sum=jnp.zeros((), jnp.float32))
 
     @property
     def n_windows(self) -> int:
@@ -163,6 +168,33 @@ class StreamStats:
         more buckets) — the guard makes that visible, not silent."""
         return int(self.overflow)
 
+    @property
+    def total_conf(self) -> float:
+        """Switch confidence summed over all valid packets."""
+        return float(self.conf_sum)
+
+    @property
+    def mean_conf(self) -> float:
+        """Mean switch confidence per valid packet — the signal whose
+        windowed drop is the confidence-collapse drift detector."""
+        n = int(self.packets)
+        return float(self.conf_sum) / n if n else 0.0
+
+    def as_dict(self) -> dict:
+        """Host-side snapshot (syncs every counter) — the same plain-dict
+        contract as ``FaultStats.as_dict``/``IngestStats.as_dict``, so
+        the obs metrics registry reports all tiers uniformly. Counter
+        keys are additive (deltas between two snapshots are meaningful);
+        the two trailing ratios are derived, not additive."""
+        return {"windows": self.n_windows, "packets": self.n_packets,
+                "handled": self.n_handled,
+                "backend_rows": self.total_backend_rows,
+                "deferred": self.n_deferred, "degraded": self.n_degraded,
+                "flushes": self.n_flushes, "evicted": self.n_evicted,
+                "overflow": self.n_overflow, "conf_sum": self.total_conf,
+                "fraction_handled": self.fraction_handled,
+                "mean_conf": self.mean_conf}
+
     def check(self) -> "StreamStats":
         """Assert the accounting invariant: every valid packet is answered
         exactly once — confidently at the switch (``handled``), by the
@@ -198,14 +230,16 @@ class StreamStats:
 
 
 def accumulate_stream_stats(stats: StreamStats, w: PacketWindow, sw_pred,
-                            be_pred, idx, valid, fwd, n_evicted, n_overflow):
+                            be_pred, idx, valid, fwd, conf, n_evicted,
+                            n_overflow):
     """Shared jit-traceable epilogue: combine backend answers, mask pad
     lanes, fold this window into the running StreamStats. Used by both the
     single-device and the sharded step (the sharded one passes psummed
     inputs — already replicated, so the fold is identical per device).
     The backend ran for this window, so ``flushes`` advances by one;
     forwarded rows past capacity land in ``deferred`` instead of silently
-    keeping the switch answer uncounted.
+    keeping the switch answer uncounted. ``conf`` is the switch-tier
+    confidence vector — valid lanes fold into ``conf_sum``.
     Returns (stats, pred, frac_handled, backend_rows)."""
     pred = combine(sw_pred, be_pred, idx, valid)
     pred = jnp.where(w.valid, pred, -1)                  # pad lanes
@@ -223,12 +257,18 @@ def accumulate_stream_stats(stats: StreamStats, w: PacketWindow, sw_pred,
         deferred=stats.deferred + (n_fwd - rows),
         flushes=stats.flushes + 1,
         evicted=stats.evicted + n_evicted,
-        overflow=stats.overflow + n_overflow)
+        overflow=stats.overflow + n_overflow,
+        conf_sum=stats.conf_sum + _fold_conf(conf, w.valid))
     return stats, pred, frac, rows
 
 
+def _fold_conf(conf, valid):
+    """Valid-lane confidence sum (f32 scalar) for the conf_sum fold."""
+    return jnp.sum(jnp.where(valid, conf, 0.0).astype(jnp.float32))
+
+
 def degrade_window_stats(stats: StreamStats, w: PacketWindow, sw_pred, fwd,
-                         valid, n_evicted, n_overflow):
+                         valid, conf, n_evicted, n_overflow):
     """Degraded epilogue for the per-window (flush_every=1) two-phase
     path: this window's backend flush ultimately failed under the fault
     policy, so every dispatched row keeps its provisional switch-tier
@@ -249,12 +289,13 @@ def degrade_window_stats(stats: StreamStats, w: PacketWindow, sw_pred, fwd,
         deferred=stats.deferred + (n_fwd - rows),
         degraded=stats.degraded + rows,
         evicted=stats.evicted + n_evicted,
-        overflow=stats.overflow + n_overflow)
+        overflow=stats.overflow + n_overflow,
+        conf_sum=stats.conf_sum + _fold_conf(conf, w.valid))
     return stats, pred, frac, rows
 
 
 def accumulate_deferred_stats(stats: StreamStats, w: PacketWindow, fwd,
-                              valid, n_evicted, n_overflow):
+                              valid, conf, n_evicted, n_overflow):
     """Per-window stats fold for the deferred-dispatch path: everything
     *except* the backend accounting, which folds at flush time
     (``fold_flush_stats``) when the backend actually runs.
@@ -271,7 +312,8 @@ def accumulate_deferred_stats(stats: StreamStats, w: PacketWindow, fwd,
         handled=stats.handled + n_handled,
         deferred=stats.deferred + (n_fwd - rows),
         evicted=stats.evicted + n_evicted,
-        overflow=stats.overflow + n_overflow)
+        overflow=stats.overflow + n_overflow,
+        conf_sum=stats.conf_sum + _fold_conf(conf, w.valid))
     return stats, frac, rows
 
 
@@ -306,7 +348,7 @@ def degrade_chunk_stats(stats: StreamStats,
 
 
 def defer_tail(stats, dd, pending, w: PacketWindow, sw_pred, fwd, buf, idx,
-               valid, counts, pos):
+               valid, conf, counts, pos):
     """Shared tail of the deferred-path window step (single-device and
     sharded): mask pad lanes, append the dispatched rows to the deferral
     buffer at cycle slot ``pos``, record the provisional predictions in
@@ -316,7 +358,7 @@ def defer_tail(stats, dd, pending, w: PacketWindow, sw_pred, fwd, buf, idx,
     dd = defer_window(dd, buf, idx, valid, pos)
     pending = pending.at[pos].set(pred)
     stats, frac, rows = accumulate_deferred_stats(stats, w, fwd, valid,
-                                                  *counts)
+                                                  conf, *counts)
     return stats, dd, pending, pred, frac, rows
 
 
@@ -330,19 +372,22 @@ def chunk_classify_tail(art, stats, chunk, xs, n_ev, n_ov, threshold,
     K per-window passes because every op is row-independent.
     Returns (stats, dd, pending, frac, rows)."""
     k, w_lanes, nf = xs.shape
-    sw_pred, conf = fused_classify(art, xs.reshape(k * w_lanes, nf),
-                                   use_pallas=use_pallas, tiles=tiles)
+    with jax.named_scope("fused_classify"):
+        sw_pred, conf = fused_classify(art, xs.reshape(k * w_lanes, nf),
+                                       use_pallas=use_pallas, tiles=tiles)
     sw_pred = sw_pred.reshape(k, w_lanes).astype(jnp.int32)
-    fwd = (conf.reshape(k, w_lanes) < threshold) & chunk.valid
+    conf = conf.reshape(k, w_lanes)
+    fwd = (conf < threshold) & chunk.valid
     dd = chunk_dispatch(xs, fwd, capacity)
     stats, frac, rows = accumulate_chunk_stats(stats, chunk, fwd, dd,
-                                               n_ev, n_ov)
+                                               conf, n_ev, n_ov)
     pending = jnp.where(chunk.valid, sw_pred, -1)        # pad/dead lanes
     return stats, dd, pending, frac, rows
 
 
 def accumulate_chunk_stats(stats: StreamStats, chunk, fwd,
-                           dd: DeferredDispatch, n_evicted, n_overflow):
+                           dd: DeferredDispatch, conf, n_evicted,
+                           n_overflow):
     """Whole-chunk stats fold: the per-window telemetry identities summed
     over the (K, W) chunk in one pass (dead pad windows contribute no
     valid lanes, and are masked out of the window count), plus the
@@ -363,7 +408,8 @@ def accumulate_chunk_stats(stats: StreamStats, chunk, fwd,
         deferred=stats.deferred + (n_fwd - rows),
         flushes=stats.flushes + 1,
         evicted=stats.evicted + n_evicted,
-        overflow=stats.overflow + n_overflow)
+        overflow=stats.overflow + n_overflow,
+        conf_sum=stats.conf_sum + _fold_conf(conf, chunk.valid))
     return stats, frac, rows
 
 
@@ -404,7 +450,7 @@ def autotune_chunk_windows(make_server, *, window: int, n_buckets: int,
                            default: int = DEFAULT_CHUNK_WINDOWS,
                            candidate_filter=None, reps: int = 3,
                            seed: int = 0, cache_key=None, time_fn=None,
-                           verbose: bool = False) -> int:
+                           verbose: bool = False, events=None) -> int:
     """Measured K sweep at server init: pick ``chunk_windows``.
 
     ``make_server(k)`` builds a throwaway server compiled for chunk size
@@ -430,6 +476,9 @@ def autotune_chunk_windows(make_server, *, window: int, n_buckets: int,
     if cache_key is not None:
         hit = _CHUNK_TUNE_CACHE.get(cache_key)
         if hit is not None:
+            if events is not None:
+                events.emit("autotune", knob="chunk_windows", chosen=hit,
+                            cached=True)
             return hit
     cands = [k for k in candidates
              if candidate_filter is None or candidate_filter(k)]
@@ -455,6 +504,9 @@ def autotune_chunk_windows(make_server, *, window: int, n_buckets: int,
                          label="chunk-autotune")
     if cache_key is not None:
         _CHUNK_TUNE_CACHE[cache_key] = best
+    if events is not None:
+        events.emit("autotune", knob="chunk_windows", chosen=best,
+                    default=default, candidates=list(cands), cached=False)
     return best
 
 
@@ -477,7 +529,8 @@ class StreamingHybridServer(HybridServer):
                  fault_policy: Optional[FaultPolicy] = None,
                  use_pallas: bool = False, autotune: bool = False,
                  tiles: Optional[TileConfig] = None,
-                 fuse: Optional[bool] = None):
+                 fuse: Optional[bool] = None,
+                 obs: Optional[Observability] = None):
         """evict_age: recycle a flow bucket once it has been idle for this
         many (rebased) seconds — the aging sweep runs inside every step
         (``netsim.stream.lifecycle_sweep``) with its cutoff clamped to the
@@ -557,7 +610,20 @@ class StreamingHybridServer(HybridServer):
         degrades: dispatched rows keep their provisional switch-tier
         predictions, counted in ``StreamStats.degraded``; with zero
         faults predictions are bit-identical to an unguarded server.
+
+        obs: attach a ``repro.obs.Observability`` — lifecycle events
+        (cuts, chunks, flushes, breaker transitions, autotune, drift
+        alarms), per-stage timings, metric rollups and drift monitors
+        over the serving loop (DESIGN.md §14). None (the default) takes
+        no observability branch anywhere and is bit-identical to pre-obs
+        serving; with an instance attached, all hooks stay host-side and
+        predictions remain bit-identical (the BENCH_obs.json oracle) —
+        only ``sync_every > 0`` adds sampled blocking syncs, and only
+        the per-``rollup_every`` boundary reads device stats.
         """
+        self._obs = obs
+        if obs is not None:
+            obs.bind(self)
         if flush_every < 1:
             raise ValueError(f"flush_every must be >= 1, got {flush_every}")
         if chunk_windows == "auto":
@@ -628,7 +694,9 @@ class StreamingHybridServer(HybridServer):
         self.evict_policy = evict_policy
         self.lru_occupancy = lru_occupancy
         self.fault_policy = fault_policy
-        self._guard = (GuardedBackend(backend_fn, fault_policy)
+        self._guard = (GuardedBackend(backend_fn, fault_policy,
+                                      events=(obs.events if obs is not None
+                                              else None))
                        if fault_policy is not None else None)
         self._state = self._make_state()
         self._stats = StreamStats.zero()
@@ -644,30 +712,33 @@ class StreamingHybridServer(HybridServer):
             2^24 clamp and touched-row gather fuse into one VMEM pass
             (``kernels.stream_update``), skipping the HBM round-trip
             between them."""
-            state, x, n_ev, n_ov = window_update_readout(
-                state, w, evict_age=evict_age, saturate=saturate,
-                evict_policy=evict_policy, lru_occupancy=lru_occupancy,
-                use_pallas=use_pallas)
-            sw_pred, conf = fused_classify(art, x, use_pallas=use_pallas,
-                                           tiles=self.tiles)
+            with jax.named_scope("register_update"):
+                state, x, n_ev, n_ov = window_update_readout(
+                    state, w, evict_age=evict_age, saturate=saturate,
+                    evict_policy=evict_policy, lru_occupancy=lru_occupancy,
+                    use_pallas=use_pallas)
+            with jax.named_scope("fused_classify"):
+                sw_pred, conf = fused_classify(art, x, use_pallas=use_pallas,
+                                               tiles=self.tiles)
             fwd = (conf < threshold) & w.valid
             buf, idx, valid = dispatch(x, fwd, capacity)
-            return state, x, sw_pred, fwd, buf, idx, valid, (n_ev, n_ov)
+            return (state, x, sw_pred, fwd, buf, idx, valid, conf,
+                    (n_ev, n_ov))
 
         def stream_step(art, state, stats, w: PacketWindow, threshold):
-            state, x, sw_pred, fwd, buf, idx, valid, counts = _switch_half(
-                art, state, w, threshold)
+            (state, x, sw_pred, fwd, buf, idx, valid, conf,
+             counts) = _switch_half(art, state, w, threshold)
             be_pred = jnp.asarray(backend_fn(buf))
             stats, pred, frac, rows = accumulate_stream_stats(
-                stats, w, sw_pred, be_pred, idx, valid, fwd, *counts)
+                stats, w, sw_pred, be_pred, idx, valid, fwd, conf, *counts)
             return state, stats, pred, frac, rows
 
         self._stream_step = jax.jit(stream_step, donate_argnums=(1, 2))
 
         def stream_switch(art, state, w: PacketWindow, threshold):
-            state, x, sw_pred, fwd, buf, idx, valid, counts = _switch_half(
-                art, state, w, threshold)
-            return state, sw_pred, fwd, buf, idx, valid, counts
+            (state, x, sw_pred, fwd, buf, idx, valid, conf,
+             counts) = _switch_half(art, state, w, threshold)
+            return state, sw_pred, fwd, buf, idx, valid, conf, counts
 
         self._stream_switch = jax.jit(stream_switch, donate_argnums=(1,))
 
@@ -686,11 +757,11 @@ class StreamingHybridServer(HybridServer):
             the dispatched rows go to the deferral buffer instead of the
             backend, and the provisional (switch) predictions land in the
             pending set at cycle slot ``pos`` (traced: no recompiles)."""
-            state, x, sw_pred, fwd, buf, idx, valid, counts = _switch_half(
-                art, state, w, threshold)
+            (state, x, sw_pred, fwd, buf, idx, valid, conf,
+             counts) = _switch_half(art, state, w, threshold)
             stats, dd, pending, pred, frac, rows = defer_tail(
                 stats, dd, pending, w, sw_pred, fwd, buf, idx, valid,
-                counts, pos)
+                conf, counts, pos)
             return state, stats, dd, pending, pred, frac, rows
 
         self._defer_step = jax.jit(defer_step, donate_argnums=(1, 2, 3, 4))
@@ -742,10 +813,11 @@ class StreamingHybridServer(HybridServer):
             dispatch, the stats fold — instead of K small sequential
             passes; the batched composition is bit-identical because
             every per-row op is row-independent."""
-            state, xs, n_ev, n_ov = chunk_update_readout(
-                state, chunk, evict_age=evict_age, saturate=saturate,
-                evict_policy=evict_policy, lru_occupancy=lru_occupancy,
-                use_pallas=use_pallas)
+            with jax.named_scope("register_scan"):
+                state, xs, n_ev, n_ov = chunk_update_readout(
+                    state, chunk, evict_age=evict_age, saturate=saturate,
+                    evict_policy=evict_policy, lru_occupancy=lru_occupancy,
+                    use_pallas=use_pallas)
             stats, dd, pending, frac, rows = chunk_classify_tail(
                 art, stats, chunk, xs, n_ev, n_ov, threshold, capacity,
                 use_pallas=use_pallas, tiles=self.tiles)
@@ -867,16 +939,25 @@ class StreamingHybridServer(HybridServer):
                 window=window, capacity=capacity, **kw),
             window=window, n_buckets=n_buckets,
             candidate_filter=self._auto_chunk_filter(capacity),
-            cache_key=key)
+            cache_key=key,
+            events=(self._obs.events if self._obs is not None else None))
 
     def _host_backend(self, rows):
         """The two-phase host backend invocation, fault-guarded when a
         policy is set. Returns the backend's predictions, or None when
         the flush ultimately failed and the caller must degrade (keep
-        provisional switch predictions, fold into ``degraded``)."""
-        if self._guard is None:
-            return self.backend_fn(rows)
-        return self._guard(rows)
+        provisional switch predictions, fold into ``degraded``). With an
+        Observability attached the call is timed as the
+        ``backend_flush`` stage."""
+        obs = self._obs
+        if obs is None:
+            if self._guard is None:
+                return self.backend_fn(rows)
+            return self._guard(rows)
+        with obs.stage("backend_flush"):
+            if self._guard is None:
+                return self.backend_fn(rows)
+            return self._guard(rows)
 
     def flow_table(self) -> jax.Array:
         """(n_buckets, 8) feature table from the current registers."""
@@ -932,17 +1013,17 @@ class StreamingHybridServer(HybridServer):
                     self._stream_step(self.artifact, self._state,
                                       self._stats, w, tau)
                 return pred, HybridStats(frac, rows, self.capacity)
-            (self._state, sw_pred, fwd, buf, idx, valid,
+            (self._state, sw_pred, fwd, buf, idx, valid, conf,
              counts) = self._stream_switch(self.artifact, self._state, w,
                                            tau)
             be = self._host_backend(buf)
             if be is None:          # flush failed: degrade to switch-only
                 self._stats, pred, frac, rows = self._degrade_window(
-                    self._stats, w, sw_pred, fwd, valid, *counts)
+                    self._stats, w, sw_pred, fwd, valid, conf, *counts)
                 return pred, HybridStats(frac, rows, self.capacity)
             self._stats, pred, frac, rows = self._stream_epilogue(
                 self._stats, w, sw_pred, jnp.asarray(be), idx, valid, fwd,
-                *counts)
+                conf, *counts)
             return pred, HybridStats(frac, rows, self.capacity)
         # deferred path: no backend here — defer, auto-flush when full
         (self._state, self._stats, self._dd, self._pending, pred, frac,
@@ -951,12 +1032,14 @@ class StreamingHybridServer(HybridServer):
                                   jnp.int32(self._pending_n))
         self._pending_n += 1
         full = self._pending_n >= self.flush_every
+        trigger = "cycle_full"
         if self.flush_occupancy is not None and not full:
             # occupancy-triggered early flush: reading the deferred-row
             # count costs one host sync — the knob is opt-in (see __init__)
             self._occ_rows += int(rows)
-            full = (self._occ_rows
-                    >= self.flush_occupancy * self._dd.slots)
+            if self._occ_rows >= self.flush_occupancy * self._dd.slots:
+                full = True
+                trigger = "occupancy"
         if self.flush_deadline is not None:
             # deadline-triggered early flush: age the oldest pending
             # window (earliest ts latched at cycle start) against this
@@ -968,10 +1051,11 @@ class StreamingHybridServer(HybridServer):
                 if (not full and float(ts.max()) - self._cycle_born
                         >= self.flush_deadline):
                     full = True
+                    trigger = "deadline"
         if full:
             # queued, not overwritten: a manual caller who steps through
             # several cycles without consuming loses nothing
-            self._flush_queue.append(self.flush())
+            self._flush_queue.append(self.flush(trigger=trigger))
         return pred, HybridStats(frac, rows, self.capacity)
 
     # -- deferred-dispatch flushing -----------------------------------------
@@ -983,7 +1067,7 @@ class StreamingHybridServer(HybridServer):
         buf = np.asarray((dd or self._dd).buf)
         return buf.sum(axis=0, dtype=np.float32) if buf.ndim == 3 else buf
 
-    def flush(self):
+    def flush(self, *, trigger: str = "manual"):
         """Run the backend on the pending deferral cycle and back-patch.
 
         -> (n_windows_flushed, patched (flush_every, W) predictions) with
@@ -992,11 +1076,17 @@ class StreamingHybridServer(HybridServer):
         ``serve_trace`` calls this at trace end — the guaranteed flush —
         and after every auto-flush; drive it yourself when stepping
         manually. The deferral buffer and pending set are consumed
-        (donated) and replaced by fresh zeroed carries.
+        (donated) and replaced by fresh zeroed carries. ``trigger``
+        labels the lifecycle event when an Observability is attached
+        ("cycle_full" / "occupancy" / "deadline" / "end_of_stream" /
+        "manual") — it never changes behavior.
         """
         if self.flush_every == 1 or self._pending_n == 0:
             return None
         n = self._pending_n
+        obs = self._obs
+        if obs is not None:
+            obs.emit("flush", windows=n, trigger=trigger)
         if self._fused_ok is None:
             try:
                 self._stats, self._dd, patched, self._pending = \
@@ -1005,6 +1095,8 @@ class StreamingHybridServer(HybridServer):
                 self._pending_n = 0
                 self._occ_rows = 0
                 self._cycle_born = None
+                if obs is not None:
+                    obs.emit("backpatch", windows=n)
                 return n, patched
             except (jax.errors.JAXTypeError, TypeError):
                 # tracing failed before execution: nothing was donated
@@ -1012,16 +1104,28 @@ class StreamingHybridServer(HybridServer):
         if self._fused_ok:
             self._stats, self._dd, patched, self._pending = \
                 self._flush_fused(self._stats, self._dd, self._pending)
+            if obs is not None:
+                obs.emit("backpatch", windows=n)
         else:
             be = self._host_backend(self._flush_rows_host())
             if be is None:      # flush failed: keep provisional answers
                 self._stats, self._dd, patched, self._pending = \
                     self._flush_degraded(self._stats, self._dd,
                                          self._pending)
+                if obs is not None:
+                    obs.emit("degraded", windows=n)
             else:
-                self._stats, self._dd, patched, self._pending = \
-                    self._flush_patch(self._stats, self._dd, self._pending,
-                                      jnp.asarray(be))
+                if obs is not None:
+                    with obs.stage("backpatch"):
+                        (self._stats, self._dd, patched,
+                         self._pending) = self._flush_patch(
+                            self._stats, self._dd, self._pending,
+                            jnp.asarray(be))
+                    obs.emit("backpatch", windows=n)
+                else:
+                    self._stats, self._dd, patched, self._pending = \
+                        self._flush_patch(self._stats, self._dd,
+                                          self._pending, jnp.asarray(be))
         self._pending_n = 0
         self._occ_rows = 0
         self._cycle_born = None
@@ -1080,11 +1184,19 @@ class StreamingHybridServer(HybridServer):
             self._chunk_switch(self.artifact, self._state, self._stats,
                                chunk, tau)
         be = self._host_backend(self._flush_rows_host(dd))
+        obs = self._obs
         if be is None:          # flush failed: provisional set unpatched,
             #                     retract the optimistic in-graph fold
             self._stats = self._degrade_chunk(self._stats, dd)
+            if obs is not None:
+                obs.emit("degraded", windows=chunk.n_windows)
             return pending, HybridStats(frac, rows, self.capacity)
-        patched = self._chunk_patch(pending, jnp.asarray(be), dd)
+        if obs is not None:
+            with obs.stage("backpatch"):
+                patched = self._chunk_patch(pending, jnp.asarray(be), dd)
+            obs.emit("backpatch", windows=chunk.n_windows)
+        else:
+            patched = self._chunk_patch(pending, jnp.asarray(be), dd)
         return patched, HybridStats(frac, rows, self.capacity)
 
     # -- open-ended serving --------------------------------------------------
@@ -1095,6 +1207,7 @@ class StreamingHybridServer(HybridServer):
                      prefetch: Optional[bool] = None,
                      prefetch_depth: int = 2,
                      record_latency: bool = False,
+                     latency_samples: Optional[int] = None,
                      clock: Callable[[], float] = time.monotonic):
         """The primary serving loop: pull packets from an open-ended
         ``source`` through the ingest ring. -> (pred (P,), stats).
@@ -1132,7 +1245,21 @@ class StreamingHybridServer(HybridServer):
         window's packets complete at the flush that back-patches its
         cycle (deferred rows' extra wait is therefore included). The
         required per-cut host sync costs throughput, so the knob is
-        opt-in; off keeps the zero-sync loop.
+        opt-in; off keeps the zero-sync loop. ``latency_samples`` bounds
+        the recorder's memory with a seeded reservoir (exact mean/max,
+        sampled percentiles) — None keeps exact percentiles at unbounded
+        memory, the right default for finite traces; open-ended streams
+        should set it (see ``netsim.ingest.LatencyRecorder``).
+
+        With an ``obs=Observability`` attached at construction, this
+        loop emits lifecycle events (serve_begin/cut/chunk/window/
+        flush/rollup/serve_end), times pipeline stages, closes a metric
+        rollup window every ``rollup_every`` dispatches (the loop's only
+        device-stats read), feeds the drift monitors, and — only when
+        ``sync_every > 0`` — samples a blocking device sync as the
+        ``megastep_synced`` stage. Predictions, flow table, and
+        StreamStats stay bit-identical with obs attached (oracle-gated
+        in tests and benchmarks/obs_bench.py).
 
         Composition with the flush knobs (documented precedence): the
         ingest ``deadline`` acts in the *wall-clock* domain on admitted
@@ -1160,7 +1287,8 @@ class StreamingHybridServer(HybridServer):
                                 capacity=ring_capacity, deadline=deadline,
                                 clock=clock)
         self._ingest = ring.stats
-        rec = LatencyRecorder() if record_latency else None
+        rec = (LatencyRecorder(max_samples=latency_samples)
+               if record_latency else None)
         self._latency = rec
         # windows pending from manual step() calls belong to a different
         # prediction stream: flush them, drop their patches
@@ -1168,24 +1296,81 @@ class StreamingHybridServer(HybridServer):
         self._flush_queue = []
         preds = []
         cuts = cut_stream(ring, source)
+        obs = self._obs
+        if obs is not None:
+            obs.emit("serve_begin", tier=type(self).__name__,
+                     window=self.window,
+                     chunk_windows=self.chunk_windows or 0,
+                     flush_every=self.flush_every, prefetch=bool(prefetch))
+            obs.reset_ticks()
+            # the rollup baseline: ONE stats read before the loop, so
+            # boundary deltas are exact even on a warm server
+            obs_prev = self._stats.as_dict()
+            obs_b0 = 0                # preds index of the last boundary
 
         def _done(x) -> float:
             jax.block_until_ready(x)
             return clock()
 
         if chunked:
-            pairs = ((c, c.to_chunk()) for c in cuts)
+            def make_pairs():
+                # generator (not genexpr) so the obs stage timers can
+                # bracket the cut pull and the H2D map separately; with
+                # prefetch on, both run on the prefetch thread and the
+                # timings measure producer-side durations
+                it = iter(cuts)
+                while True:
+                    try:
+                        if obs is not None:
+                            with obs.stage("ring_cut"):
+                                c = next(it)
+                        else:
+                            c = next(it)
+                    except StopIteration:
+                        return
+                    if obs is not None:
+                        with obs.stage("h2d"):
+                            ch = c.to_chunk()
+                    else:
+                        ch = c.to_chunk()
+                    yield c, ch
+
+            pairs = make_pairs()
             if prefetch:
                 pairs = prefetch_iter(pairs, depth=prefetch_depth)
             for cut, chunk in pairs:
-                pred, _ = self.step_chunk(chunk)
+                if obs is not None:
+                    obs.emit("cut", cut_kind=cut.kind, packets=cut.n,
+                             windows=cut.n_windows)
+                    with obs.annotate("megastep"), obs.stage("megastep"):
+                        pred, _ = self.step_chunk(chunk)
+                else:
+                    pred, _ = self.step_chunk(chunk)
                 flat = pred.reshape(-1)[:cut.n]   # live rows lead; pad/-1
                 #                                   lanes only trail them
                 if rec is not None:
                     rec.record(cut.admit_time, _done(flat))
                 preds.append(flat)
+                if obs is not None:
+                    obs.emit("chunk", windows=cut.n_windows, packets=cut.n)
+                    if obs.sync_due():
+                        with obs.stage("megastep_synced"):
+                            jax.block_until_ready(flat)
+                    if obs.tick():
+                        obs_prev, obs_b0 = self._obs_rollup(
+                            obs, preds, obs_b0, obs_prev,
+                            n_dispatches=obs.config.rollup_every,
+                            collapse=True)
+            if obs is not None and obs.pending_ticks:
+                obs_prev, obs_b0 = self._obs_rollup(
+                    obs, preds, obs_b0, obs_prev,
+                    n_dispatches=obs.pending_ticks, collapse=True)
             flat = (np.concatenate([np.asarray(p) for p in preds])
                     if preds else np.zeros((0,), np.int32))
+            if obs is not None:
+                obs.emit("serve_end", packets=int(flat.size),
+                         cuts=ring.stats.cuts,
+                         windows=self._stats.n_windows)
             return jnp.asarray(flat), self._stats.check()
 
         # per-window path (incl. deferred dispatch); one window per cut
@@ -1201,8 +1386,15 @@ class StreamingHybridServer(HybridServer):
                     rec.record(at, done)
 
         for cut in cuts:
+            if obs is not None:
+                obs.emit("cut", cut_kind=cut.kind, packets=cut.n,
+                         windows=cut.n_windows)
             for w in cut.to_windows():
-                pred, _ = self.step(w)
+                if obs is not None:
+                    with obs.annotate("window_step"), obs.stage("megastep"):
+                        pred, _ = self.step(w)
+                else:
+                    pred, _ = self.step(w)
                 preds.append(pred)
                 times.append(cut.admit_time)
                 n_live += cut.n
@@ -1211,12 +1403,66 @@ class StreamingHybridServer(HybridServer):
                 fl = self.consume_flush()
                 if fl is not None:
                     _patch(fl)
-        fl = self.flush()             # guaranteed end-of-stream flush
+                if obs is not None:
+                    obs.emit("window", packets=cut.n)
+                    if obs.sync_due():
+                        with obs.stage("megastep_synced"):
+                            jax.block_until_ready(pred)
+                    if obs.tick():
+                        # never collapse: _patch slices preds per window
+                        obs_prev, obs_b0 = self._obs_rollup(
+                            obs, preds, obs_b0, obs_prev,
+                            n_dispatches=obs.config.rollup_every,
+                            collapse=False)
+        fl = self.flush(trigger="end_of_stream")   # guaranteed final flush
         if fl is not None:
             _patch(fl)
+        if obs is not None and obs.pending_ticks:
+            obs_prev, obs_b0 = self._obs_rollup(
+                obs, preds, obs_b0, obs_prev,
+                n_dispatches=obs.pending_ticks, collapse=False)
         flat = (np.concatenate([np.asarray(p) for p in preds])[:n_live]
                 if preds else np.zeros((0,), np.int32))
+        if obs is not None:
+            obs.emit("serve_end", packets=n_live, cuts=ring.stats.cuts,
+                     windows=self._stats.n_windows)
         return jnp.asarray(flat), self._stats.check()
+
+    def _obs_rollup(self, obs, preds, b0, prev, *, n_dispatches, collapse):
+        """Close one observability rollup window at a dispatch boundary.
+
+        The loop's ONE device read per ``rollup_every`` dispatches: a
+        StreamStats snapshot whose delta against the previous boundary
+        is the rollup sample (all additive counters), plus the predicted
+        class counts of the predictions emitted since the last boundary
+        (pad/-1 lanes excluded; on the deferred per-window path these
+        may still be provisional — the class-mix signal tolerates that).
+        ``collapse=True`` (chunked path only) replaces the consumed
+        preds entries with their host concatenation so the end-of-stream
+        concat does no second device->host conversion; the per-window
+        path must keep one entry per window for the flush back-patch.
+        An eviction-sweep delta surfaces as an ``eviction`` event.
+        Returns (snapshot, new_b0) for the next boundary."""
+        cur = self._stats.as_dict()
+        delta = {k: cur[k] - prev[k]
+                 for k in ("windows", "packets", "handled", "backend_rows",
+                           "deferred", "degraded", "flushes", "evicted",
+                           "overflow", "conf_sum")}
+        if len(preds) > b0:
+            seg = np.concatenate([np.asarray(p).reshape(-1)
+                                  for p in preds[b0:]])
+            if collapse:
+                preds[b0:] = [seg]
+        else:
+            seg = np.zeros(0, np.int32)
+        live = seg[seg >= 0]
+        counts = np.bincount(live, minlength=self.artifact.n_classes)
+        if delta["evicted"] > 0:
+            obs.emit("eviction", buckets=int(delta["evicted"]))
+        sample = dict(delta, dispatches=int(n_dispatches),
+                      class_counts=counts.tolist())
+        obs.observe_rollup(sample)
+        return cur, len(preds)
 
     def serve_trace(self, trace, *, t0: Optional[float] = None):
         """Stream a whole PacketTrace. -> (pred (P,), stats).
