@@ -1,0 +1,102 @@
+"""Device resource-fit bench: per-artifact utilization vs device budgets.
+
+``python -m benchmarks.analysis_bench`` maps every served artifact
+family (DT/RF/XGB over the streaming readout layout, plus the anomaly
+use-case trace models) against the declarative ``DeviceProfile`` budgets
+of ``core.resources`` (Tofino-like and NIC-ish) and emits one
+utilization row per (artifact, profile) — the Tables 1-2 analog as a
+*gate* rather than a printout, so resource growth shows up in the
+``BENCH_analysis.json`` trajectory long before an artifact stops
+fitting.
+
+Oracles gating the rows:
+
+* every standard artifact must fit the default (Tofino-like) profile —
+  a mapping change that blows a budget fails here, not at deploy;
+* ``check_fit`` must *reject* the deliberately paper-scale oversized
+  ensemble (the §4 naive-mapping blowup) on every profile;
+* the ``finalize_artifact(..., profile=...)`` deploy guard must raise
+  ``FitError`` for an artifact that exceeds a tight budget and pass one
+  that fits — exercised end to end on the real XGB artifact.
+
+Results go to ``BENCH_analysis.json`` (schema "bench-v1", DESIGN.md §11).
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+from benchmarks.common import print_table, write_bench_json
+from repro.analysis.fit import fit_rows, oversized_report, standard_artifacts
+from repro.core.artifact import finalize_artifact
+from repro.core.resources import (DEFAULT_PROFILE, PROFILES, DeviceProfile,
+                                  FitError, artifact_resources, check_fit)
+
+
+def run(out="BENCH_analysis.json"):
+    t_suite = time.time()
+    rows = fit_rows()
+
+    # oracle 1: every served artifact family fits the default profile
+    for row in rows:
+        if row["profile"] == DEFAULT_PROFILE.name:
+            assert row["fits"], (
+                f"{row['artifact']} no longer fits {row['profile']}: {row}")
+
+    # oracle 2: the paper-scale oversized ensemble is rejected everywhere
+    over = oversized_report()
+    for profile in PROFILES.values():
+        rep = check_fit(over, profile)
+        assert not rep.fits, (
+            f"oversized ensemble fits {profile.name} — budgets are vacuous")
+        rows.append({"artifact": "oversized_rf", **rep.row()})
+
+    # oracle 3: the finalize_artifact deploy guard, end to end on real
+    # artifacts — a tight profile must abort the load, the default must
+    # admit it (strip the cached layout so finalization actually runs)
+    xgb = next(art for name, art in standard_artifacts() if name == "xgb")
+    raw = dataclasses.replace(xgb, ftable_flat=None, dtable_flat=None,
+                              dtable_pad=None)
+    xgb_entries = artifact_resources(xgb).entries
+    tight = DeviceProfile(name="tight_test", stages=12, sram_kib=1024,
+                          tcam_kib=128, max_entries=max(xgb_entries // 2, 1),
+                          max_tables=32)
+    try:
+        finalize_artifact(raw, profile=tight)
+        raise AssertionError("deploy guard admitted an artifact over budget")
+    except FitError as e:
+        guard_msg = str(e)
+    finalize_artifact(raw, profile=DEFAULT_PROFILE)
+    rows.append({"artifact": "xgb", "profile": tight.name, "fits": False,
+                 "guard": "FitError", "detail": guard_msg[:200]})
+
+    cols = ["artifact", "profile", "fits", "util_entries", "util_sram_kib",
+            "util_tcam_kib", "util_tables", "util_stages"]
+    print_table("Device fit — utilization per artifact x profile", cols,
+                [[r.get(c, "") for c in cols] for r in rows])
+
+    benches = [{"name": "device_fit",
+                "paper_ref": "Tables 1-2 / §4 mapping constraints",
+                "ok": True, "rows": rows,
+                "wall_s": round(time.time() - t_suite, 3)}]
+    if out:
+        write_bench_json(out, "analysis", benches,
+                         config={"profiles": sorted(PROFILES),
+                                 "default_profile": DEFAULT_PROFILE.name})
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="accepted for suite-runner symmetry (the bench "
+                         "is already CI-sized)")
+    ap.add_argument("--out", default="BENCH_analysis.json")
+    args = ap.parse_args(argv)
+    run(out=args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -9,8 +9,9 @@ per benchmark with its wall time and whatever its run() returned, so the
 perf trajectory of the repo is tracked run over run. The other bench-v1
 emitters — ``kernel_microbench`` (BENCH_kernels.json), ``stream_bench``
 (BENCH_stream.json), ``shard_stream_bench`` (BENCH_shard.json),
-``batch_bench`` (BENCH_batch.json) and ``scenario_bench``
-(BENCH_scenarios.json) — are separate entry points with
+``batch_bench`` (BENCH_batch.json), ``scenario_bench``
+(BENCH_scenarios.json) and ``analysis_bench`` (BENCH_analysis.json,
+the device resource-fit trajectory) — are separate entry points with
 their own gating oracles; ``--all-suites`` runs them here too, so one
 command refreshes the whole trajectory. A failing sub-suite fails the
 whole run immediately (its exit code is propagated), so a broken oracle
@@ -42,7 +43,7 @@ BENCHES = [
 # multi-device host platform) before its first jax import, hence subprocesses
 EXTRA_SUITES = ("kernel_microbench", "stream_bench", "shard_stream_bench",
                 "batch_bench", "scenario_bench", "latency_bench",
-                "obs_bench")
+                "obs_bench", "analysis_bench")
 
 
 def run_suites(suite_modules, quick=False):

@@ -63,6 +63,28 @@ OBS_DRIFT_ROW_KEYS = {
     "detectors": list,
     "expected_fired": bool,
 }
+# suite "analysis" (analysis_bench): every utilization row (carrying a
+# profile) pins artifact/fits plus the per-budget utilization columns
+# the resource trajectory diffs on
+ANALYSIS_ROW_KEYS = {
+    "artifact": str,
+    "profile": str,
+    "fits": bool,
+}
+ANALYSIS_UTIL_KEYS = {
+    "util_stages": (int, float),
+    "util_sram_kib": (int, float),
+    "util_tcam_kib": (int, float),
+    "util_entries": (int, float),
+    "util_tables": (int, float),
+}
+# every emitter's suite tag — an unknown suite means a new emitter
+# forgot to register here (and in EXTRA_SUITES / DESIGN.md §11), or a
+# typo is about to fork the trajectory under a fresh name
+KNOWN_SUITES = frozenset({
+    "benchmarks", "kernels", "stream", "shard", "batch", "scenarios",
+    "latency", "obs", "analysis",
+})
 
 
 class SchemaError(ValueError):
@@ -85,6 +107,10 @@ def validate_bench_payload(payload, path="<payload>"):
                  f"got {type(payload[key]).__name__}")
     _require(payload["schema"] == SCHEMA, path,
              f"schema must be {SCHEMA!r}, got {payload['schema']!r}")
+    _require(payload["suite"] in KNOWN_SUITES, path,
+             f"unknown suite {payload['suite']!r} — known suites: "
+             f"{sorted(KNOWN_SUITES)} (new emitters must register in "
+             "validate_schema.KNOWN_SUITES)")
     _require(payload["benches"], path, "benches must be non-empty")
     for i, bench in enumerate(payload["benches"]):
         where = f"{path}: benches[{i}]"
@@ -115,6 +141,24 @@ def validate_bench_payload(payload, path="<payload>"):
                     continue
                 rwhere = f"{where}.rows[{j}]"
                 for key, types in keys.items():
+                    _require(key in row, rwhere, f"missing key {key!r}")
+                    _require(isinstance(row[key], types), rwhere,
+                             f"{key!r} must be {types}, "
+                             f"got {type(row[key]).__name__}")
+        if (payload["suite"] == "analysis"
+                and isinstance(bench["rows"], list)):
+            for j, row in enumerate(bench["rows"]):
+                if not (isinstance(row, dict) and "profile" in row):
+                    continue
+                rwhere = f"{where}.rows[{j}]"
+                for key, types in ANALYSIS_ROW_KEYS.items():
+                    _require(key in row, rwhere, f"missing key {key!r}")
+                    _require(isinstance(row[key], types), rwhere,
+                             f"{key!r} must be {types}, "
+                             f"got {type(row[key]).__name__}")
+                if "guard" in row:
+                    continue            # deploy-guard probe row: no utils
+                for key, types in ANALYSIS_UTIL_KEYS.items():
                     _require(key in row, rwhere, f"missing key {key!r}")
                     _require(isinstance(row[key], types), rwhere,
                              f"{key!r} must be {types}, "

@@ -1,0 +1,25 @@
+"""repro.analysis — static analysis gate for the serving stack.
+
+Three subsystems behind one rule registry and one CLI
+(``python -m repro.analysis``, DESIGN.md §15):
+
+* **hotpath** — jaxpr/HLO auditor proving the serving tiers' load-bearing
+  contracts on every commit: declared donations really alias (no silent
+  copy), no host callbacks or transfers inside the jitted steps
+  (zero-sync), register/stats dtype layout (f32 registers, i32 counters,
+  f32 conf_sum, no f64), and the exact collective census the sharded
+  steps promise (one readout psum per chunk).
+* **lint** — custom AST pass over ``src/``: host-sync idioms inside
+  jitted functions, broad ``except`` without justification, module-level
+  ``os.environ`` mutation, jitted ``*_state`` carries without donation.
+* **fit** — switch resource-fit checker (``core.resources.check_fit``)
+  mapping artifacts against declarative :class:`DeviceProfile` budgets
+  before deploy, Planter-style.
+
+Every rule carries a seeded-violation self-test (``--strict`` runs them)
+so the analyzer can never rot into a silent no-op.
+"""
+
+from repro.analysis.registry import (AnalysisReport, Finding, Rule,  # noqa: F401
+                                     RULES, iter_rules, register, run_rules)
+from repro.analysis.lint import lint_paths, lint_source  # noqa: F401

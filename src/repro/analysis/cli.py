@@ -1,0 +1,76 @@
+"""``python -m repro.analysis`` — run the static-analysis gate.
+
+Exit status: 0 iff every rule is clean (no findings, no rule crashes,
+and — with self-tests on — every rule's seeded violation fired).
+
+    python -m repro.analysis                 # human output, all sections
+    python -m repro.analysis --json          # machine output
+    python -m repro.analysis --strict        # CI gate (self-tests forced on)
+    python -m repro.analysis --section lint  # one section only
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import List, Optional
+
+from repro.analysis.registry import SECTIONS, AnalysisReport, run_rules
+
+
+def _register_all() -> None:
+    from repro.analysis import fit, hotpath, lint
+    for mod in (lint, fit, hotpath):
+        mod.register_rules()
+
+
+def _human(report: AnalysisReport) -> str:
+    lines: List[str] = []
+    for res in report.results:
+        status = "OK"
+        if res.error:
+            status = f"CRASH ({res.error})"
+        elif res.findings:
+            status = f"{len(res.findings)} finding(s)"
+        elif res.selftest_fired is False:
+            status = "SELFTEST SILENT (rule is a no-op)"
+        lines.append(f"[{res.section:7s}] {res.rule:28s} {status:30s} "
+                     f"{res.elapsed_s:6.2f}s")
+        for f in res.findings:
+            lines.append(f"    {f.format()}")
+    lines.append(f"{'PASS' if report.ok else 'FAIL'}: "
+                 f"{len(report.results)} rules, "
+                 f"{len(report.findings)} findings")
+    return "\n".join(lines)
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="static-analysis gate: AST lint, jaxpr hot-path "
+                    "auditor, device resource-fit checker")
+    ap.add_argument("--json", action="store_true",
+                    help="machine-readable report on stdout")
+    ap.add_argument("--strict", action="store_true",
+                    help="CI mode: self-tests forced on; nonzero exit on "
+                         "any finding, rule crash, or silent self-test")
+    ap.add_argument("--section", choices=SECTIONS, action="append",
+                    help="run only this section (repeatable)")
+    ap.add_argument("--no-selftests", action="store_true",
+                    help="skip the seeded-violation self-tests "
+                         "(ignored under --strict)")
+    args = ap.parse_args(argv)
+
+    _register_all()
+    selftests = args.strict or not args.no_selftests
+    report = run_rules(sections=args.section, selftests=selftests)
+    if args.json:
+        print(json.dumps(report.to_json(), indent=2, sort_keys=True))
+    else:
+        print(_human(report))
+    return 0 if report.ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

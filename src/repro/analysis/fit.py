@@ -1,0 +1,100 @@
+"""Resource-fit rules (rule section ``fit``).
+
+The check half proves every artifact class the repo actually serves
+(RF, XGB over the streaming readout layout, plus the classical SVM /
+Bayes mappings) deploys under the default Tofino-like profile; the
+self-test half proves :func:`check_fit` genuinely *rejects* — a
+paper-scale oversized ensemble (wide per-feature radices, the regime
+IIsy §4/Table 1 calls out as the naive-mapping blowup) must fail.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, List
+
+import numpy as np
+
+from repro.analysis.registry import Finding, Rule, register
+from repro.core.resources import DEFAULT_PROFILE, PROFILES, check_fit
+
+
+@functools.lru_cache(maxsize=1)
+def standard_artifacts():
+    """(name, finalized artifact) for the model families the serving
+    stack deploys — small trained instances of each mapping."""
+    from repro.core.artifact import finalize_artifact
+    from repro.core.mapping import map_tree_ensemble
+    from repro.ml.trees import (fit_decision_tree, fit_random_forest,
+                                fit_xgboost)
+    from repro.netsim.stream import FLOW_FEATURES
+    rng = np.random.RandomState(0)
+    x = rng.rand(512, FLOW_FEATURES).astype(np.float32) * 1500.0
+    y = ((x[:, 0] > x[:, 1]) ^ (x[:, 2] > 700.0)).astype(np.int32)
+    dt = fit_decision_tree(x, y, n_classes=2, max_depth=5)
+    rf = fit_random_forest(x, y, n_classes=2, n_trees=10, max_depth=5)
+    xgb = fit_xgboost(x, y, n_trees=10, max_depth=5)
+    return (
+        ("dt", finalize_artifact(map_tree_ensemble(dt, FLOW_FEATURES))),
+        ("rf", finalize_artifact(map_tree_ensemble(rf, FLOW_FEATURES))),
+        ("xgb", finalize_artifact(map_tree_ensemble(xgb, FLOW_FEATURES))),
+    )
+
+
+def oversized_report():
+    """A deliberately paper-scale ResourceReport no single device holds:
+    8 features x 256-entry range tables feeding trees whose per-feature
+    code radix is 16 — prod(radix) decision entries per tree, the §4
+    blowup the mapping's table split exists to avoid."""
+    from repro.core.resources import ResourceReport
+    f_dim, radix, n_trees, feat_entries = 8, 16, 4, 256 * 8
+    dec_entries = n_trees * radix ** f_dim          # 4 * 16^8 ~ 1.7e10
+    feat_bits = feat_entries * 4 * f_dim
+    dec_bits = dec_entries * 2
+    return ResourceReport(tables=f_dim + n_trees + 1,
+                          entries=feat_entries + dec_entries,
+                          bits=feat_bits + dec_bits, stages=3,
+                          tcam_bits=feat_bits, sram_bits=dec_bits)
+
+
+def fit_rows() -> List[Dict[str, object]]:
+    """Per-(artifact, profile) utilization rows (bench + CLI --json)."""
+    rows = []
+    for name, art in standard_artifacts():
+        for profile in PROFILES.values():
+            rep = check_fit(art, profile)
+            row = {"artifact": name, **rep.row()}
+            rows.append(row)
+    return rows
+
+
+def check_standard_artifacts_fit() -> List[Finding]:
+    out = []
+    for name, art in standard_artifacts():
+        rep = check_fit(art, DEFAULT_PROFILE)
+        if not rep.fits:
+            out.append(Finding(
+                rule="fit-standard-artifacts",
+                message=(f"{name} artifact no longer fits "
+                         f"{DEFAULT_PROFILE.name}: "
+                         + "; ".join(rep.violations))))
+    return out
+
+
+def _selftest_rejects_oversized() -> List[Finding]:
+    rep = check_fit(oversized_report(), DEFAULT_PROFILE)
+    if not rep.fits:
+        return [Finding(rule="fit-standard-artifacts",
+                        message="selftest: oversized ensemble rejected: "
+                                + "; ".join(rep.violations))]
+    return []
+
+
+def register_rules() -> None:
+    register(Rule(
+        name="fit-standard-artifacts", section="fit",
+        doc="every served artifact family (dt/rf/xgb) deploys under the "
+            "default device profile; check_fit rejects paper-scale "
+            "oversized ensembles",
+        check=check_standard_artifacts_fit,
+        selftest=_selftest_rejects_oversized))

@@ -1,0 +1,397 @@
+"""Custom AST lint pass over ``src/`` (rule section ``lint``).
+
+Four repo-specific rules no off-the-shelf linter ships:
+
+* ``lint-host-sync-in-jit`` — host-sync idioms (``float(x)``,
+  ``int(x)``, ``np.asarray``/``np.array``, ``.item()``,
+  ``jax.device_get``) inside a function that is jitted or shard_mapped
+  anywhere in the same module (``jax.jit(fn)``, ``@jax.jit``,
+  ``functools.partial`` wrapping included). Each of these forces a
+  blocking device->host transfer per call — the exact failure mode the
+  serving loop's zero-sync design exists to avoid.
+* ``lint-broad-except`` — ``except Exception`` / bare ``except`` without
+  a justification comment on the same or previous line. Accepted
+  waivers: ``noqa: BLE001`` (the ``obs/metrics.py`` idiom) or
+  ``lint: allow-broad-except``; both must carry a reason after the tag.
+* ``lint-env-mutation`` — module-level ``os.environ`` mutation outside
+  ``launch/`` entrypoints (imports must be side-effect free; an env
+  tweak at import time reorders against jax backend init in whatever
+  module happens to import first). Waiver: ``lint: allow-env-mutation``.
+* ``lint-missing-donate`` — ``jax.jit(fn)`` where ``fn``'s parameters
+  include a ``state``/``*_state``/``stats`` carry but no
+  ``donate_argnums``/``donate_argnames`` was passed: the carry is
+  copied every step instead of reused in place.
+"""
+
+from __future__ import annotations
+
+import ast
+import os
+from typing import Dict, Iterable, List, Optional, Set, Tuple
+
+from repro.analysis.registry import Finding, Rule, register
+
+SRC_ROOT = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.dirname(os.path.abspath(__file__)))))        # .../repo/src
+
+WAIVER_TAGS = ("noqa: BLE001", "lint: allow-broad-except")
+ENV_WAIVER_TAG = "lint: allow-env-mutation"
+
+# Carry-parameter names whose jit should donate them.
+CARRY_NAMES = ("state", "stats")
+
+HOST_SYNC_CALLS = {"float", "int", "bool"}
+NUMPY_SYNC_ATTRS = {"asarray", "array"}
+
+
+def iter_source_files(root: str = SRC_ROOT) -> Iterable[str]:
+    for dirpath, dirnames, filenames in os.walk(root):
+        dirnames[:] = [d for d in dirnames if d != "__pycache__"]
+        for fn in sorted(filenames):
+            if fn.endswith(".py"):
+                yield os.path.join(dirpath, fn)
+
+
+def _is_launch_module(path: str) -> bool:
+    parts = os.path.normpath(path).split(os.sep)
+    return "launch" in parts
+
+
+def _numpy_aliases(tree: ast.Module) -> Set[str]:
+    """Module-level aliases of the numpy module (``import numpy as np``)."""
+    aliases = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for alias in node.names:
+                if alias.name == "numpy":
+                    aliases.add(alias.asname or "numpy")
+    return aliases
+
+
+# -- rule: host-sync idioms inside jitted functions -------------------------
+
+
+def _unwrap_partial(call: ast.Call) -> Optional[ast.expr]:
+    """functools.partial(fn, ...) -> fn (one level)."""
+    f = call.func
+    name = None
+    if isinstance(f, ast.Attribute):
+        name = f.attr
+    elif isinstance(f, ast.Name):
+        name = f.id
+    if name == "partial" and call.args:
+        return call.args[0]
+    return None
+
+
+def _is_jit_callable(func: ast.expr) -> bool:
+    """``jax.jit`` / ``jit`` / ``shard_map`` / ``pjit`` reference?"""
+    if isinstance(func, ast.Attribute):
+        return func.attr in ("jit", "pjit", "shard_map")
+    if isinstance(func, ast.Name):
+        return func.id in ("jit", "pjit", "shard_map")
+    return False
+
+
+def _jitted_names(tree: ast.Module) -> Set[str]:
+    """Names of functions that get jitted/shard_mapped in this module."""
+    jitted: Set[str] = set()
+
+    def first_name(arg: ast.expr) -> Optional[str]:
+        if isinstance(arg, ast.Name):
+            return arg.id
+        if isinstance(arg, ast.Call):
+            inner = _unwrap_partial(arg)
+            if inner is not None:
+                return first_name(inner)
+        return None
+
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call) and _is_jit_callable(node.func):
+            if node.args:
+                name = first_name(node.args[0])
+                if name:
+                    jitted.add(name)
+        elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            for dec in node.decorator_list:
+                target = dec.func if isinstance(dec, ast.Call) else dec
+                if _is_jit_callable(target):
+                    jitted.add(node.name)
+    return jitted
+
+
+def _check_host_sync(path: str, tree: ast.Module) -> List[Finding]:
+    jitted = _jitted_names(tree)
+    if not jitted:
+        return []
+    np_aliases = _numpy_aliases(tree)
+    out: List[Finding] = []
+
+    class Visitor(ast.NodeVisitor):
+        def __init__(self):
+            self.fn_stack: List[str] = []
+
+        def _in_jitted(self) -> bool:
+            return any(name in jitted for name in self.fn_stack)
+
+        def visit_FunctionDef(self, node):
+            self.fn_stack.append(node.name)
+            self.generic_visit(node)
+            self.fn_stack.pop()
+
+        visit_AsyncFunctionDef = visit_FunctionDef
+
+        def visit_Call(self, node: ast.Call):
+            if self._in_jitted():
+                bad = None
+                f = node.func
+                if isinstance(f, ast.Name) and f.id in HOST_SYNC_CALLS \
+                        and node.args \
+                        and not isinstance(node.args[0], ast.Constant):
+                    bad = f"{f.id}(...) on a traced value"
+                elif isinstance(f, ast.Attribute):
+                    if f.attr == "item":
+                        bad = ".item()"
+                    elif (f.attr in NUMPY_SYNC_ATTRS
+                          and isinstance(f.value, ast.Name)
+                          and f.value.id in np_aliases):
+                        bad = f"{f.value.id}.{f.attr}(...)"
+                    elif f.attr == "device_get":
+                        bad = "jax.device_get(...)"
+                if bad:
+                    out.append(Finding(
+                        rule="lint-host-sync-in-jit",
+                        message=(f"host-sync idiom {bad} inside jitted "
+                                 f"function {'/'.join(self.fn_stack)!r}"),
+                        path=path, line=node.lineno))
+            self.generic_visit(node)
+
+    Visitor().visit(tree)
+    return out
+
+
+# -- rule: broad except without justification -------------------------------
+
+
+def _has_waiver(lines: List[str], lineno: int, tags: Tuple[str, ...]) -> bool:
+    """Waiver tag on the flagged line or the line above it."""
+    for ln in (lineno, lineno - 1):
+        if 1 <= ln <= len(lines) and any(t in lines[ln - 1] for t in tags):
+            return True
+    return False
+
+
+def _check_broad_except(path: str, tree: ast.Module,
+                        lines: List[str]) -> List[Finding]:
+    out: List[Finding] = []
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.ExceptHandler):
+            continue
+        broad = node.type is None or (
+            isinstance(node.type, ast.Name)
+            and node.type.id in ("Exception", "BaseException"))
+        if broad and not _has_waiver(lines, node.lineno, WAIVER_TAGS):
+            what = ("bare except" if node.type is None
+                    else f"except {node.type.id}")
+            out.append(Finding(
+                rule="lint-broad-except",
+                message=(f"{what} without justification — narrow it or "
+                         "add '# noqa: BLE001 — <reason>'"),
+                path=path, line=node.lineno))
+    return out
+
+
+# -- rule: module-level os.environ mutation ---------------------------------
+
+
+def _env_mutations(tree: ast.Module) -> List[ast.stmt]:
+    """Top-level statements that write os.environ."""
+
+    def is_environ(expr: ast.expr) -> bool:
+        return (isinstance(expr, ast.Attribute) and expr.attr == "environ"
+                and isinstance(expr.value, ast.Name)
+                and expr.value.id == "os")
+
+    hits = []
+    for node in tree.body:                       # module top level only
+        for sub in ast.walk(node):
+            if isinstance(sub, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                break                            # defs run later, not at import
+            if isinstance(sub, ast.Assign) and any(
+                    isinstance(t, ast.Subscript) and is_environ(t.value)
+                    for t in sub.targets):
+                hits.append(sub)
+            elif isinstance(sub, ast.Call):
+                f = sub.func
+                if (isinstance(f, ast.Attribute)
+                        and f.attr in ("setdefault", "update", "pop")
+                        and is_environ(f.value)):
+                    hits.append(sub)
+    return hits
+
+
+def _check_env_mutation(path: str, tree: ast.Module,
+                        lines: List[str]) -> List[Finding]:
+    if _is_launch_module(path):
+        return []
+    out = []
+    for node in _env_mutations(tree):
+        if _has_waiver(lines, node.lineno, (ENV_WAIVER_TAG,)):
+            continue
+        out.append(Finding(
+            rule="lint-env-mutation",
+            message=("module-level os.environ mutation outside launch/ — "
+                     "imports must be side-effect free (waive with "
+                     f"'# {ENV_WAIVER_TAG} — <reason>')"),
+            path=path, line=node.lineno))
+    return out
+
+
+# -- rule: jitted carry without donation ------------------------------------
+
+
+def _is_carry_param(name: str) -> bool:
+    return name in CARRY_NAMES or name.endswith("_state")
+
+
+def _check_missing_donate(path: str, tree: ast.Module) -> List[Finding]:
+    # map function name -> its positional parameter names
+    fn_params: Dict[str, List[str]] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            fn_params[node.name] = [a.arg for a in node.args.args]
+
+    def is_jit_only(func: ast.expr) -> bool:
+        # shard_map has no donate kwarg — only jit/pjit are in scope here
+        if isinstance(func, ast.Attribute):
+            return func.attr in ("jit", "pjit")
+        return isinstance(func, ast.Name) and func.id in ("jit", "pjit")
+
+    out: List[Finding] = []
+    for node in ast.walk(tree):
+        if not (isinstance(node, ast.Call) and is_jit_only(node.func)
+                and node.args and isinstance(node.args[0], ast.Name)):
+            continue
+        params = fn_params.get(node.args[0].id)
+        if params is None or not any(_is_carry_param(p) for p in params):
+            continue
+        kw = {k.arg for k in node.keywords}
+        if not kw & {"donate_argnums", "donate_argnames"}:
+            carry = [p for p in params if _is_carry_param(p)]
+            out.append(Finding(
+                rule="lint-missing-donate",
+                message=(f"jit of {node.args[0].id!r} takes carry "
+                         f"parameter(s) {carry} but passes no "
+                         "donate_argnums/donate_argnames — the carry is "
+                         "copied every step"),
+                path=path, line=node.lineno))
+    return out
+
+
+# -- driver -----------------------------------------------------------------
+
+
+def lint_source(path: str, source: str) -> List[Finding]:
+    """All lint findings for one module's source text."""
+    try:
+        tree = ast.parse(source, filename=path)
+    except SyntaxError as exc:
+        return [Finding(rule="lint-parse", path=path, line=exc.lineno or 0,
+                        message=f"syntax error: {exc.msg}")]
+    lines = source.splitlines()
+    findings: List[Finding] = []
+    findings += _check_host_sync(path, tree)
+    findings += _check_broad_except(path, tree, lines)
+    findings += _check_env_mutation(path, tree, lines)
+    findings += _check_missing_donate(path, tree)
+    return findings
+
+
+def lint_paths(paths: Optional[Iterable[str]] = None) -> List[Finding]:
+    findings: List[Finding] = []
+    for path in (paths if paths is not None else iter_source_files()):
+        with open(path, "r", encoding="utf-8") as fh:
+            source = fh.read()
+        rel = os.path.relpath(path, os.path.dirname(SRC_ROOT))
+        findings += lint_source(rel, source)
+    return findings
+
+
+def _only(rule: str, findings: List[Finding]) -> List[Finding]:
+    return [f for f in findings if f.rule == rule]
+
+
+def _tree_findings(rule: str) -> List[Finding]:
+    return _only(rule, lint_paths())
+
+
+# Seeded-violation fixtures: each must make its rule fire.
+_FIXTURE_HOST_SYNC = """
+import jax
+import numpy as np
+
+def step(state, w):
+    n = float(state.sum())
+    rows = np.asarray(w)
+    k = state[0].item()
+    return n + rows.sum() + k
+
+step_j = jax.jit(step, donate_argnums=(0,))
+"""
+
+_FIXTURE_BROAD_EXCEPT = """
+def risky():
+    try:
+        return 1
+    except Exception:
+        return 0
+    except:
+        return -1
+"""
+
+_FIXTURE_ENV = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+"""
+
+_FIXTURE_MISSING_DONATE = """
+import jax
+
+def step(art, flow_state, stats, w):
+    return flow_state, stats
+
+step_j = jax.jit(step)
+"""
+
+
+def register_rules() -> None:
+    register(Rule(
+        name="lint-host-sync-in-jit", section="lint",
+        doc="no float()/np.asarray/.item()/device_get on traced values "
+            "inside jitted or shard_mapped functions",
+        check=lambda: _tree_findings("lint-host-sync-in-jit"),
+        selftest=lambda: _only("lint-host-sync-in-jit",
+                               lint_source("fixture.py",
+                                           _FIXTURE_HOST_SYNC))))
+    register(Rule(
+        name="lint-broad-except", section="lint",
+        doc="except Exception / bare except requires a justification "
+            "comment (noqa: BLE001 or lint: allow-broad-except)",
+        check=lambda: _tree_findings("lint-broad-except"),
+        selftest=lambda: _only("lint-broad-except",
+                               lint_source("fixture.py",
+                                           _FIXTURE_BROAD_EXCEPT))))
+    register(Rule(
+        name="lint-env-mutation", section="lint",
+        doc="no module-level os.environ mutation outside launch/",
+        check=lambda: _tree_findings("lint-env-mutation"),
+        selftest=lambda: _only("lint-env-mutation",
+                               lint_source("fixture.py", _FIXTURE_ENV))))
+    register(Rule(
+        name="lint-missing-donate", section="lint",
+        doc="jit of a function taking a state/stats carry must pass "
+            "donate_argnums/donate_argnames",
+        check=lambda: _tree_findings("lint-missing-donate"),
+        selftest=lambda: _only("lint-missing-donate",
+                               lint_source("fixture.py",
+                                           _FIXTURE_MISSING_DONATE))))

@@ -206,12 +206,23 @@ def pad_dtable(dtable, lane: Optional[int] = None) -> jax.Array:
 
 
 def finalize_artifact(art: TableArtifact,
-                      lane: Optional[int] = None) -> TableArtifact:
+                      lane: Optional[int] = None,
+                      profile=None) -> TableArtifact:
     """Attach the fused single-matmul kernel layout (idempotent).
 
     Runs control-plane side, once per table load — the runtime hot path only
     ever consumes the pre-flattened arrays.
+
+    profile: optional ``core.resources.DeviceProfile`` deploy guard —
+    the artifact is checked against the device budget *before* any
+    layout work and a ``FitError`` aborts the load if it cannot deploy
+    (Planter-style fit gate; see ``core.resources.check_fit``). None
+    (default) keeps finalization unconditional.
     """
+    if profile is not None:
+        # local import: resources imports this module for TableArtifact
+        from repro.core.resources import check_fit
+        check_fit(art, profile, strict=True)
     lane = lane or default_lane()
     if art.ftable is not None:
         if art.ftable_flat is not None:

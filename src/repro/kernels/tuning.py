@@ -100,7 +100,9 @@ def sweep_best(candidates, time_one, *, default, verbose: bool = False,
     for cand in cands:
         try:
             dt = time_one(cand)
-        except Exception:                           # config unsupported: skip
+        except Exception:  # noqa: BLE001 — candidate probing: any raise
+            #                (compile error, OOM, shape mismatch) just means
+            #                "config unsupported", and the default wins
             continue
         timings[cand] = dt
         if verbose:

@@ -1,4 +1,6 @@
 import os
+# lint: allow-env-mutation — dryrun is a launch/ entrypoint, never
+# library-imported: the flag must land before jax first initializes
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 
 """Multi-pod dry-run: lower + compile every (arch x shape) cell on the
@@ -248,7 +250,9 @@ def run_cell(arch: str, shape: str, *, multi_pod: bool, remat=True,
                                - base["coll"]["total"], 0.0)
                 total += (n_periods - 1) * marginal
             coll_corrected = total
-        except Exception as e:   # correction is best-effort
+        except Exception as e:  # noqa: BLE001 — correction is best-effort:
+            #                     a failed re-measure must not lose the
+            #                     uncorrected dry-run numbers
             coll_corrected = None
             if verbose:
                 print("scan correction failed:", e)

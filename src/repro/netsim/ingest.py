@@ -386,7 +386,9 @@ def prefetch_iter(it: Iterable, depth: int = 2) -> Iterator:
                         continue
                 if stop.is_set():
                     return
-        except BaseException as e:          # re-raised on the consumer side
+        except BaseException as e:  # noqa: BLE001 — producer-thread trap:
+            #                         captured and re-raised on the consumer
+            #                         side, so nothing is swallowed
             err.append(e)
         finally:
             while not stop.is_set():

@@ -140,5 +140,7 @@ def annotation(name: str, enabled: bool = True):
     try:
         import jax.profiler
         return jax.profiler.TraceAnnotation(name)
-    except Exception:            # pragma: no cover - profiler unavailable
+    except Exception:  # noqa: BLE001 — telemetry never raises; any
+        #                profiler import/init failure degrades to a null
+        #                context  # pragma: no cover - profiler unavailable
         return contextlib.nullcontext()

@@ -62,7 +62,9 @@ def _refresh(r):
         mf = r.get("model_flops_global")
         if mf:
             r["useful_flops_ratio"] = mf / (an_flops * n_chips)
-    except Exception:
+    except (KeyError, TypeError, ValueError, ZeroDivisionError):
+        # roofline augmentation is best-effort decoration of a report
+        # row: malformed/partial rows keep their measured fields
         pass
 
 

@@ -236,7 +236,9 @@ class GuardedBackend:
                 self._sleep(p.backoff_base_s * p.backoff_factor ** (i - 1))
             try:
                 out = self._attempt(rows)
-            except Exception as e:
+            except Exception as e:  # noqa: BLE001 — fault boundary: ANY
+                #                     backend failure must degrade, not crash
+                #                     the serving loop
                 kind = ("backend_timeout" if isinstance(e, BackendTimeout)
                         else "backend_error")
                 self._emit(kind, error=f"{type(e).__name__}: {e}")

@@ -73,6 +73,16 @@ class HybridStats:
 
 
 class HybridServer:
+    # Hot-path auditor contract (repro.analysis.hotpath): the batch step
+    # is audited for zero-sync and dtype layout with an empty donation
+    # set — donate=True is documented below as unaliasable for the
+    # current output shapes (jax would silently prune it, which is
+    # exactly what the auditor exists to reject on the streaming tiers).
+    AUDIT_CONTRACTS = (
+        {"attr": "_step", "donate": (), "probe": "batch",
+         "collectives": {}},
+    )
+
     def __init__(self, artifact: TableArtifact, backend_fn: Callable,
                  *, threshold: float = 0.7, capacity: int = 256,
                  use_pallas: bool = False, autotune: bool = False,

@@ -82,6 +82,25 @@ class ShardedStreamingServer(StreamingHybridServer):
     layout differ.
     """
 
+    # Hot-path auditor contracts (repro.analysis.hotpath). The census
+    # pins DESIGN.md §6/§8 exactly: the window step pays five psums
+    # (pred, conf, dispatch buffer, evict/overflow counts — one of which,
+    # the buffer, is the single rank>=2 "readout" merge) while the chunk
+    # megastep amortizes to three (the stacked (K, W, 8) readout rows
+    # plus two scalar counts) — ONE readout psum per chunk. Any extra
+    # collective that sneaks into these jaxprs is a regression the
+    # auditor rejects. Counts hold under shard_map even on a 1-device
+    # mesh (psum_scatter in the flush half does not, which is why the
+    # flush closures are audited for donation/sync but not census).
+    AUDIT_CONTRACTS = (
+        {"attr": "_stream_step", "donate": (1, 2), "probe": "window",
+         "collectives": {"psum": 5}, "readout_psums": 1},
+        {"attr": "_stream_switch", "donate": (1,), "probe": "window",
+         "collectives": {"psum": 5}, "readout_psums": 1},
+        {"attr": "_chunk_step", "donate": (1, 2), "probe": "chunk",
+         "collectives": {"psum": 3}, "readout_psums": 1},
+    )
+
     def __init__(self, artifact: TableArtifact, backend_fn: Callable, *,
                  n_buckets: int = 4096, window: int = 512,
                  threshold: float = 0.7, capacity: int = 64,

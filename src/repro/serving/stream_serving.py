@@ -445,6 +445,15 @@ def probe_chunk(window: int, k: int, n_buckets: int,
         valid=jnp.asarray(np.ones(shp, bool)))
 
 
+def probe_window(window: int, n_buckets: int, seed: int = 0) -> PacketWindow:
+    """Synthetic all-valid window (the 1D sibling of ``probe_chunk``),
+    shared by the chunk-size autotuner's warmup and the
+    ``repro.analysis`` hot-path auditor's tracing probes."""
+    c = probe_chunk(window, 1, n_buckets, seed)
+    return PacketWindow(bucket=c.bucket[0], ts=c.ts[0], length=c.length[0],
+                        is_fwd=c.is_fwd[0], valid=c.valid[0])
+
+
 def autotune_chunk_windows(make_server, *, window: int, n_buckets: int,
                            candidates=CHUNK_WINDOW_CANDIDATES,
                            default: int = DEFAULT_CHUNK_WINDOWS,
@@ -517,6 +526,21 @@ class StreamingHybridServer(HybridServer):
     n_buckets sizes the flow register file. The batch ``classify`` of the
     parent stays available (tests use it as the one-shot oracle).
     """
+
+    # Declarative contracts the ``repro.analysis`` hot-path auditor keys
+    # on: each row names a jitted step attribute, the donate_argnums it
+    # is built with (the auditor proves every donated leaf really
+    # aliases in the compiled HLO — jax prunes unusable donations
+    # silently), and which probe shape traces it. ``collectives`` (set
+    # by the sharded tier) pins the exact cross-device census.
+    AUDIT_CONTRACTS = (
+        {"attr": "_stream_step", "donate": (1, 2), "probe": "window",
+         "collectives": {}},
+        {"attr": "_stream_switch", "donate": (1,), "probe": "window",
+         "collectives": {}},
+        {"attr": "_chunk_step", "donate": (1, 2), "probe": "chunk",
+         "collectives": {}},
+    )
 
     def __init__(self, artifact: TableArtifact, backend_fn: Callable, *,
                  n_buckets: int = 4096, window: int = 512,

@@ -1,0 +1,309 @@
+"""repro.analysis: rule registry, AST lint, resource fit, and the
+seeded-violation contract (every rule must fire on its fixture).
+
+The heavyweight jaxpr hot-path audits (server construction + tracing)
+run once through the CLI entry in ``test_strict_gate_passes_clean_tree``
+— the same invocation CI gates on — rather than per-rule, to keep tier-1
+wall time bounded.
+"""
+
+import json
+import subprocess
+import sys
+
+import pytest
+
+from repro.analysis import lint
+from repro.analysis.registry import (RULES, Finding, Rule, iter_rules,
+                                     register, run_rules)
+from repro.core.resources import (DEFAULT_PROFILE, NIC_LIKE, PROFILES,
+                                  DeviceProfile, FitError, check_fit)
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+def test_registry_rejects_duplicates_and_bad_sections():
+    r = Rule(name="t-dup", section="lint", doc="",
+             check=lambda: [], selftest=lambda: [Finding("t-dup", "x")])
+    register(r)
+    try:
+        with pytest.raises(ValueError, match="duplicate"):
+            register(r)
+    finally:
+        RULES.pop("t-dup")
+    with pytest.raises(ValueError, match="unknown section"):
+        Rule(name="t-bad", section="nope", doc="",
+             check=lambda: [], selftest=lambda: [])
+
+
+def test_run_rules_isolates_rule_crashes():
+    """A crashing rule is reported, not propagated — one broken auditor
+    cannot mask the others' findings."""
+
+    def boom():
+        raise RuntimeError("auditor exploded")
+
+    register(Rule(name="t-crash", section="lint", doc="",
+                  check=boom, selftest=lambda: []))
+    register(Rule(name="t-fine", section="lint", doc="",
+                  check=lambda: [], selftest=lambda: [Finding("t-fine", "f")]))
+    try:
+        report = run_rules(sections=("lint",))
+        by_name = {r.rule: r for r in report.results}
+        assert "auditor exploded" in by_name["t-crash"].error
+        assert not by_name["t-crash"].ok
+        assert by_name["t-fine"].ok
+        assert not report.ok
+    finally:
+        RULES.pop("t-crash")
+        RULES.pop("t-fine")
+
+
+def test_silent_selftest_fails_the_report():
+    """A rule whose seeded violation does NOT fire is a no-op and must
+    fail the report — the anti-rot contract."""
+    register(Rule(name="t-noop", section="lint", doc="",
+                  check=lambda: [], selftest=lambda: []))
+    try:
+        report = run_rules(sections=("lint",))
+        res = {r.rule: r for r in report.results}["t-noop"]
+        assert res.selftest_fired is False
+        assert not res.ok and not report.ok
+    finally:
+        RULES.pop("t-noop")
+
+
+# ---------------------------------------------------------------------------
+# AST lint rules — seeded violations must fire, idiomatic code must not
+# ---------------------------------------------------------------------------
+
+def _rules_fired(source):
+    return {f.rule for f in lint.lint_source("fixture.py", source)}
+
+
+def test_lint_host_sync_fires_on_seeded_violations():
+    fired = lint.lint_source("fixture.py", lint._FIXTURE_HOST_SYNC)
+    msgs = [f.message for f in fired
+            if f.rule == "lint-host-sync-in-jit"]
+    assert len(msgs) == 3                      # float(), np.asarray, .item()
+    assert any("float" in m for m in msgs)
+    assert any("asarray" in m for m in msgs)
+    assert any(".item()" in m for m in msgs)
+
+
+def test_lint_host_sync_spares_unjitted_and_decorated_forms():
+    # same idioms outside any jitted function: clean
+    assert not _rules_fired("""
+import numpy as np
+def host_side(x):
+    return float(np.asarray(x).sum())
+""")
+    # @jax.jit decorator form is recognized
+    assert "lint-host-sync-in-jit" in _rules_fired("""
+import jax
+@jax.jit
+def step(state):
+    return state.sum().item()
+""")
+    # functools.partial wrapping is unwrapped
+    assert "lint-host-sync-in-jit" in _rules_fired("""
+import functools, jax
+def step(state, k):
+    return float(state.sum()) + k
+step_j = jax.jit(functools.partial(step, k=2))
+""")
+
+
+def test_lint_broad_except_fires_and_respects_waivers():
+    assert "lint-broad-except" in _rules_fired(lint._FIXTURE_BROAD_EXCEPT)
+    for waiver in ("noqa: BLE001", "lint: allow-broad-except"):
+        assert not _rules_fired(f"""
+def risky():
+    try:
+        return 1
+    except Exception:  # {waiver} — telemetry never raises
+        return 0
+""")
+    # waiver on the previous line also counts (long messages wrap)
+    assert not _rules_fired("""
+def risky():
+    try:
+        return 1
+    # noqa: BLE001 — fault boundary, everything must degrade
+    except Exception:
+        return 0
+""")
+    # narrow excepts never fire
+    assert not _rules_fired("""
+def risky():
+    try:
+        return 1
+    except (ValueError, KeyError):
+        return 0
+""")
+
+
+def test_lint_env_mutation_fires_outside_launch_only():
+    assert "lint-env-mutation" in _rules_fired(lint._FIXTURE_ENV)
+    # launch/ entrypoints are exempt (they must set flags pre-jax-init)
+    assert not lint.lint_source("src/repro/launch/fixture.py",
+                                lint._FIXTURE_ENV)
+    # explicit waiver is honored anywhere
+    assert not _rules_fired("""
+import os
+# lint: allow-env-mutation — test shim
+os.environ["X"] = "1"
+""")
+    # function-scoped mutation is runtime behavior, not import time
+    assert not _rules_fired("""
+import os
+def configure():
+    os.environ["X"] = "1"
+""")
+
+
+def test_lint_missing_donate_fires_and_spares_compliant_jits():
+    assert "lint-missing-donate" in _rules_fired(
+        lint._FIXTURE_MISSING_DONATE)
+    assert not _rules_fired("""
+import jax
+def step(art, flow_state, stats, w):
+    return flow_state, stats
+step_j = jax.jit(step, donate_argnums=(1, 2))
+""")
+    # shard_map has no donate kwarg: out of scope for this rule
+    assert not _rules_fired("""
+from jax.experimental.shard_map import shard_map
+def step(state, w):
+    return state
+step_s = shard_map(step, mesh=None, in_specs=None, out_specs=None)
+""")
+
+
+def test_lint_clean_on_the_real_tree():
+    """The shipped src/ tree is lint-clean — the same invariant the CI
+    gate enforces, asserted here so a violation fails tier-1 too."""
+    findings = lint.lint_paths()
+    assert not findings, "\n".join(f.format() for f in findings)
+
+
+# ---------------------------------------------------------------------------
+# resource fit
+# ---------------------------------------------------------------------------
+
+def test_standard_artifacts_fit_default_profile():
+    from repro.analysis.fit import standard_artifacts
+    for name, art in standard_artifacts():
+        rep = check_fit(art, DEFAULT_PROFILE)
+        assert rep.fits, f"{name}: {rep.violations}"
+        assert all(0.0 <= u for u in rep.utilization.values())
+
+
+def test_check_fit_rejects_oversized_artifact():
+    from repro.analysis.fit import oversized_report
+    for profile in PROFILES.values():
+        rep = check_fit(oversized_report(), profile)
+        assert not rep.fits
+        assert any("entries" in v for v in rep.violations)
+    with pytest.raises(FitError, match="does not fit"):
+        check_fit(oversized_report(), DEFAULT_PROFILE, strict=True)
+
+
+def test_finalize_artifact_profile_guard():
+    import dataclasses
+
+    from repro.analysis.fit import standard_artifacts
+    from repro.core.artifact import finalize_artifact
+    from repro.core.resources import artifact_resources
+    art = dict(standard_artifacts())["xgb"]
+    raw = dataclasses.replace(art, ftable_flat=None, dtable_flat=None,
+                              dtable_pad=None)
+    entries = artifact_resources(art).entries
+    tight = DeviceProfile(name="tight", stages=12, sram_kib=1 << 20,
+                          tcam_kib=1 << 20, max_entries=entries // 2,
+                          max_tables=1 << 10)
+    with pytest.raises(FitError, match="entries"):
+        finalize_artifact(raw, profile=tight)
+    out = finalize_artifact(raw, profile=DEFAULT_PROFILE)  # fits: finalizes
+    assert out.ftable_flat is not None
+
+
+def test_fit_rows_cover_every_artifact_profile_pair():
+    from repro.analysis.fit import fit_rows, standard_artifacts
+    rows = fit_rows()
+    assert len(rows) == len(standard_artifacts()) * len(PROFILES)
+    for row in rows:
+        assert set(row) >= {"artifact", "profile", "fits", "util_entries",
+                            "util_sram_kib", "util_tcam_kib", "util_tables",
+                            "util_stages"}
+    assert NIC_LIKE.name in {r["profile"] for r in rows}
+
+
+def test_resource_report_split_is_consistent():
+    """tcam+sram must equal total bits for the tree family (feature
+    tables are the TCAM side, decision tables the SRAM side)."""
+    from repro.analysis.fit import standard_artifacts
+    from repro.core.resources import artifact_resources
+    for name, art in standard_artifacts():
+        res = artifact_resources(art)
+        assert res.tcam_bits + res.sram_bits == res.bits, name
+
+
+# ---------------------------------------------------------------------------
+# the CLI gate itself
+# ---------------------------------------------------------------------------
+
+def test_strict_gate_passes_clean_tree():
+    """``python -m repro.analysis --strict --json`` exits 0 on the
+    shipped tree with every self-test fired — the exact CI invocation.
+    Runs the hot-path auditor end to end (server builds + traces)."""
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.analysis", "--strict", "--json"],
+        capture_output=True, text=True, timeout=900)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    report = json.loads(proc.stdout)
+    assert report["ok"] and report["n_findings"] == 0
+    by_name = {r["rule"]: r for r in report["results"]}
+    for rule in ("hotpath-donation", "hotpath-zero-sync", "hotpath-dtype",
+                 "hotpath-collectives", "lint-host-sync-in-jit",
+                 "lint-broad-except", "lint-env-mutation",
+                 "lint-missing-donate", "fit-standard-artifacts"):
+        assert rule in by_name, f"rule {rule} not registered"
+        assert by_name[rule]["selftest_fired"] is True, rule
+
+
+def test_cli_section_filter_and_nonstrict_lint():
+    """The lint section alone runs fast in-process and exits 0."""
+    from repro.analysis.cli import main
+    assert main(["--section", "lint", "--json"]) == 0
+
+
+def test_jaxpr_utils_alias_parse_and_census():
+    """Unit-level checks of the auditor's parsing machinery on toy
+    programs (the self-tests cover the negative direction)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.analysis import jaxpr_utils as JU
+
+    def good_step(state, w):
+        return state * 2.0 + w, jnp.sum(w)
+    jitted = jax.jit(good_step, donate_argnums=(0,))
+    args = (jnp.zeros((8, 8), jnp.float32), jnp.ones((8, 8), jnp.float32))
+    text = JU.compiled_text(jitted, *args)
+    assert JU.donation_alias_count(text) == 1
+    assert JU.count_donated_leaves(args, (0,)) == 1
+
+    jaxpr = JU.closed_jaxpr(jitted, *args)
+    assert JU.forbidden_primitives(jaxpr) == []
+    assert JU.collective_census(jaxpr) == {}
+    assert JU.jaxpr_dtypes(jaxpr) <= {"float32"}
+
+    # scan sub-jaxprs are walked recursively
+    def scanned(xs):
+        return jax.lax.scan(lambda c, x: (c + x, c), jnp.float32(0), xs)
+    names = JU.primitive_names(JU.closed_jaxpr(scanned,
+                                               jnp.ones(4, jnp.float32)))
+    assert "scan" in names and "add" in names

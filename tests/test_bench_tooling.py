@@ -50,11 +50,12 @@ def test_run_suites_empty_returns_cleanly():
 
 def test_all_suites_list_covers_every_emitter():
     """The --all-suites chain names each standalone bench-v1 emitter,
-    including the cross-window batching, adversarial-scenario and
-    ingest-latency benches."""
+    including the cross-window batching, adversarial-scenario,
+    ingest-latency, observability and resource-fit benches."""
     assert set(EXTRA_SUITES) == {"kernel_microbench", "stream_bench",
                                  "shard_stream_bench", "batch_bench",
-                                 "scenario_bench", "latency_bench"}
+                                 "scenario_bench", "latency_bench",
+                                 "obs_bench", "analysis_bench"}
 
 
 # ---------------------------------------------------------------------------
@@ -125,6 +126,64 @@ def test_validator_cli_requires_files(tmp_path, monkeypatch):
     with pytest.raises(SystemExit) as e:
         validate_main([])
     assert e.value.code not in (0, None)
+
+
+def test_validator_rejects_unknown_suite(valid_bench):
+    """A typo'd / unregistered suite tag must fail with a message that
+    names the offender and the registry to fix."""
+    payload = json.loads(valid_bench.read_text())
+    payload["suite"] = "mystery_suite"
+    with pytest.raises(SchemaError, match="unknown suite 'mystery_suite'"):
+        validate_bench_payload(payload, "mutated")
+
+
+def test_validator_cli_messages_are_pointed(valid_bench, tmp_path):
+    """The CLI exit message must say *what* is malformed and *where* —
+    a bare nonzero exit would send the operator spelunking."""
+    cases = [
+        (lambda p: p.pop("benches"), "missing top-level key 'benches'"),
+        (lambda p: p["benches"][0].update(ok="yes"), "'ok' must be"),
+        (lambda p: p.update(suite="mystery_suite"),
+         "unknown suite 'mystery_suite'"),
+    ]
+    for i, (mutate, needle) in enumerate(cases):
+        payload = json.loads(valid_bench.read_text())
+        mutate(payload)
+        bad = tmp_path / f"BENCH_bad{i}.json"
+        bad.write_text(json.dumps(payload))
+        with pytest.raises(SystemExit) as e:
+            validate_main([str(bad)])
+        assert e.value.code not in (0, None)
+        assert needle in str(e.value.code)
+        assert str(bad) in str(e.value.code)      # names the offending file
+
+
+def _analysis_payload():
+    return {
+        "schema": "bench-v1", "suite": "analysis", "generated_unix": 0.0,
+        "backend": "cpu", "config": {},
+        "benches": [{"name": "device_fit", "paper_ref": "Tables 1-2",
+                     "ok": True, "wall_s": 0.1,
+                     "rows": [{"artifact": "rf", "profile": "tofino_like",
+                               "fits": True, "util_stages": 0.25,
+                               "util_sram_kib": 0.1, "util_tcam_kib": 0.1,
+                               "util_entries": 0.1, "util_tables": 0.5},
+                              {"artifact": "xgb", "profile": "tight_test",
+                               "fits": False, "guard": "FitError"}]}],
+    }
+
+
+def test_validator_analysis_rows_require_utilization():
+    validate_bench_payload(_analysis_payload(), "ok")  # guard row exempt
+    for strip in ("artifact", "fits", "util_entries", "util_sram_kib"):
+        payload = _analysis_payload()
+        payload["benches"][0]["rows"][0].pop(strip)
+        with pytest.raises(SchemaError, match=strip):
+            validate_bench_payload(payload, "stripped")
+    payload = _analysis_payload()
+    payload["benches"][0]["rows"][0]["fits"] = "yes"      # wrong type
+    with pytest.raises(SchemaError, match="fits"):
+        validate_bench_payload(payload, "typed")
 
 
 def _latency_payload():
