@@ -1,27 +1,42 @@
-"""Sharded streaming benchmark: packets/sec vs device count.
+"""Sharded streaming benchmark: packets/sec vs mesh shape.
 
 ``python -m benchmarks.shard_stream_bench`` drives the
-``ShardedStreamingServer`` over a synthetic packet trace on 1/2/4-device
-('shard',) meshes and reports sustained packets/sec for the full
-shard_mapped step (per-shard register update -> owner-masked readout ->
-fused classify -> psum merges -> capacity-bounded backend -> combine ->
-telemetry). Run standalone it forces a 4-device CPU host platform
-(``--xla_force_host_platform_device_count``) unless XLA_FLAGS is already
-set, so the scaling axis exists even on a single-CPU box.
+``ShardedStreamingServer`` over a synthetic packet trace on a sweep of
+('shard', 'data') mesh shapes — the 1D column (1,1)/(2,1)/(4,1) plus the
+2D (2,2) square when four devices exist — and reports sustained
+packets/sec for the full shard_mapped step (per-shard register update ->
+owner-masked readout -> PARTITIONED classify over per-device lane slabs
+-> reduce-scatter/all-gather merges -> capacity-bounded backend ->
+combine -> telemetry). Run standalone it forces a 4-device CPU host
+platform (``--xla_force_host_platform_device_count``) unless XLA_FLAGS
+is already set, so the scaling axis exists even on a single-CPU box.
 
-Before any timing, the equivalence oracle runs per device count: the
-sharded flow table must reproduce the batch ``flow_features`` table bit
-for bit AND the sharded predictions must equal the single-device
-``StreamingHybridServer`` on the same trace — a speedup that drifts the
-registers or the answers is not a speedup. A second (non-oracle) entry
-exercises the eviction/aging sweep and records lifecycle telemetry.
+Each mesh shape is timed twice: the partitioned-classify layout
+(DESIGN.md §16, the headline number) and the ``partition_classify=False``
+**merge_overhead baseline** — the pre-partitioning layout where every
+device classifies all W lanes and the owner-masked psum merge throws the
+duplicates away. ``speedup_vs_merge_overhead`` is the honest per-shape
+comparison (same mesh, same collective overheads, only the classify
+partitioned); ``speedup_vs_1dev`` compares partitioned shapes against
+the partitioned (1, 1) run.
+
+Before any timing, three gates run per mesh shape:
+
+* the sharded flow table must reproduce the batch ``flow_features``
+  table bit for bit,
+* both layouts' predictions must equal the single-device
+  ``StreamingHybridServer`` on the same trace (a speedup that drifts the
+  registers or the answers is not a speedup), and
+* ``classify_rows_per_device`` must equal the padded
+  ceil(W / (D_shard*D_data)) — NOT the full W — proving the per-device
+  classify work actually shrank with the mesh.
 
 Results go to ``BENCH_shard.json`` (schema "bench-v1", DESIGN.md §11).
 
 Caveat on the recorded curve: forced host-platform devices all share one
 physical CPU, so the multi-"device" rows pay the partitioning overhead
-without any extra silicon — speedup_vs_1dev < 1 is expected there. The
-point of the bench is the *axis* (and the oracle gating it); on a real
+without any extra silicon — speedup < 1 is expected there. The point of
+the bench is the *axis* (and the gates guarding it); on a real
 multi-chip mesh the same rows measure real scaling.
 """
 
@@ -32,7 +47,22 @@ import os
 import time
 
 
-def run(n_flows=4000, window=1024, n_buckets=1 << 13, device_counts=None,
+def _time_serve(srv, ws, repeats):
+    """min-over-repeats wall time for the stepwise loop over ``ws``."""
+    import jax
+
+    best = float("inf")
+    for _ in range(repeats):
+        srv.reset()
+        t0 = time.perf_counter()
+        for w in ws:
+            pred, _ = srv.step(w)
+        jax.block_until_ready(pred)            # single end-of-stream sync
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def run(n_flows=4000, window=1024, n_buckets=1 << 13, mesh_shapes=None,
         threshold=0.9, capacity=64, repeats=3, seed=0, evict_age=2.0,
         out="BENCH_shard.json"):
     # imports deferred so main() can force the host device count first
@@ -42,17 +72,22 @@ def run(n_flows=4000, window=1024, n_buckets=1 << 13, device_counts=None,
     from benchmarks.common import print_table, write_bench_json
     from benchmarks.common import trace_models
     from repro.distributed.sharding import flow_shard_mesh
+    from repro.kernels.ops import classify_batch_rows
+    from repro.kernels.tuning import shard_tiles
     from repro.netsim.features import flow_features
     from repro.netsim.packets import synth_trace
-    from repro.netsim.shard_stream import stream_sharded_flow_features
+    from repro.netsim.shard_stream import (lane_slab_rows,
+                                           stream_sharded_flow_features)
     from repro.netsim.stream import iter_windows
     from repro.serving.shard_serving import ShardedStreamingServer
     from repro.serving.stream_serving import StreamingHybridServer
 
     t_suite = time.time()
     avail = jax.local_device_count()
-    if device_counts is None:
-        device_counts = [d for d in (1, 2, 4, 8) if d <= avail]
+    if mesh_shapes is None:
+        mesh_shapes = [(d, 1) for d in (1, 2, 4, 8) if d <= avail]
+        if avail >= 4:
+            mesh_shapes.append((2, 2))         # the 2D square
     trace = synth_trace(n_flows=n_flows, seed=seed)
     _, batch_table = flow_features(trace, n_buckets=n_buckets)
     art, backend = trace_models(trace, n_buckets)
@@ -65,76 +100,100 @@ def run(n_flows=4000, window=1024, n_buckets=1 << 13, device_counts=None,
     ref_pred = np.asarray(ref_pred)
 
     ws = list(iter_windows(trace, window, n_buckets))
+    kw = dict(n_buckets=n_buckets, window=window, threshold=threshold,
+              capacity=capacity)
     rows, base_pkts_s = [], None
-    for d in device_counts:
-        mesh = flow_shard_mesh(d)
-        # oracle 1: sharded register carry == batch flow table, bitwise
+    for d_shard, d_data in mesh_shapes:
+        mesh = flow_shard_mesh(d_shard, d_data)
+        # gate 1: sharded register carry == batch flow table, bitwise
         _, sh_table = stream_sharded_flow_features(
             trace, n_buckets=n_buckets, window=window, mesh=mesh)
         np.testing.assert_array_equal(np.asarray(sh_table),
                                       np.asarray(batch_table))
-        srv = ShardedStreamingServer(art, backend, n_buckets=n_buckets,
-                                     window=window, threshold=threshold,
-                                     capacity=capacity, mesh=mesh)
-        # oracle 2 (+ warm pass: compile + fuse probe): sharded serving
-        # == single-device serving, bitwise
+        srv = ShardedStreamingServer(art, backend, mesh=mesh, **kw)
+        # gate 2 (+ warm pass: compile + fuse probe): partitioned sharded
+        # serving == single-device serving, bitwise
         sh_pred, _ = srv.serve_trace(trace)
         np.testing.assert_array_equal(np.asarray(sh_pred), ref_pred)
+        # gate 3 (tentpole): per-device classify rows are the padded
+        # per-slab ceiling, NOT the full window width
+        slab = lane_slab_rows(window, d_shard, d_data)
+        want_rows = classify_batch_rows(art, slab, use_pallas=srv.use_pallas,
+                                        tiles=shard_tiles(srv.tiles, slab))
+        got_rows = srv.classify_rows_per_device
+        if got_rows != want_rows:
+            raise AssertionError(
+                f"mesh ({d_shard},{d_data}): classify_rows_per_device "
+                f"{got_rows} != padded ceil(W/D) {want_rows}")
+        if d_shard * d_data > 1 and not got_rows < window:
+            raise AssertionError(
+                f"mesh ({d_shard},{d_data}): per-device classify rows "
+                f"{got_rows} did not shrink below the full window {window}")
 
-        best = float("inf")
-        for _ in range(repeats):
-            srv.reset()
-            t0 = time.perf_counter()
-            for w in ws:
-                pred, _ = srv.step(w)
-            jax.block_until_ready(pred)        # single end-of-stream sync
-            best = min(best, time.perf_counter() - t0)
+        best = _time_serve(srv, ws, repeats)
         stats = srv.stats
         pkts_s = trace.n_packets / best
+
+        # merge_overhead baseline: same mesh, replicated classify +
+        # owner-masked psum merge (the pre-partitioning layout)
+        base = ShardedStreamingServer(art, backend, mesh=mesh,
+                                      partition_classify=False, **kw)
+        base_pred, _ = base.serve_trace(trace)     # oracle + warm pass
+        np.testing.assert_array_equal(np.asarray(base_pred), ref_pred)
+        merge_best = _time_serve(base, ws, repeats)
+        merge_pkts_s = trace.n_packets / merge_best
+
         if base_pkts_s is None:
-            base_pkts_s = pkts_s
+            base_pkts_s = pkts_s                   # partitioned (1, 1)
         rows.append({
-            "devices": d,
+            "devices": d_shard * d_data,
+            "d_shard": d_shard,
+            "d_data": d_data,
             "window": window,
             "n_packets": trace.n_packets,
             "n_buckets": n_buckets,
+            "classify_rows_per_device": got_rows,
             "wall_s": round(best, 4),
             "pkts_per_s": round(pkts_s, 1),
             "speedup_vs_1dev": round(pkts_s / base_pkts_s, 3),
+            "merge_overhead_pkts_per_s": round(merge_pkts_s, 1),
+            "speedup_vs_merge_overhead": round(pkts_s / merge_pkts_s, 3),
             "fraction_handled": round(stats.fraction_handled, 4),
             "backend_rows": stats.total_backend_rows,
             "bit_consistent": True,
         })
 
-    print_table("Sharded streaming — packets/sec vs device count",
-                ["devices", "pkts", "wall_s", "pkts/s", "speedup",
-                 "frac_handled", "backend_rows"],
-                [[r["devices"], r["n_packets"], r["wall_s"],
+    print_table("Sharded streaming — packets/sec vs mesh shape",
+                ["mesh", "pkts", "rows/dev", "wall_s", "pkts/s",
+                 "vs_1dev", "vs_merge", "frac_handled"],
+                [[f"({r['d_shard']},{r['d_data']})", r["n_packets"],
+                  r["classify_rows_per_device"], r["wall_s"],
                   r["pkts_per_s"], r["speedup_vs_1dev"],
-                  r["fraction_handled"], r["backend_rows"]] for r in rows])
+                  r["speedup_vs_merge_overhead"], r["fraction_handled"]]
+                 for r in rows])
 
     # lifecycle entry: aging sweep on, telemetry recorded (not oracle-
     # gated against batch — eviction intentionally diverges the table)
-    d = device_counts[-1]
-    srv = ShardedStreamingServer(art, backend, n_buckets=n_buckets,
-                                 window=window, threshold=threshold,
-                                 capacity=capacity,
-                                 mesh=flow_shard_mesh(d),
-                                 evict_age=evict_age)
+    d_shard, d_data = mesh_shapes[-1]
+    srv = ShardedStreamingServer(art, backend,
+                                 mesh=flow_shard_mesh(d_shard, d_data),
+                                 evict_age=evict_age, **kw)
     t0 = time.perf_counter()
     _, stats = srv.serve_trace(trace)
     stats_wall = time.perf_counter() - t0
     evict_rows = [{
-        "devices": d, "evict_age_s": evict_age,
+        "devices": d_shard * d_data, "d_shard": d_shard, "d_data": d_data,
+        "classify_rows_per_device": srv.classify_rows_per_device,
+        "evict_age_s": evict_age,
         "n_packets": trace.n_packets, "wall_s": round(stats_wall, 4),
         "evicted": stats.n_evicted, "overflow": stats.n_overflow,
         "fraction_handled": round(stats.fraction_handled, 4),
     }]
     print_table("Sharded streaming — eviction/aging sweep",
-                ["devices", "evict_age_s", "evicted", "overflow",
+                ["mesh", "evict_age_s", "evicted", "overflow",
                  "frac_handled"],
-                [[r["devices"], r["evict_age_s"], r["evicted"],
-                  r["overflow"], r["fraction_handled"]]
+                [[f"({r['d_shard']},{r['d_data']})", r["evict_age_s"],
+                  r["evicted"], r["overflow"], r["fraction_handled"]]
                  for r in evict_rows])
 
     benches = [
@@ -148,7 +207,8 @@ def run(n_flows=4000, window=1024, n_buckets=1 << 13, device_counts=None,
         write_bench_json(out, "shard", benches,
                          config={"n_flows": n_flows, "window": window,
                                  "n_buckets": n_buckets,
-                                 "device_counts": list(device_counts),
+                                 "mesh_shapes": [list(s)
+                                                 for s in mesh_shapes],
                                  "threshold": threshold,
                                  "capacity": capacity, "repeats": repeats,
                                  "evict_age": evict_age})

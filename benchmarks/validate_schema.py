@@ -78,6 +78,15 @@ ANALYSIS_UTIL_KEYS = {
     "util_entries": (int, float),
     "util_tables": (int, float),
 }
+# suite "shard" (shard_stream_bench): every row carrying a device count
+# pins the 2D mesh shape and the partitioned-classify telemetry — the
+# scaling trajectory diffs on per-device classify rows shrinking with
+# the mesh, so a renamed/dropped field must fail here
+SHARD_ROW_KEYS = {
+    "d_shard": int,
+    "d_data": int,
+    "classify_rows_per_device": int,
+}
 # every emitter's suite tag — an unknown suite means a new emitter
 # forgot to register here (and in EXTRA_SUITES / DESIGN.md §11), or a
 # typo is about to fork the trajectory under a fresh name
@@ -141,6 +150,16 @@ def validate_bench_payload(payload, path="<payload>"):
                     continue
                 rwhere = f"{where}.rows[{j}]"
                 for key, types in keys.items():
+                    _require(key in row, rwhere, f"missing key {key!r}")
+                    _require(isinstance(row[key], types), rwhere,
+                             f"{key!r} must be {types}, "
+                             f"got {type(row[key]).__name__}")
+        if payload["suite"] == "shard" and isinstance(bench["rows"], list):
+            for j, row in enumerate(bench["rows"]):
+                if not (isinstance(row, dict) and "devices" in row):
+                    continue            # summary rows
+                rwhere = f"{where}.rows[{j}]"
+                for key, types in SHARD_ROW_KEYS.items():
                     _require(key in row, rwhere, f"missing key {key!r}")
                     _require(isinstance(row[key], types), rwhere,
                              f"{key!r} must be {types}, "

@@ -18,8 +18,12 @@ jitted closures, the contracts the code and DESIGN.md §5/§6/§8 claim:
   layout (f32 registers/conf, i32/bool control); any f64 promotion or
   stray wide integer fails.
 * **collectives** — the sharded steps contain *exactly* the promised
-  psum census (one rank>=2 "readout" psum per step/chunk, DESIGN.md
-  §6/§8) — no accidental extra merges.
+  collective census: the psum counts (one rank>=2 "readout" psum per
+  step/chunk, DESIGN.md §6/§8) plus the partitioned-classify lane-slab
+  merges (one rank>=2 reduce_scatter and two all_gathers per step,
+  DESIGN.md §16) — no accidental extra merges, and no silent fallback
+  to the replicated-classify layout (losing the scatter would change
+  the census too).
 
 Servers declare what to audit via ``AUDIT_CONTRACTS`` rows
 (attr/donate/probe/collectives); the auditor owns *how* to check.
@@ -95,6 +99,19 @@ def _audit_targets():
                                 capacity=p["capacity"],
                                 chunk_windows=p["chunk_windows"])),
     ]
+    if jax.device_count() >= 4:
+        # the census contracts are mesh-shape-invariant; audit the real
+        # 2D ('shard', 'data') layout whenever the host platform provides
+        # the devices (CI's 4-host-device step)
+        from repro.distributed.sharding import flow_shard_mesh
+        servers.append(
+            ("ShardedStreamingServer[2x2]",
+             ShardedStreamingServer(art, _traceable_backend,
+                                    mesh=flow_shard_mesh(2, 2),
+                                    n_buckets=p["n_buckets"],
+                                    window=p["window"],
+                                    capacity=p["capacity"],
+                                    chunk_windows=p["chunk_windows"])))
     w = probe_window(p["window"], p["n_buckets"], p["seed"])
     chunk = probe_chunk(p["window"], p["chunk_windows"], p["n_buckets"],
                         p["seed"])
@@ -215,6 +232,20 @@ def _readout_psum_count(jaxpr) -> int:
     return n
 
 
+def _readout_scatter_count(jaxpr) -> int:
+    """reduce_scatter equations whose outputs are rank >= 2 (the
+    partitioned classify's lane-slab merge — jax lowers psum_scatter to
+    the reduce_scatter primitive). Rank >= 2 distinguishes the (T, F)
+    feature-row scatter from any scalar/vector reduction that might
+    legitimately appear."""
+    n = 0
+    for eqn in JU.iter_eqns(jaxpr):
+        if JU._normalize(eqn.primitive.name) == "reduce_scatter":
+            if any(getattr(v.aval, "ndim", 0) >= 2 for v in eqn.outvars):
+                n += 1
+    return n
+
+
 def check_collectives() -> List[Finding]:
     out: List[Finding] = []
     for label in _target_labels():
@@ -238,6 +269,15 @@ def check_collectives() -> List[Finding]:
                     message=(f"{label}: {got} rank>=2 readout psums, "
                              f"contract promises exactly {want_readout} "
                              "(DESIGN.md §6/§8)")))
+        want_scatter = contract.get("readout_scatters")
+        if want_scatter is not None:
+            got = _readout_scatter_count(jaxpr)
+            if got != want_scatter:
+                out.append(Finding(
+                    rule="hotpath-collectives",
+                    message=(f"{label}: {got} rank>=2 lane-slab "
+                             f"reduce_scatters, contract promises exactly "
+                             f"{want_scatter} (DESIGN.md §16)")))
     return out
 
 
@@ -295,10 +335,13 @@ def _selftest_dtypes() -> List[Finding]:
 
 
 def _selftest_collectives() -> List[Finding]:
-    """Two psums where the contract promises one must be caught."""
+    """Seeded census violations must be caught: extra psums, extra
+    reduce_scatters (wrong count), and a rank-1 scatter masquerading as
+    the rank>=2 lane-slab merge (wrong rank)."""
     from jax.experimental.shard_map import shard_map
     from jax.sharding import Mesh, PartitionSpec as P
     mesh = Mesh(np.array(jax.devices()[:1]), ("shard",))
+    out: List[Finding] = []
 
     def chatty(x):
         return jax.lax.psum(jax.lax.psum(x, "shard"), "shard")
@@ -307,10 +350,40 @@ def _selftest_collectives() -> List[Finding]:
     jaxpr = JU.closed_jaxpr(fn, jnp.zeros((4, 4), jnp.float32))
     census = JU.collective_census(jaxpr)
     if census != {"psum": 1}:
-        return [Finding(rule="hotpath-collectives",
-                        message=f"selftest: census {census} != promised "
-                                "{'psum': 1}")]
-    return []
+        out.append(Finding(rule="hotpath-collectives",
+                           message=f"selftest: census {census} != promised "
+                                   "{'psum': 1}"))
+
+    # wrong count: two lane-slab scatters where the contract promises one
+    def double_scatter(x):
+        s = jax.lax.psum_scatter(x, "shard", scatter_dimension=0, tiled=True)
+        return jax.lax.psum_scatter(s, "shard", scatter_dimension=0,
+                                    tiled=True)
+    fn = jax.jit(shard_map(double_scatter, mesh=mesh, in_specs=(P(),),
+                           out_specs=P(), check_rep=False))
+    jaxpr = JU.closed_jaxpr(fn, jnp.zeros((4, 4), jnp.float32))
+    census = JU.collective_census(jaxpr)
+    if census.get("reduce_scatter") != 1:
+        out.append(Finding(
+            rule="hotpath-collectives",
+            message=(f"selftest: census {census} != promised "
+                     "{'reduce_scatter': 1}")))
+
+    # wrong rank: a rank-1 scatter is NOT the (T, F) lane-slab merge —
+    # _readout_scatter_count must refuse to count it toward the contract
+    def vector_scatter(x):
+        return jax.lax.psum_scatter(x, "shard", scatter_dimension=0,
+                                    tiled=True)
+    fn = jax.jit(shard_map(vector_scatter, mesh=mesh, in_specs=(P(),),
+                           out_specs=P(), check_rep=False))
+    jaxpr = JU.closed_jaxpr(fn, jnp.zeros((8,), jnp.float32))
+    got = _readout_scatter_count(jaxpr)
+    if got != 1:
+        out.append(Finding(
+            rule="hotpath-collectives",
+            message=(f"selftest: {got} rank>=2 lane-slab reduce_scatters, "
+                     "contract promises exactly 1")))
+    return out
 
 
 def register_rules() -> None:
@@ -327,6 +400,7 @@ def register_rules() -> None:
                       "register layout (no f64 promotion)",
                   check=check_dtypes, selftest=_selftest_dtypes))
     register(Rule(name="hotpath-collectives", section="hotpath",
-                  doc="sharded steps carry exactly the contracted psum "
-                      "census (one readout psum per chunk)",
+                  doc="sharded steps carry exactly the contracted "
+                      "collective census (one readout psum and one "
+                      "lane-slab reduce_scatter per step/chunk)",
                   check=check_collectives, selftest=_selftest_collectives))

@@ -176,17 +176,40 @@ def named_sharding_tree(mesh: Mesh, spec_tree):
 # flow-table shard mesh (streaming tier)
 # ---------------------------------------------------------------------------
 
-def flow_shard_mesh(n_shards: Optional[int] = None) -> Mesh:
-    """1D ('shard',) mesh for the sharded flow-table tier.
+def flow_shard_mesh(n_shards: Optional[int] = None,
+                    n_data: int = 1) -> Mesh:
+    """2D ('shard', 'data') mesh for the sharded flow-table tier.
 
-    Defaults to every local device — on a CPU host-platform run that is
-    whatever ``--xla_force_host_platform_device_count`` provided. The
-    flow-table axis is deliberately separate from the ('data','model')
-    training axes: bucket shards are storage partitions, not batch or
-    tensor parallelism.
+    'shard' partitions flow-table *buckets* (storage: each shard owns
+    bucket % n_shards == s); 'data' is pure batch parallelism over the
+    partitioned classify lanes and the backend slices — registers are
+    replicated along it (DESIGN.md §16). ``n_data=1`` (the default)
+    degenerates to the historical 1D behavior; ``n_shards`` defaults to
+    every local device not consumed by 'data' — on a CPU host-platform
+    run that is whatever ``--xla_force_host_platform_device_count``
+    provided. The flow-table axes are deliberately separate from the
+    ('data','model') training axes above: bucket shards are storage
+    partitions, not tensor parallelism.
     """
-    n = n_shards or jax.local_device_count()
-    return jax.make_mesh((n,), ("shard",))
+    n = n_shards or max(1, jax.local_device_count() // n_data)
+    return jax.make_mesh((n, n_data), ("shard", "data"))
+
+
+def as_flow_mesh(mesh: Mesh) -> Mesh:
+    """Normalize a flow-table mesh to the 2D ('shard', 'data') form.
+
+    A legacy 1D ('shard',) mesh gains a size-1 'data' axis (same
+    devices, same shard blocks), so every shard_map body can reference
+    both axes unconditionally; a 2D ('shard', 'data') mesh passes
+    through. Anything else is not a flow-table mesh.
+    """
+    if mesh.axis_names == ("shard", "data"):
+        return mesh
+    if mesh.axis_names == ("shard",):
+        return Mesh(mesh.devices.reshape(-1, 1), ("shard", "data"))
+    raise ValueError(
+        f"flow-table mesh must have axes ('shard',) or ('shard', 'data'), "
+        f"got {mesh.axis_names}")
 
 
 def flow_table_sharding(mesh: Mesh, state_tree):
@@ -195,7 +218,9 @@ def flow_table_sharding(mesh: Mesh, state_tree):
     Every leaf shards its leading (n_shards) dim over 'shard' and
     replicates the rest — registers are (n_shards, n_local), the epoch
     register is (n_shards,); both derive from ndim, so the rule survives
-    new registers being added to the state.
+    new registers being added to the state. On a 2D ('shard', 'data')
+    mesh the registers replicate along 'data' (the data axis parallelizes
+    classify lanes and backend slices, never storage).
     """
     spec = jax.tree.map(
         lambda a: P("shard", *([None] * (a.ndim - 1))), state_tree)

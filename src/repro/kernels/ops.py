@@ -33,7 +33,7 @@ from repro.kernels import evict as _ev
 from repro.kernels import classical_lookup as _ck
 from repro.kernels import ref as _ref
 from repro.kernels import stream_update as _su
-from repro.kernels.tuning import DEFAULT_TILES, TileConfig
+from repro.kernels.tuning import DEFAULT_TILES, TileConfig, padded_rows
 
 VMEM_BUDGET_BYTES = 8 * 1024 * 1024   # half of a v5e core's ~16MB VMEM
 
@@ -247,6 +247,27 @@ def _classical_epilogue(art: TableArtifact, out):
         top2 = jax.lax.top_k(-total, 2)[0]
         return pred, 1.0 - jnp.exp(top2[:, 1] - top2[:, 0])
     raise ValueError(art.agg)
+
+
+def classify_batch_rows(art: TableArtifact, n: int, *, use_pallas=None,
+                        tiles: TileConfig = None) -> int:
+    """Rows ``fused_classify`` actually processes for an n-row batch.
+
+    The fused/loop Pallas realizations pad the batch to their tile
+    granularity (``_pad_batch``); the XLA reference processes exactly n.
+    Mirrors the routing in ``fused_classify`` so callers reporting
+    per-device classify work (the shard bench's classify_rows_per_device
+    gate) count the kernel's real row count, not the logical one.
+    """
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    tiles = tiles or DEFAULT_TILES
+    impl = tiles.impl if (use_pallas and fits_vmem(art)) else "ref"
+    if impl == "fused":
+        return padded_rows(n, tiles.tile_n)
+    if impl == "loop":
+        return padded_rows(n, _ek.TILE_N)
+    return n
 
 
 def fused_classify(art: TableArtifact, x, *, use_pallas=None,

@@ -45,7 +45,34 @@ class TileConfig:
 
 DEFAULT_TILES = TileConfig()
 
+# Pallas-on-TPU sublane granularity for f32 (pallas_guide: min tile is
+# 8 x 128) — the floor any clamped batch tile must respect.
+MIN_TILE_N = 8
+
 _TILE_CACHE: dict = {}
+
+
+def padded_rows(n: int, tile: int) -> int:
+    """Rows a tile-granular kernel actually processes for an n-row batch
+    (``_pad_batch`` pads up to the next tile multiple)."""
+    return -(-n // tile) * tile
+
+
+def shard_tiles(tiles: TileConfig, batch: int) -> TileConfig:
+    """Clamp ``tile_n`` to a partitioned per-device batch.
+
+    The sharded classify hands each device a slab of ~K*W/D rows
+    (DESIGN.md §16); with the full-width ``tile_n`` the kernel grid
+    would pad that slab back up toward the unpartitioned batch and
+    erase the per-device work reduction. Clamping to the slab (rounded
+    up to the 8-row sublane floor) keeps padded work at
+    ceil(slab/8)*8 — within one sublane of the ideal ceil(K*W/D). Only
+    the fused realization tiles the batch; 'loop'/'ref' pass through.
+    """
+    if tiles.impl != "fused" or batch >= tiles.tile_n:
+        return tiles
+    return dataclasses.replace(
+        tiles, tile_n=max(MIN_TILE_N, padded_rows(batch, MIN_TILE_N)))
 
 
 def resolve_interpret(interpret: Optional[bool]) -> bool:

@@ -173,6 +173,49 @@ def shard_window_update(regs: FlowTableState, w: PacketWindow,
     return regs, epoch, own, x, n_ev, n_ov
 
 
+def lane_slab_rows(n_lanes: int, n_shards: int, n_data: int = 1) -> int:
+    """Static per-device lane tile: ceil(n_lanes / (n_shards * n_data)).
+
+    The partitioned classify (DESIGN.md §16) pads the lane axis to
+    ``T * n_shards * n_data`` rows so every device owns a fixed-shape
+    slab regardless of which shard the traffic actually hashed to —
+    ownership skew moves *values* between slabs, never shapes.
+    """
+    return -(-n_lanes // (n_shards * n_data))
+
+
+def scatter_lane_slab(x: jax.Array, n_shards: int, n_data: int) -> jax.Array:
+    """Owner-masked lane rows -> this device's complete lane slab.
+
+    Runs under shard_map on the ('shard', 'data') mesh. ``x`` is the
+    (N, F) per-shard readout with non-owned rows exactly zero, so the
+    reduce-scatter over 'shard' sums one real row plus zeros per lane —
+    complete rows, bit-identical to the owner's — and hands this shard
+    the contiguous block [s*N/D_s : (s+1)*N/D_s). The 'data' index then
+    slices that block into D_d equal slabs. Zero-padded tail lanes stay
+    zero and are dropped by ``gather_lane_values``'s [:N].
+    """
+    n = x.shape[0]
+    t = lane_slab_rows(n, n_shards, n_data)
+    pad = t * n_shards * n_data - n
+    if pad:
+        x = jnp.pad(x, ((0, pad),) + ((0, 0),) * (x.ndim - 1))
+    sl = jax.lax.psum_scatter(x, "shard", scatter_dimension=0, tiled=True)
+    d = jax.lax.axis_index("data")
+    return jax.lax.dynamic_slice_in_dim(sl, d * t, t)
+
+
+def gather_lane_values(v: jax.Array, n_lanes: int) -> jax.Array:
+    """Per-device slab results -> the replicated full lane vector.
+
+    The tiled all_gather over ('shard', 'data') concatenates slabs
+    shard-major / data-minor — exactly the order ``scatter_lane_slab``
+    dealt them — so row i of the result is lane i's value; [:n_lanes]
+    drops the even-division padding.
+    """
+    return jax.lax.all_gather(v, ("shard", "data"), tiled=True)[:n_lanes]
+
+
 def stream_epoch(state: ShardedFlowTable) -> jax.Array:
     """True observed stream start in the provisional rebased frame.
 

@@ -186,6 +186,32 @@ def test_validator_analysis_rows_require_utilization():
         validate_bench_payload(payload, "typed")
 
 
+def _shard_payload():
+    return {
+        "schema": "bench-v1", "suite": "shard", "generated_unix": 0.0,
+        "backend": "cpu", "config": {},
+        "benches": [{"name": "shard_stream", "paper_ref": "§5",
+                     "ok": True, "wall_s": 0.1,
+                     "rows": [{"devices": 4, "d_shard": 2, "d_data": 2,
+                               "classify_rows_per_device": 128,
+                               "pkts_per_s": 1000.0},
+                              {"note": "summary row, no device count"}]}],
+    }
+
+
+def test_validator_shard_rows_require_mesh_shape():
+    validate_bench_payload(_shard_payload(), "ok")     # summary row exempt
+    for strip in ("d_shard", "d_data", "classify_rows_per_device"):
+        payload = _shard_payload()
+        payload["benches"][0]["rows"][0].pop(strip)
+        with pytest.raises(SchemaError, match=strip):
+            validate_bench_payload(payload, "stripped")
+    payload = _shard_payload()
+    payload["benches"][0]["rows"][0]["classify_rows_per_device"] = 12.5
+    with pytest.raises(SchemaError, match="classify_rows_per_device"):
+        validate_bench_payload(payload, "typed")
+
+
 def _latency_payload():
     return {
         "schema": "bench-v1", "suite": "latency", "generated_unix": 0.0,

@@ -438,3 +438,149 @@ def test_sharded_server_epoch_min_merges(shard_setup):
     srv.serve_trace(tr, t0=t0_prov)
     expect = np.float32(np.float64(tr.ts.min()) - t0_prov)
     assert srv.epoch == pytest.approx(float(expect), abs=0.0)
+
+
+# ---------------------------------------------------------------------------
+# partitioned classify on the 2D ('shard', 'data') mesh (DESIGN.md §16)
+# ---------------------------------------------------------------------------
+
+# every 2D shape the local device count admits, the (2, 2) square first:
+# d_shard*d_data devices on a ('shard', 'data') mesh
+MESH_SHAPES = [(ds, dd) for ds, dd in
+               ((2, 2), (1, 2), (2, 1), (4, 1), (1, 4), (1, 1))
+               if ds * dd <= jax.device_count()]
+
+SERVE_KW = dict(n_buckets=N_BUCKETS, window=256, threshold=0.9, capacity=32)
+
+
+def _assert_matches_single_device(trace, art, backend, srv, ref=None, **kw):
+    """The D×data-parallel grid oracle: preds, flow table and the full
+    StreamStats accounting (flushes included) bit-match the single-device
+    StreamingHybridServer."""
+    if ref is None:
+        ref = StreamingHybridServer(art, backend, **kw)
+    p_ref, s_ref = ref.serve_trace(trace)
+    p, s = srv.serve_trace(trace)
+    np.testing.assert_array_equal(np.asarray(p), np.asarray(p_ref))
+    np.testing.assert_array_equal(np.asarray(srv.flow_table()),
+                                  np.asarray(ref.flow_table()))
+    assert s.n_packets == s_ref.n_packets
+    assert s.fraction_handled == s_ref.fraction_handled
+    assert s.total_backend_rows == s_ref.total_backend_rows
+    assert s.n_deferred == s_ref.n_deferred
+    assert s.n_flushes == s_ref.n_flushes
+    s.check()
+    return s
+
+
+@pytest.mark.parametrize("mesh_shape", MESH_SHAPES)
+def test_partitioned_classify_bit_identical_on_2d_mesh(shard_setup,
+                                                       mesh_shape):
+    """Tentpole oracle, per-window path: the lane-partitioned classify
+    (reduce-scattered per-device slabs + all-gathered compact pred/conf)
+    is bit-identical to the single-device tier at every mesh shape."""
+    from repro.distributed.sharding import flow_shard_mesh
+    trace, art, backend = shard_setup
+    ds, dd = mesh_shape
+    srv = ShardedStreamingServer(art, backend, mesh=flow_shard_mesh(ds, dd),
+                                 **SERVE_KW)
+    assert srv.partition_classify is True         # the default layout
+    _assert_matches_single_device(trace, art, backend, srv, **SERVE_KW)
+    assert srv._fused_ok is True
+
+
+@pytest.mark.parametrize("mesh_shape", MESH_SHAPES)
+def test_partitioned_chunked_classify_bit_identical_on_2d_mesh(shard_setup,
+                                                               mesh_shape):
+    """Tentpole oracle, chunk megastep: the chunk's K*W lanes partition
+    into ceil(K*W/D)-row slabs and still bit-match the single-device
+    chunked tier."""
+    from repro.distributed.sharding import flow_shard_mesh
+    trace, art, backend = shard_setup
+    ds, dd = mesh_shape
+    if (4 * SERVE_KW["capacity"]) % (ds * dd):
+        pytest.skip("chunk slots do not divide over this mesh")
+    srv = ShardedStreamingServer(art, backend, mesh=flow_shard_mesh(ds, dd),
+                                 chunk_windows=4, **SERVE_KW)
+    ref = StreamingHybridServer(art, backend, chunk_windows=4, **SERVE_KW)
+    _assert_matches_single_device(trace, art, backend, srv, ref=ref)
+
+
+@pytest.mark.parametrize("mesh_shape", MESH_SHAPES)
+def test_classify_rows_per_device_is_padded_ceiling(shard_setup, mesh_shape):
+    """Per-device classify work is the padded ceil(K*W/D) slab — NOT the
+    full lane width — for both the per-window and the chunked megastep;
+    the merge_overhead baseline keeps the full width."""
+    from repro.distributed.sharding import flow_shard_mesh
+    from repro.kernels.ops import classify_batch_rows
+    from repro.kernels.tuning import shard_tiles
+    from repro.netsim.shard_stream import lane_slab_rows
+    trace, art, backend = shard_setup
+    ds, dd = mesh_shape
+    mesh = flow_shard_mesh(ds, dd)
+    for k in (None, 4):
+        if k and (k * SERVE_KW["capacity"]) % (ds * dd):
+            continue
+        srv = ShardedStreamingServer(art, backend, mesh=mesh,
+                                     chunk_windows=k, **SERVE_KW)
+        lanes = (k or 1) * SERVE_KW["window"]
+        slab = lane_slab_rows(lanes, ds, dd)
+        want = classify_batch_rows(art, slab, use_pallas=srv.use_pallas,
+                                   tiles=shard_tiles(srv.tiles, slab))
+        assert srv.classify_rows_per_device == want
+        if ds * dd > 1:
+            assert srv.classify_rows_per_device < lanes
+        base = ShardedStreamingServer(art, backend, mesh=mesh,
+                                      chunk_windows=k,
+                                      partition_classify=False, **SERVE_KW)
+        assert base.classify_rows_per_device >= lanes
+
+
+def test_merge_overhead_baseline_bit_identical(shard_setup):
+    """partition_classify=False (the pre-partitioning replicated-classify
+    layout the bench labels merge_overhead) still bit-matches the
+    single-device tier — the flag switches layout, never values."""
+    from repro.distributed.sharding import flow_shard_mesh
+    trace, art, backend = shard_setup
+    ds = DEVICE_COUNTS[-1]
+    srv = ShardedStreamingServer(art, backend, mesh=flow_shard_mesh(ds, 1),
+                                 partition_classify=False, **SERVE_KW)
+    _assert_matches_single_device(trace, art, backend, srv, **SERVE_KW)
+
+
+def test_legacy_1d_mesh_normalizes(shard_setup):
+    """A caller-built 1D ('shard',) mesh keeps working: it normalizes to
+    ('shard', 'data') with a size-1 data axis, bit-identically."""
+    from jax.sharding import Mesh
+    trace, art, backend = shard_setup
+    d = DEVICE_COUNTS[-1]
+    legacy = Mesh(np.array(jax.devices()[:d]), ("shard",))
+    srv = ShardedStreamingServer(art, backend, mesh=legacy, **SERVE_KW)
+    assert srv.mesh.axis_names == ("shard", "data")
+    assert srv.n_shards == d and srv.n_data == 1
+    _assert_matches_single_device(trace, art, backend, srv, **SERVE_KW)
+
+
+def test_collision_storm_uneven_ownership_never_drops_rows(shard_setup):
+    """Uneven-ownership stress: a collision_storm trace concentrates
+    nearly all touched buckets on whichever shards own the few target
+    buckets. The static per-shard lane tile must never drop rows — lanes
+    past dispatch capacity route to deferral and the StreamStats
+    accounting invariant (handled + backend_rows + deferred + degraded
+    == packets) still closes, bit-identically to single-device."""
+    from repro.distributed.sharding import flow_shard_mesh
+    from repro.netsim.scenarios import collision_storm
+    _, art, backend = shard_setup
+    # n_buckets must match the serving table: the storm targets buckets
+    # of the SAME hash the servers use
+    storm = collision_storm(n_background=150, n_attack=800,
+                            n_buckets=N_BUCKETS, n_target_buckets=2,
+                            pkts_per_attack=2, seed=0)
+    kw = dict(n_buckets=N_BUCKETS, window=256, threshold=0.9, capacity=4)
+    ds = DEVICE_COUNTS[-1]
+    srv = ShardedStreamingServer(art, backend, mesh=flow_shard_mesh(ds, 1),
+                                 **kw)
+    s = _assert_matches_single_device(storm, art, backend, srv, **kw)
+    # capacity=4 under a storm of colliding low-confidence lanes: the
+    # dispatch overflow is real, and every overflowed lane is accounted
+    assert s.n_deferred > 0
